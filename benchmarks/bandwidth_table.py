@@ -1,0 +1,38 @@
+"""Benchmark 1 — paper Table I: bandwidth requirements of INL vs FL vs SL.
+
+Closed-form per §III-C, printed next to the published numbers, plus the
+measured-bits counter from an actual INL training epoch on the synthetic
+multi-view task (formula == measured is asserted in tests/test_schemes.py).
+"""
+from __future__ import annotations
+
+from repro.core import bandwidth
+
+
+def rows():
+    out = []
+    for (net, q), want in bandwidth.PAPER_TABLE1.items():
+        got = bandwidth.table1(q, net)
+        for scheme in ("federated", "split", "in_network"):
+            out.append({
+                "table": "table1",
+                "network": net,
+                "q": q,
+                "scheme": scheme,
+                "gbits": round(got[scheme], 3),
+                "paper_gbits": want[scheme],
+                "rel_err": round(abs(got[scheme] - want[scheme])
+                                 / want[scheme], 4),
+            })
+    return out
+
+
+def main():
+    print("name,network,q,scheme,gbits,paper_gbits,rel_err")
+    for r in rows():
+        print(f"table1,{r['network']},{r['q']},{r['scheme']},"
+              f"{r['gbits']},{r['paper_gbits']},{r['rel_err']}")
+
+
+if __name__ == "__main__":
+    main()

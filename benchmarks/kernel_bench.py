@@ -1,0 +1,83 @@
+"""Benchmark 3 — kernel micro-benchmarks.
+
+On this CPU container the timed implementations are the compiled jnp
+formulations (what actually executes here); the Pallas kernels are the TPU
+target and are validated (not timed) in interpret mode.  us_per_call is
+wall-clock over N repetitions after a warmup call.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.models.attention import blockwise_attention
+from repro.models.ssm import _ssd_chunked
+
+
+def _time(fn, *args, reps=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def rows():
+    key = jax.random.PRNGKey(0)
+    out = []
+
+    # flash-style attention vs naive reference, 2k context
+    B, S, H, KV, Dh = 1, 2048, 8, 2, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, Dh), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KV, Dh), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, Dh), jnp.float32)
+    fa = jax.jit(lambda q, k, v: blockwise_attention(q, k, v, causal=True))
+    na = jax.jit(lambda q, k, v: ref.attention_ref(q, k, v, causal=True))
+    t_f, t_n = _time(fa, q, k, v), _time(na, q, k, v)
+    flops = 4 * B * H * S * S * Dh / 2
+    out.append(("attention_blockwise_2k", t_f, f"{flops/t_f/1e3:.1f}GFLOPs"))
+    out.append(("attention_naive_2k", t_n, f"{flops/t_n/1e3:.1f}GFLOPs"))
+
+    # chunked SSD vs sequential scan, 4k sequence
+    B, S, Hh, P, N = 1, 4096, 4, 64, 64
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (B, S, Hh, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, Hh)))
+    a = -jnp.exp(jax.random.normal(ks[2], (Hh,)) * 0.2)
+    bm = jax.random.normal(ks[3], (B, S, N))
+    cm = jax.random.normal(ks[4], (B, S, N))
+    d = jnp.ones((Hh,))
+    ch = jax.jit(lambda *t: _ssd_chunked(*t, 128)[0])
+    sq = jax.jit(ref.ssd_scan_ref)
+    t_c = _time(ch, x, dt, a, bm, cm, d)
+    t_s = _time(sq, x, dt, a, bm, cm, d)
+    out.append(("ssd_chunked_4k", t_c, f"speedup_vs_seq={t_s/t_c:.1f}x"))
+    out.append(("ssd_sequential_4k", t_s, ""))
+
+    # fused bottleneck vs unfused ops
+    T, d_b = 8192, 256
+    ks = jax.random.split(key, 3)
+    mu = jax.random.normal(ks[0], (T, d_b))
+    lv = jax.random.normal(ks[1], (T, d_b)) * 0.3
+    eps = jax.random.normal(ks[2], (T, d_b))
+    fused = jax.jit(ref.bottleneck_ref)           # XLA fuses the jnp form
+    t_b = _time(fused, mu, lv, eps)
+    bytes_ = 3 * T * d_b * 4
+    out.append(("inl_bottleneck_8k", t_b, f"{bytes_/t_b/1e3:.1f}GB/s"))
+    return out
+
+
+def main():
+    print("name,us_per_call,derived")
+    for name, us, derived in rows():
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Benchmark 4 — roofline table from the dry-run artifacts.
+
+Reads experiments/dryrun/*.json (produced by repro.launch.dryrun) and emits
+the per-(arch x shape x mesh) three-term roofline rows; also usable as a
+markdown generator for EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def load(dirname=None):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dirname or DRYRUN_DIR,
+                                              "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def rows(dirname=None):
+    out = []
+    for r in load(dirname):
+        if "roofline" not in r and r.get("status") != "fail":
+            continue            # INL-mode records: reported in §Perf instead
+        if r.get("status") != "ok":
+            out.append({"arch": r.get("arch", "?"),
+                        "shape": r.get("shape", "inl"),
+                        "mesh": r.get("mesh", "inl"), "status": "FAIL",
+                        "error": r.get("error", "")[:80]})
+            continue
+        rf = r["roofline"]
+        out.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "status": "ok",
+            "compute_s": rf["compute_s"], "memory_s": rf["memory_s"],
+            "collective_s": rf["collective_s"], "dominant": rf["dominant"],
+            "model_flops": rf["model_flops"], "hlo_flops": rf["hlo_flops"],
+            "useful_ratio": rf["useful_flop_ratio"],
+            "mem_gb": r["memory"]["per_device_bytes"] / 1e9,
+            "fits": r["memory"]["fits_hbm"],
+            "compile_s": r.get("compile_s"),
+        })
+    return out
+
+
+def markdown(dirname=None):
+    lines = [
+        "| arch | shape | mesh | compute (s) | memory (s) | collective (s) "
+        "| dominant | 6ND/HLO | mem GB/dev | fits |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows(dirname):
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"FAIL: {r['error']} ||||||||")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | **{r['dominant']}** "
+            f"| {r['useful_ratio']:.2f} | {r['mem_gb']:.2f} "
+            f"| {'yes' if r['fits'] else 'NO'} |")
+    return "\n".join(lines)
+
+
+def main():
+    print("name,arch,shape,mesh,compute_s,memory_s,collective_s,dominant,"
+          "useful_ratio,mem_gb_per_dev,fits")
+    for r in rows():
+        if r["status"] != "ok":
+            print(f"roofline,{r['arch']},{r['shape']},{r['mesh']},,,,FAIL,,,")
+            continue
+        print(f"roofline,{r['arch']},{r['shape']},{r['mesh']},"
+              f"{r['compute_s']:.4e},{r['memory_s']:.4e},"
+              f"{r['collective_s']:.4e},{r['dominant']},"
+              f"{r['useful_ratio']:.3f},{r['mem_gb']:.2f},{r['fits']}")
+
+
+if __name__ == "__main__":
+    main()

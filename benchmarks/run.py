@@ -1,0 +1,46 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV
+# sections (see each module for details):
+#   table1    bandwidth_table    paper Table I closed-form vs published
+#   fig5/7    accuracy_curves    accuracy-vs-epoch / accuracy-vs-bandwidth
+#   kernels   kernel_bench       hot-spot micro-benchmarks
+#   roofline  roofline_report    dry-run three-term roofline rows
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma list: table1,curves,kernels,roofline")
+    ap.add_argument("--epochs", type=int, default=3,
+                    help="epochs for the accuracy curves (CPU-sized)")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name):
+        return only is None or name in only
+
+    t0 = time.time()
+    if want("table1"):
+        from benchmarks import bandwidth_table
+        bandwidth_table.main()
+        sys.stdout.flush()
+    if want("kernels"):
+        from benchmarks import kernel_bench
+        kernel_bench.main()
+        sys.stdout.flush()
+    if want("curves"):
+        from benchmarks import accuracy_curves
+        accuracy_curves.main(experiment=2, epochs=args.epochs)
+        sys.stdout.flush()
+    if want("roofline"):
+        from benchmarks import roofline_report
+        roofline_report.main()
+    print(f"# benchmarks done in {time.time()-t0:.1f}s")
+
+
+if __name__ == '__main__':
+    main()

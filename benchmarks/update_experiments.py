@@ -1,0 +1,32 @@
+"""Regenerate the §Roofline table inside EXPERIMENTS.md from the dry-run
+artifacts.  Idempotent: replaces the block between the ROOFLINE markers."""
+from __future__ import annotations
+
+import re
+import sys
+
+from benchmarks import roofline_report
+
+BEGIN = "<!-- ROOFLINE-TABLE-BEGIN -->"
+END = "<!-- ROOFLINE-TABLE-END -->"
+
+
+def main(path: str = "EXPERIMENTS.md"):
+    table = roofline_report.markdown()
+    with open(path) as f:
+        text = f.read()
+    block = f"{BEGIN}\n{table}\n{END}"
+    if BEGIN in text:
+        text = re.sub(re.escape(BEGIN) + r".*?" + re.escape(END), block,
+                      text, flags=re.S)
+    else:
+        text = text.replace(
+            "## §Roofline\n",
+            "## §Roofline\n\n" + block + "\n", 1)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"updated {path} with {len(table.splitlines()) - 2} rows")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

@@ -1,0 +1,53 @@
+"""Quickstart: the paper's in-network learning on the multi-view task.
+
+Five edge nodes each observe a differently-noised view of the same image;
+each runs its own conv encoder and ships only a 16-dim stochastic bottleneck
+latent to the central node, which fuses them and classifies.  Training
+optimises eq. (6) end-to-end; only activations/error vectors ever cross the
+links.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.configs.paper_inl import SMOKE as CFG
+from repro.core import inl
+from repro.data import multiview
+
+
+def main():
+    imgs, labels = multiview.make_base_dataset(512, seed=0)
+    views = multiview.make_views(imgs, CFG.noise_stds)      # (J, n, 32,32,3)
+    print(f"J={CFG.num_clients} nodes, views {views.shape}, "
+          f"bottleneck {CFG.d_bottleneck}-d per node")
+
+    params, state = inl.init(CFG, jax.random.PRNGKey(0))
+    opt = optim.adam(2e-3)
+    opt_state = opt.init(params)
+    step = inl.make_train_step(CFG, opt)
+    rng = jax.random.PRNGKey(1)
+
+    bits = 0.0
+    for epoch in range(4):
+        for v, l in multiview.multiview_batches(views, labels, 64,
+                                                seed=epoch):
+            rng, sub = jax.random.split(rng)
+            params, state, opt_state, m = step(
+                params, state, opt_state, jnp.asarray(v), jnp.asarray(l),
+                sub)
+            bits += float(m["bits_sent"])
+        acc = inl.evaluate(params, state, jnp.asarray(views),
+                           jnp.asarray(labels))
+        print(f"epoch {epoch}: loss={float(m['loss']):.3f} "
+              f"acc={float(acc):.3f} rate={float(m['rate_mean']):.2f} nats "
+              f"bandwidth={bits/1e6:.2f} Mbit")
+
+    probs = inl.predict(params, state, jnp.asarray(views[:, :4]))
+    print("soft predictions (first 4):", jnp.round(probs.max(-1), 3),
+          "labels:", labels[:4])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""End-to-end driver (deliverable b): train a ~100M-parameter model for a
+few hundred steps on the synthetic token stream and show the loss dropping,
+with checkpointing.
+
+Default is a dense ~100M llama-family config (CPU-friendly matmuls; the
+assigned archs are selectable with --arch, e.g. --arch xlstm-125m trains
+the full 125M xLSTM, which is exact-recurrence-heavy and much slower on a
+1-core CPU).
+
+    PYTHONPATH=src python examples/train_llm.py [--steps 250] [--seq 64]
+"""
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import checkpoint, optim
+from repro.configs import get_config
+from repro.configs.base import INLConfig, ModelConfig
+from repro.data import tokens as token_data
+from repro.launch import steps as steps_lib
+from repro.models import zoo
+
+# ~100M params, FFN-heavy with a small vocab so a few hundred CPU steps see
+# enough visits per token for the loss to drop visibly.
+DENSE_100M = ModelConfig(
+    name="dense-100m", family="dense", num_layers=6, d_model=1024,
+    num_heads=8, num_kv_heads=8, d_ff=4096, vocab_size=2048,
+    tie_embeddings=True, dtype="float32",
+    inl=INLConfig(num_nodes=2, d_bottleneck=512))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=250)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--arch", default="dense-100m")
+    args = ap.parse_args()
+
+    cfg = DENSE_100M if args.arch == "dense-100m" else get_config(args.arch)
+    params = zoo.init_params(cfg, jax.random.PRNGKey(0))
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n:,}")
+
+    opt = optim.adamw(optim.warmup_cosine_schedule(
+        1e-3, args.steps // 10 + 1, args.steps), weight_decay=0.1,
+        clip_norm=1.0)
+    opt_state = opt.init(params)
+    step = jax.jit(steps_lib.make_train_step(cfg, opt))
+
+    t0 = time.time()
+    history = []
+    for i, batch in enumerate(token_data.lm_batches(
+            cfg, args.batch, args.seq, steps=args.steps)):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt_state, m = step(params, opt_state, batch)
+        if i % 25 == 0 or i == args.steps - 1:
+            rec = {"step": i, "ce": round(float(m["ce"]), 4),
+                   "wall_s": round(time.time() - t0, 1)}
+            history.append(rec)
+            print(json.dumps(rec), flush=True)
+        if i and i % 100 == 0:
+            checkpoint.save("ckpts/train_llm", i, params,
+                            extra={"arch": cfg.name})
+    checkpoint.save("ckpts/train_llm", args.steps, params,
+                    extra={"arch": cfg.name})
+    drop = history[0]["ce"] - history[-1]["ce"]
+    print(f"CE dropped by {drop:.3f} nats over {args.steps} steps "
+          f"({'OK' if drop > 0.1 else 'insufficient — increase steps'})")
+
+
+if __name__ == "__main__":
+    main()

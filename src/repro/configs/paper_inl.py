@@ -1,0 +1,37 @@
+"""The paper's own experiment setup (§IV): CIFAR-10, J=5 clients observing
+Gaussian-noise-corrupted views (sigma = 0.4, 1, 2, 3, 4), VGG-style conv
+encoders per client, two dense layers at node J+1.
+
+This is not one of the 10 assigned LLM architectures — it is the faithful
+reproduction target for Figures 5/7 and Table I, driven by repro.core.inl
+with the conv model in repro.core.paper_model.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Tuple
+
+
+@dataclass(frozen=True)
+class PaperExperimentConfig:
+    num_clients: int = 5                         # J
+    noise_stds: Tuple[float, ...] = (0.4, 1.0, 2.0, 3.0, 4.0)
+    num_classes: int = 10
+    image_shape: Tuple[int, int, int] = (32, 32, 3)
+    # VGG-style encoder at each client (Fig. 4 "Conv" column, reduced widths
+    # are configurable for CPU-sized runs)
+    conv_channels: Tuple[int, ...] = (32, 64, 128)
+    d_bottleneck: int = 64                       # u_j width -> p = J * 64
+    # node (J+1): two dense layers (Fig. 4)
+    dense_units: Tuple[int, ...] = (512, 256)
+    s: float = 1e-2                              # eq. (6) Lagrange multiplier
+    link_bits: int = 32                          # bits per activation value
+    # experiment 1 partitions data per scheme; experiment 2 shares it
+    experiment: int = 1
+    dataset_size: int = 50_000
+    seed: int = 0
+
+
+SMOKE = PaperExperimentConfig(
+    conv_channels=(8, 16), d_bottleneck=16, dense_units=(64,),
+    dataset_size=512)

@@ -1,0 +1,6 @@
+# The paper's primary contribution: in-network learning (INL) — distributed
+# variational-information-bottleneck inference/training over edge nodes —
+# plus its published baselines (federated + split learning) and the
+# bandwidth/link substrate they are compared on.
+from repro.core import (bandwidth, bottleneck, fl, inl, inl_llm,  # noqa
+                        linkmodel, losses, paper_model, sl)

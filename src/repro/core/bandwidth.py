@@ -1,0 +1,72 @@
+"""Bandwidth accounting — §III-C / Table I, exactly as published.
+
+    INL:  2 p q s / J        per epoch (activations fwd + errors bwd; each of
+                             the J nodes holds q/J points and sends p/J values)
+    FL:   2 N J s            per round (full weights down + up, J clients)
+    SL:   (2 p q + eta N J) s  per epoch (cut activations for all q points +
+                             J sequential weight hand-offs of eta*N params)
+
+Table I constants: VGG16 N=138,344,128; ResNet50 N=25,636,712; J=500;
+p=25088; eta=0.11 (VGG16) / 0.88 (ResNet50); s=32 bits.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+GBIT = 1e9
+
+VGG16_PARAMS = 138_344_128
+RESNET50_PARAMS = 25_636_712
+TABLE1_J = 500
+TABLE1_P = 25_088
+TABLE1_ETA = {"vgg16": 0.11, "resnet50": 0.88}
+TABLE1_BITS = 32
+
+
+def inl_epoch_bits(p: int, q: int, J: int, s: int = TABLE1_BITS) -> float:
+    return 2.0 * p * q * s / J
+
+
+def fl_round_bits(N: int, J: int, s: int = TABLE1_BITS) -> float:
+    return 2.0 * N * J * s
+
+
+def sl_epoch_bits(p: int, q: int, N: int, J: int, eta: float,
+                  s: int = TABLE1_BITS) -> float:
+    return (2.0 * p * q + eta * N * J) * s
+
+
+def table1(q: int, network: str) -> Dict[str, float]:
+    """Reproduce one row of Table I (values in Gbits)."""
+    N = VGG16_PARAMS if network == "vgg16" else RESNET50_PARAMS
+    eta = TABLE1_ETA[network]
+    return {
+        "federated": fl_round_bits(N, TABLE1_J) / GBIT,
+        "split": sl_epoch_bits(TABLE1_P, q, N, TABLE1_J, eta) / GBIT,
+        "in_network": inl_epoch_bits(TABLE1_P, q, TABLE1_J) / GBIT,
+    }
+
+
+# Published Table I values (Gbits) for validation in tests/benchmarks.
+PAPER_TABLE1 = {
+    ("vgg16", 50_000): {"federated": 4427, "split": 324, "in_network": 0.16},
+    ("resnet50", 50_000): {"federated": 820, "split": 441, "in_network": 0.16},
+    ("vgg16", 500_000): {"federated": 4427, "split": 1046, "in_network": 1.6},
+    ("resnet50", 500_000): {"federated": 820, "split": 1164,
+                            "in_network": 1.6},
+}
+
+
+@dataclass
+class BandwidthMeter:
+    """Accumulates actual bits moved during a run (measured counterpart of
+    the closed-form Table I numbers)."""
+    total_bits: float = 0.0
+
+    def add(self, bits: float) -> None:
+        self.total_bits += float(bits)
+
+    @property
+    def gbits(self) -> float:
+        return self.total_bits / GBIT

@@ -1,0 +1,95 @@
+"""Federated learning (FedAvg, McMahan et al. 2017) — the paper's baseline.
+
+Every client holds a copy of the ENTIRE Fig.-4 network and trains on its
+local shard (Exp-1: disjoint images, all J views of an image at one client;
+Exp-2: all images, client-specific noise).  After `local_steps` minibatch
+updates the server averages the weights and re-broadcasts.
+
+Clients run in parallel via vmap over a stacked (J, ...) param tree — on a
+mesh this vmap axis is sharded over 'client'.  Bandwidth per round:
+2 * N * J * s bits (weights down + weights up, §III-C Table I).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import losses, paper_model
+
+
+def init(cfg, key):
+    """Stacked client copies of the full model (identical init = broadcast)."""
+    params, state = paper_model.fl_model_init(key, cfg)
+    J = cfg.num_clients
+    stack = lambda t: jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (J,) + x.shape).copy(), t)
+    return stack(params), stack(state)
+
+
+def client_loss(params, state, views, labels, rng, *, train=True):
+    """views: (J,B,H,W,C) — all J views of this client's images."""
+    logits, new_state = paper_model.fl_model_apply(params, state, views,
+                                                   train=train, rng=rng)
+    loss = losses.xent(logits, labels)
+    acc = losses.accuracy(logits, labels)
+    return loss, ({"loss": loss, "accuracy": acc}, new_state)
+
+
+def make_local_step(optimizer):
+    def local_step(params, state, opt_state, views, labels, rng):
+        (loss, (metrics, new_state)), grads = jax.value_and_grad(
+            client_loss, has_aux=True)(params, state, views, labels, rng)
+        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        return new_params, new_state, new_opt, metrics
+    return local_step
+
+
+def make_round(cfg, optimizer, local_steps: int):
+    """One FedAvg round, jitted: local_steps on all J clients in parallel,
+    then weight averaging.  client_data: (J, local_steps, B, J, H*W*C-shaped
+    views...) — see examples/compare_schemes.py for the packing helper."""
+    local_step = make_local_step(optimizer)
+
+    def one_client(params, state, opt_state, views_seq, labels_seq, rng):
+        def body(carry, inp):
+            p, s, o, r = carry
+            v, l = inp
+            r, sub = jax.random.split(r)
+            p, s, o, m = local_step(p, s, o, v, l, sub)
+            return (p, s, o, r), m
+        (p, s, o, _), ms = jax.lax.scan(
+            body, (params, state, opt_state, rng), (views_seq, labels_seq))
+        return p, s, o, jax.tree.map(jnp.mean, ms)
+
+    @jax.jit
+    def round_fn(stacked_params, stacked_state, stacked_opt, views, labels,
+                 rngs):
+        """views: (J, local_steps, J, B, H, W, C); labels: (J, local_steps, B)."""
+        p, s, o, m = jax.vmap(one_client)(stacked_params, stacked_state,
+                                          stacked_opt, views, labels, rngs)
+        # ---- server aggregation: plain parameter average, re-broadcast
+        avg = jax.tree.map(lambda x: jnp.mean(x, axis=0), p)
+        J = labels.shape[0]
+        p_new = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (J,) + x.shape).copy(), avg)
+        return p_new, s, o, jax.tree.map(jnp.mean, m)
+    return round_fn
+
+
+def round_bits(cfg, num_params: int, bits: int = 32) -> int:
+    """Table I: 2 N J s bits per round (download + upload of all weights)."""
+    return 2 * num_params * cfg.num_clients * bits
+
+
+def predict(stacked_params, stacked_state, images, *, exp2_average=False):
+    """FL inference is CENTRAL: one aggregated model on one input image.
+    For Exp-2 the paper feeds the average-quality image; views are broadcast
+    to all J branch inputs of the Fig.-4 network."""
+    params = jax.tree.map(lambda x: x[0], stacked_params)
+    state = jax.tree.map(lambda x: x[0], stacked_state)
+    J = len(params["encoders"])
+    views = jnp.broadcast_to(images, (J,) + images.shape)
+    logits, _ = paper_model.fl_model_apply(params, state, views, train=False)
+    return jax.nn.softmax(logits, axis=-1)

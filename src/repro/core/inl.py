@@ -1,0 +1,150 @@
+"""In-network learning (INL) — the paper's architecture (§III).
+
+J edge nodes encode their local views into stochastic bottleneck latents u_j;
+node (J+1) concatenates them (eq. 5) and decodes.  Training optimises eq. (6)
+end-to-end: JAX AD through the concatenation reproduces exactly the paper's
+error-vector split (eq. 8c / Remark 2) — node j receives only its chunk
+delta[j] of the decoder-input cotangent, plus the local gradient of its own
+rate term (eq. 10).  tests/test_inl_grads.py verifies the hand-derived split
+against AD.
+
+Encoder parameters are STACKED along a leading J axis so the whole system
+shards over a 'client' mesh axis (each client's encoder params + data live on
+its own devices; only u_j / delta_j cross the boundary — the paper's
+bandwidth story).  A heterogeneous (list-of-different-encoders) path is also
+provided, since the paper allows per-node architectures to differ.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bottleneck, linkmodel, losses, paper_model
+
+
+class INLParams(NamedTuple):
+    encoders: dict          # stacked: leading axis J
+    decoder: dict
+    priors: dict            # {} when standard-normal
+
+
+def init(cfg, key):
+    """cfg: PaperExperimentConfig.  Returns (INLParams, state)."""
+    J = cfg.num_clients
+    ks = jax.random.split(key, 3)
+    enc_keys = jax.random.split(ks[0], J)
+    stacked = jax.vmap(lambda k: paper_model.encoder_init(k, cfg))(enc_keys)
+    enc_params, enc_state = stacked
+    dec = paper_model.decoder_init(ks[1], cfg)
+    return (INLParams(enc_params, dec, {}), {"encoders": enc_state})
+
+
+def encode(params: INLParams, state, views, *, train: bool, rng=None,
+           link_bits: int = 32, sample_latent: bool = True):
+    """views: (J,B,H,W,C) -> (u (J,B,d), mu, logvar, new_state).
+
+    This is everything that runs AT THE EDGE.  u is what crosses the links
+    (quantized to link_bits)."""
+    (mu, logvar), new_state = jax.vmap(
+        lambda p, s, v: paper_model.encoder_apply(p, s, v, train=train)
+    )(params.encoders, state["encoders"], views)
+    if sample_latent and rng is not None:
+        eps_keys = jax.random.split(rng, mu.shape[0])
+        u = jax.vmap(bottleneck.sample)(eps_keys, mu, logvar)
+    else:
+        u = mu
+    u_sent = linkmodel.quantize_st(u, link_bits)
+    return u_sent, mu, logvar, {"encoders": new_state}
+
+
+def decode(params: INLParams, u, *, train: bool, rng=None):
+    """Node (J+1): u (J,B,d) -> (joint_logits, branch_logits (J,B,C))."""
+    J, B, d = u.shape
+    u_cat = jnp.moveaxis(u, 0, 1).reshape(B, J * d)       # eq. (5) concat
+    joint = paper_model.decoder_apply(params.decoder, u_cat, train=train,
+                                      rng=rng)
+    branch = paper_model.branch_heads_apply(params.decoder, u)
+    return joint, branch
+
+
+def loss_fn(params: INLParams, state, views, labels, rng, cfg, *,
+            train: bool = True, rate_estimator: str = "sample"):
+    """Full eq.-(6) loss.  Returns (loss, (metrics, new_state))."""
+    r_enc, r_dec = jax.random.split(rng)
+    u, mu, logvar, new_state = encode(params, state, views, train=train,
+                                      rng=r_enc, link_bits=cfg.link_bits)
+    joint, branch = decode(params, u, train=train, rng=r_dec)
+    J = u.shape[0]
+    loss, metrics = losses.inl_loss(
+        joint, list(branch), labels,
+        list(mu), list(logvar), list(u),
+        s=cfg.s, rate_estimator=rate_estimator)
+    metrics["accuracy"] = losses.accuracy(joint, labels)
+    # §III-C accounting: activations forward + error vectors backward
+    p_total = J * cfg.d_bottleneck
+    metrics["bits_sent"] = jnp.asarray(
+        linkmodel.training_step_bits(labels.shape[0], p_total, cfg.link_bits),
+        jnp.float32)
+    return loss, (metrics, new_state)
+
+
+def make_train_step(cfg, optimizer, *, rate_estimator: str = "sample"):
+    """jit-able train step closed over the experiment config + optimizer."""
+    @jax.jit
+    def step(params, state, opt_state, views, labels, rng):
+        (loss, (metrics, new_state)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, state, views, labels, rng, cfg,
+                                   train=True, rate_estimator=rate_estimator)
+        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        return new_params, new_state, new_opt, metrics
+    return step
+
+
+def predict(params: INLParams, state, views):
+    """Inference phase (§III-B): deterministic latents (u = mu), soft output."""
+    u, _, _, _ = encode(params, state, views, train=False,
+                        sample_latent=False)
+    joint, _ = decode(params, u, train=False)
+    return jax.nn.softmax(joint, axis=-1)
+
+
+def evaluate(params: INLParams, state, views, labels):
+    probs = predict(params, state, views)
+    return losses.accuracy(jnp.log(probs + 1e-30), labels)
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous-encoder variant (paper: NNs "need not be identical")
+# ---------------------------------------------------------------------------
+
+def init_heterogeneous(cfgs, key):
+    """One (possibly different) PaperExperimentConfig per client; returns
+    list-based params usable with loss_fn_heterogeneous."""
+    ks = jax.random.split(key, len(cfgs) + 1)
+    encs = [paper_model.encoder_init(ks[j], c) for j, c in enumerate(cfgs)]
+    dec = paper_model.decoder_init(ks[-1], cfgs[0])
+    params = {"encoders": [e[0] for e in encs], "decoder": dec}
+    state = {"encoders": [e[1] for e in encs]}
+    return params, state
+
+
+def loss_fn_heterogeneous(params, state, views, labels, rng, cfg, *,
+                          train: bool = True):
+    us, mus, lvs, new_states = [], [], [], []
+    for j, (ep, es) in enumerate(zip(params["encoders"], state["encoders"])):
+        (mu, lv), ns = paper_model.encoder_apply(ep, es, views[j], train=train)
+        rng, sub = jax.random.split(rng)
+        u = linkmodel.quantize_st(bottleneck.sample(sub, mu, lv),
+                                  cfg.link_bits)
+        us.append(u); mus.append(mu); lvs.append(lv); new_states.append(ns)
+    u = jnp.stack(us)
+    fake = INLParams(None, params["decoder"], {})
+    rng, sub = jax.random.split(rng)
+    joint, branch = decode(fake, u, train=train, rng=sub)
+    loss, metrics = losses.inl_loss(joint, list(branch), labels, mus, lvs, us,
+                                    s=cfg.s)
+    metrics["accuracy"] = losses.accuracy(joint, labels)
+    return loss, (metrics, {"encoders": new_states})

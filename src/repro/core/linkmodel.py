@@ -1,0 +1,126 @@
+"""Finite-capacity link simulation (the wireless substrate, per repro band).
+
+Each edge node j talks to node (J+1) over an error-free link of capacity C_j
+(§II, eq. 1: phi_j maps into [1 : 2^C_j]).  On TPU the "link" is ICI; here we
+simulate the capacity constraint with a uniform scalar quantizer over the
+bottleneck activations (straight-through gradients) and count exact bits.
+
+This module doubles as the beyond-paper ICI-compression knob: quantizing the
+latents that cross the 'client' axis boundary reduces collective bytes on a
+real pod by 32/link_bits (fp32) or 16/link_bits (bf16).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_st(u, bits: int, *, u_range: float = 4.0):
+    """Uniform quantizer with straight-through estimator.
+
+    bits >= 32 is treated as 'no quantization' (full-precision link).
+    Latents are clipped to [-u_range, u_range] (Gaussian bottlenecks are
+    near-standard-normal, so 4 sigma covers them).
+    """
+    if bits >= 32:
+        return u
+    levels = (1 << bits) - 1
+    scale = levels / (2.0 * u_range)
+    clipped = jnp.clip(u, -u_range, u_range)
+    q = jnp.round((clipped + u_range) * scale) / scale - u_range
+    return u + jax.lax.stop_gradient(q - u)
+
+
+_WIRE_RANGE = 4.0                 # Gaussian bottlenecks: 4 sigma coverage
+_WIRE_SCALE = _WIRE_RANGE / 127.0
+
+
+def _to_int8(u):
+    return jnp.clip(jnp.round(u.astype(jnp.float32) / _WIRE_SCALE),
+                    -127, 127).astype(jnp.int8)
+
+
+def _from_int8(q, dtype):
+    return (q.astype(jnp.float32) * _WIRE_SCALE).astype(dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def wire_concat(u, gathered_spec=None, client_spec=None):
+    """The INL node->(J+1) boundary as a REAL int8 wire.
+
+    u: (J, B, S, d_b) float, sharded over the 'client' mesh axis.  The
+    forward quantizes to int8 BEFORE the axis-merging reshape, and
+    `gathered_spec` (a PartitionSpec replicating the client axis) pins the
+    all-gather to the INT8 tensor — without the constraint GSPMD prefers to
+    contract locally and all-reduce bf16 outputs instead, bypassing the wire
+    (observed; EXPERIMENTS.md §Perf).  Dequantization is local, after the
+    gather.
+
+    The backward is exactly the paper's eq.-(8c) error-vector split: the
+    decoder-input cotangent is cut into J chunks and returned to each node
+    (straight-through through the quantizer), itself int8-quantized with a
+    dynamic scale so the backward link is compressed too (`client_spec`
+    pins that scatter to int8 likewise).
+    """
+    J, B, S, db = u.shape
+    if client_spec is not None:
+        # pin u to the client layout, quantize LOCALLY, barrier so the
+        # downstream replicated constraint cannot propagate back through the
+        # elementwise quantize chain (GSPMD otherwise gathers the f32 input
+        # and quantizes redundantly — observed), then pin the gather to the
+        # INT8 tensor before the axis-merging reshape.
+        u = jax.lax.with_sharding_constraint(u, client_spec)
+    q = _to_int8(u)
+    if gathered_spec is not None:
+        q = jax.lax.optimization_barrier(q)
+        q = jax.lax.with_sharding_constraint(q, gathered_spec)
+    cat = jnp.moveaxis(q, 0, 2).reshape(B, S, J * db)
+    return _from_int8(cat, u.dtype)
+
+
+def _wire_fwd(u, gathered_spec, client_spec):
+    J = u.shape[0]
+    marker = jnp.zeros((J, 0), u.dtype)       # carries J + dtype, no data
+    return wire_concat(u, gathered_spec, client_spec), marker
+
+
+def _wire_bwd(gathered_spec, client_spec, res, g):
+    marker = res
+    J, dtype = marker.shape[0], marker.dtype
+    B, S, jdb = g.shape
+    db = jdb // J
+    gmax = jnp.maximum(jnp.max(jnp.abs(g.astype(jnp.float32))), 1e-12)
+    scale = gmax / 127.0
+    g8 = jnp.clip(jnp.round(g.astype(jnp.float32) / scale),
+                  -127, 127).astype(jnp.int8)
+    du8 = jnp.moveaxis(g8.reshape(B, S, J, db), 2, 0)   # the backward link
+    if client_spec is not None:
+        du8 = jax.lax.with_sharding_constraint(du8, client_spec)
+    du = du8.astype(jnp.float32) * scale
+    return (du.astype(dtype),)
+
+
+wire_concat.defvjp(_wire_fwd, _wire_bwd)
+
+
+def float_concat(u):
+    """Uncompressed boundary (link_bits >= 16): plain eq.-(5) concat."""
+    J, B, S, db = u.shape
+    return jnp.moveaxis(u, 0, 2).reshape(B, S, J * db)
+
+
+def activation_bits(batch: int, width: int, bits: int) -> int:
+    """Bits to move `width` activation values per sample across a link."""
+    return batch * width * bits
+
+
+def training_step_bits(batch: int, p_total: int, bits: int) -> int:
+    """Paper §III-C: forward activations + backward error vectors = 2 b p s."""
+    return 2 * batch * p_total * bits
+
+
+def inference_step_bits(batch: int, p_total: int, bits: int) -> int:
+    """Inference sends the forward activations only."""
+    return batch * p_total * bits

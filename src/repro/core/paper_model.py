@@ -1,0 +1,204 @@
+"""The paper's §IV network (Fig. 4): per-client VGG-style conv encoders over
+32x32x3 noisy views, and two dense layers at node (J+1).
+
+Pure JAX: conv via lax.conv_general_dilated, BatchNorm with running stats
+(threaded as `state`), Dropout, max-pool.  Apply signature:
+
+    encoder_apply(params, state, x, *, train, rng) -> (features, new_state)
+
+The same conv trunk is reused to build the FL model (all J branches + head on
+one client, Fig. 4/6) and the SL client net (all conv branches client-side).
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bottleneck
+from repro.models import layers
+
+BN_MOMENTUM = 0.9
+
+
+# ---------------------------------------------------------------------------
+# Primitives
+# ---------------------------------------------------------------------------
+
+def conv_init(key, c_in: int, c_out: int, ksize: int = 3):
+    fan_in = c_in * ksize * ksize
+    w = jax.random.normal(key, (ksize, ksize, c_in, c_out), jnp.float32) \
+        * np.sqrt(2.0 / fan_in)
+    return {"w": w, "b": jnp.zeros((c_out,), jnp.float32)}
+
+
+def conv(p, x, stride: int = 1):
+    out = jax.lax.conv_general_dilated(
+        x, p["w"], (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return out + p["b"]
+
+
+def bn_init(c: int):
+    return ({"scale": jnp.ones((c,), jnp.float32),
+             "bias": jnp.zeros((c,), jnp.float32)},
+            {"mean": jnp.zeros((c,), jnp.float32),
+             "var": jnp.ones((c,), jnp.float32)})
+
+
+def bn_apply(p, st, x, *, train: bool):
+    if train:
+        mean = x.mean(axis=(0, 1, 2))
+        var = x.var(axis=(0, 1, 2))
+        new_st = {"mean": BN_MOMENTUM * st["mean"] + (1 - BN_MOMENTUM) * mean,
+                  "var": BN_MOMENTUM * st["var"] + (1 - BN_MOMENTUM) * var}
+    else:
+        mean, var = st["mean"], st["var"]
+        new_st = st
+    y = (x - mean) * jax.lax.rsqrt(var + 1e-5) * p["scale"] + p["bias"]
+    return y, new_st
+
+
+def maxpool2(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def dropout(key, x, rate: float, *, train: bool):
+    if not train or rate == 0.0:
+        return x
+    keep = jax.random.bernoulli(key, 1.0 - rate, x.shape)
+    return jnp.where(keep, x / (1.0 - rate), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Conv encoder trunk (one client branch)
+# ---------------------------------------------------------------------------
+
+def encoder_init(key, cfg):
+    """cfg: PaperExperimentConfig.  Returns (params, state)."""
+    chans = (cfg.image_shape[-1],) + tuple(cfg.conv_channels)
+    params, state = {"convs": [], "bns": []}, {"bns": []}
+    ks = jax.random.split(key, 2 * len(cfg.conv_channels) + 2)
+    for i in range(len(cfg.conv_channels)):
+        params["convs"].append(conv_init(ks[2 * i], chans[i], chans[i + 1]))
+        bp, bs = bn_init(chans[i + 1])
+        params["bns"].append(bp)
+        state["bns"].append(bs)
+    h = cfg.image_shape[0] // (2 ** len(cfg.conv_channels))
+    feat_dim = h * h * cfg.conv_channels[-1]
+    params["head"] = bottleneck.head_init(ks[-1], feat_dim, cfg.d_bottleneck)
+    return params, state
+
+
+def encoder_feat_dim(cfg) -> int:
+    h = cfg.image_shape[0] // (2 ** len(cfg.conv_channels))
+    return h * h * cfg.conv_channels[-1]
+
+
+def encoder_apply(params, state, x, *, train: bool):
+    """x: (B,H,W,C) -> ((mu, logvar), new_state)."""
+    new_bns = []
+    h = x
+    for cp, bp, bs in zip(params["convs"], params["bns"], state["bns"]):
+        h = conv(cp, h)
+        h, nbs = bn_apply(bp, bs, h, train=train)
+        h = jax.nn.relu(h)
+        h = maxpool2(h)
+        new_bns.append(nbs)
+    h = h.reshape(h.shape[0], -1)
+    mu, logvar = bottleneck.head_apply(params["head"], h)
+    return (mu, logvar), {"bns": new_bns}
+
+
+def encoder_param_count(cfg) -> int:
+    chans = (cfg.image_shape[-1],) + tuple(cfg.conv_channels)
+    n = 0
+    for i in range(len(cfg.conv_channels)):
+        n += 9 * chans[i] * chans[i + 1] + chans[i + 1]   # conv w+b
+        n += 2 * chans[i + 1]                              # bn scale+bias
+    n += 2 * (encoder_feat_dim(cfg) * cfg.d_bottleneck + cfg.d_bottleneck)
+    return n
+
+
+# ---------------------------------------------------------------------------
+# Central node (J+1): fusion decoder + per-branch decoders (Remark 1)
+# ---------------------------------------------------------------------------
+
+def decoder_init(key, cfg):
+    J = cfg.num_clients
+    dims = (J * cfg.d_bottleneck,) + tuple(cfg.dense_units) \
+        + (cfg.num_classes,)
+    ks = jax.random.split(key, len(dims) + 1)
+    bh = jax.vmap(lambda k: layers.dense_init(
+        k, cfg.d_bottleneck, cfg.num_classes, bias=True, dtype=jnp.float32))(
+        jax.random.split(ks[-1], J))
+    p = {"dense": [layers.dense_init(ks[i], dims[i], dims[i + 1], bias=True,
+                                     dtype=jnp.float32)
+                   for i in range(len(dims) - 1)],
+         "branch_heads": bh}               # stacked (J, d_b, C) / (J, C)
+    return p
+
+
+def decoder_apply(p, u_cat, *, train: bool, rng=None, drop: float = 0.3):
+    """u_cat: (B, J*d_bottleneck) -> logits (B, classes)."""
+    h = u_cat
+    for i, dp in enumerate(p["dense"][:-1]):
+        h = jax.nn.relu(layers.dense(dp, h))
+        if train and rng is not None:
+            rng, sub = jax.random.split(rng)
+            h = dropout(sub, h, drop, train=train)
+    return layers.dense(p["dense"][-1], h)
+
+
+def branch_heads_apply(p, us):
+    """us: (J, B, d_b) -> per-branch logits (J, B, classes)."""
+    return jax.vmap(layers.dense)(p["branch_heads"], us)
+
+
+def decoder_param_count(cfg) -> int:
+    J = cfg.num_clients
+    dims = (J * cfg.d_bottleneck,) + tuple(cfg.dense_units) \
+        + (cfg.num_classes,)
+    n = sum(dims[i] * dims[i + 1] + dims[i + 1] for i in range(len(dims) - 1))
+    n += J * (cfg.d_bottleneck * cfg.num_classes + cfg.num_classes)
+    return n
+
+
+# ---------------------------------------------------------------------------
+# FL full model (Fig. 4 entire network on each client) and SL split
+# ---------------------------------------------------------------------------
+
+def fl_model_init(key, cfg):
+    """The whole Fig.-4 network: J conv branches + fusion head, one copy."""
+    ks = jax.random.split(key, cfg.num_clients + 1)
+    encs = [encoder_init(ks[j], cfg) for j in range(cfg.num_clients)]
+    params = {"encoders": [e[0] for e in encs],
+              "decoder": decoder_init(ks[-1], cfg)}
+    state = {"encoders": [e[1] for e in encs]}
+    return params, state
+
+
+def fl_model_apply(params, state, views, *, train: bool, rng=None,
+                   deterministic_latent: bool = True):
+    """views: (J,B,H,W,C) — all J views of the same images (FL/SL training),
+    or a broadcast single image for FL Exp-2 inference."""
+    us, new_states = [], []
+    for j, (ep, es) in enumerate(zip(params["encoders"], state["encoders"])):
+        (mu, logvar), ns = encoder_apply(ep, es, views[j], train=train)
+        if deterministic_latent:
+            u = mu
+        else:
+            rng, sub = jax.random.split(rng)
+            u = bottleneck.sample(sub, mu, logvar)
+        us.append(u)
+        new_states.append(ns)
+    u_cat = jnp.concatenate(us, axis=-1)
+    logits = decoder_apply(params["decoder"], u_cat, train=train, rng=rng)
+    return logits, {"encoders": new_states}
+
+
+def fl_param_count(cfg) -> int:
+    return cfg.num_clients * encoder_param_count(cfg) + decoder_param_count(cfg)

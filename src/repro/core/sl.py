@@ -1,0 +1,83 @@
+"""Split learning (Gupta & Raskar 2018) — the paper's second baseline.
+
+Per §IV-A: each client holds ALL J conv branches (the full Fig.-4 network
+minus node (J+1)'s dense part); the server holds the dense part.  Training is
+SEQUENTIAL round-robin: client j runs epochs on its local shard, exchanging
+cut-layer activations/errors with the server; then passes its (client-side)
+weights to client j+1.
+
+Bandwidth per epoch (§III-C): (2 p q + eta N J) s bits — activations/errors
+for every data point plus one client->client weight transfer per epoch
+(eta = client-side fraction of the N parameters).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bottleneck, losses, paper_model
+
+
+def init(cfg, key):
+    """Returns ((client_params, server_params), state).  The client side =
+    all J conv branches + bottleneck heads; server side = dense decoder."""
+    params, state = paper_model.fl_model_init(key, cfg)
+    client = {"encoders": params["encoders"]}
+    server = {"decoder": params["decoder"]}
+    return (client, server), state
+
+
+def forward_client(client, state, views, *, train: bool):
+    """Client-side cut-layer activations: concat of all J branch latents.
+    (SL sends deterministic activations — no stochastic bottleneck.)"""
+    us, new_states = [], []
+    for j, (ep, es) in enumerate(zip(client["encoders"], state["encoders"])):
+        (mu, _), ns = paper_model.encoder_apply(ep, es, views[j], train=train)
+        us.append(mu)
+        new_states.append(ns)
+    u = jnp.stack(us)                                     # (J,B,d_b)
+    return u, {"encoders": new_states}
+
+
+def loss_fn(client, server, state, views, labels, rng, *, train=True):
+    u, new_state = forward_client(client, state, views, train=train)
+    J, B, d = u.shape
+    u_cat = jnp.moveaxis(u, 0, 1).reshape(B, J * d)
+    logits = paper_model.decoder_apply(server["decoder"], u_cat, train=train,
+                                       rng=rng)
+    loss = losses.xent(logits, labels)
+    return loss, ({"loss": loss,
+                   "accuracy": losses.accuracy(logits, labels)}, new_state)
+
+
+def make_train_step(optimizer_client, optimizer_server):
+    """One SL step: server computes loss, backprops the cut-layer error to
+    the active client (JAX AD produces exactly that error vector)."""
+    @jax.jit
+    def step(client, server, state, opt_c, opt_s, views, labels, rng):
+        (loss, (metrics, new_state)), grads = jax.value_and_grad(
+            loss_fn, argnums=(0, 1), has_aux=True)(
+            client, server, state, views, labels, rng)
+        g_client, g_server = grads
+        new_client, new_opt_c = optimizer_client.update(g_client, opt_c, client)
+        new_server, new_opt_s = optimizer_server.update(g_server, opt_s, server)
+        return new_client, new_server, new_state, new_opt_c, new_opt_s, metrics
+    return step
+
+
+def epoch_bits(cfg, dataset_size: int, client_params: int,
+               bits: int = 32) -> int:
+    """(2 p q + eta N J) s for one full epoch over q points: cut activations
+    forward + errors backward for every point, plus J client->client weight
+    hand-offs.  Here eta*N == client_params (the client-side count)."""
+    p_total = cfg.num_clients * cfg.d_bottleneck
+    return (2 * p_total * dataset_size
+            + client_params * cfg.num_clients) * bits
+
+
+def predict(client, server, state, views):
+    u, _ = forward_client(client, state, views, train=False)
+    J, B, d = u.shape
+    u_cat = jnp.moveaxis(u, 0, 1).reshape(B, J * d)
+    logits = paper_model.decoder_apply(server["decoder"], u_cat, train=False)
+    return jax.nn.softmax(logits, axis=-1)

@@ -1,0 +1,54 @@
+"""Dispatching wrappers for the Pallas kernels.
+
+On TPU the compiled Pallas kernels run natively (interpret=False); on CPU
+(this container) they execute in interpret mode for correctness, and the
+model code defaults to its jnp formulations (models/attention.py's blockwise
+scan, models/ssm.py's chunked SSD) which XLA compiles efficiently.  The
+`backend` argument makes the choice explicit and testable:
+
+    backend="pallas"     pallas_call, interpret on CPU / compiled on TPU
+    backend="reference"  kernels/ref.py jnp oracle
+    backend="auto"       pallas on TPU, reference elsewhere
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import inl_bottleneck as _bn
+from repro.kernels import ref
+from repro.kernels import ssm_scan as _ssd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(backend: str) -> str:
+    if backend == "auto":
+        return "pallas" if _on_tpu() else "reference"
+    return backend
+
+
+def attention(q, k, v, *, causal=True, window=0, q_offset=0,
+              backend: str = "auto", **block_kw):
+    if _resolve(backend) == "pallas":
+        return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                                   q_offset=q_offset,
+                                   interpret=not _on_tpu(), **block_kw)
+    return ref.attention_ref(q, k, v, causal=causal, window=window,
+                             q_offset=q_offset)
+
+
+def bottleneck(mu, logvar, eps, *, backend: str = "auto", **block_kw):
+    if _resolve(backend) == "pallas":
+        return _bn.bottleneck_fused(mu, logvar, eps,
+                                    interpret=not _on_tpu(), **block_kw)
+    return ref.bottleneck_ref(mu, logvar, eps)
+
+
+def ssd_scan(x, dt, a, bm, cm, dskip, *, backend: str = "auto", **block_kw):
+    if _resolve(backend) == "pallas":
+        return _ssd.ssd_scan(x, dt, a, bm, cm, dskip,
+                             interpret=not _on_tpu(), **block_kw)
+    return ref.ssd_scan_ref(x, dt, a, bm, cm, dskip)

@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for every Pallas kernel.  Deliberately naive and
+obviously-correct; used by tests/test_kernels.py for allclose sweeps and by
+ops.py as the CPU fallback for tiny shapes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  q_offset: int = 0):
+    """Naive masked softmax attention.  q: (B,Sq,H,Dh); k/v: (B,Sk,KV,Dh)."""
+    B, Sq, H, Dh = q.shape
+    _, Sk, KV, _ = k.shape
+    g = H // KV
+    k = jnp.repeat(k, g, axis=2)
+    v = jnp.repeat(v, g, axis=2)
+    scale = 1.0 / np.sqrt(Dh)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(Sq)[:, None] + q_offset
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window:
+        mask = mask & (q_pos - k_pos < window)
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def bottleneck_ref(mu, logvar, eps):
+    """u = mu + sigma*eps; kl = KL(N(mu,sigma^2) || N(0,I)) per row."""
+    lv = logvar.astype(jnp.float32)
+    muf = mu.astype(jnp.float32)
+    u = muf + jnp.exp(0.5 * lv) * eps.astype(jnp.float32)
+    kl = 0.5 * jnp.sum(jnp.exp(lv) + muf * muf - 1.0 - lv, axis=-1)
+    return u.astype(mu.dtype), kl
+
+
+def ssd_scan_ref(x, dt, a, bm, cm, dskip):
+    """Exact sequential SSM recurrence (the definition, not the chunked form).
+
+    h_t = exp(dt_t a) h_{t-1} + dt_t B_t x_t^T;  y_t = C_t h_t + D x_t.
+    x: (B,S,H,P); dt: (B,S,H); a: (H,); bm/cm: (B,S,N); dskip: (H,)."""
+    B, S, H, P = x.shape
+    N = bm.shape[-1]
+
+    def step(h, t):
+        xt, dtt, bt, ct = t                              # (B,H,P),(B,H),(B,N),(B,N)
+        decay = jnp.exp(dtt * a)                         # (B,H)
+        upd = jnp.einsum("bh,bn,bhp->bhnp", dtt, bt, xt)
+        h = h * decay[..., None, None] + upd
+        y = jnp.einsum("bn,bhnp->bhp", ct, h)
+        return h, y
+
+    xs = (jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(bm, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(cm, 1, 0).astype(jnp.float32))
+    h0 = jnp.zeros((B, H, N, P), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1)                            # (B,S,H,P)
+    y = y + dskip[None, None, :, None] * x.astype(jnp.float32)
+    return y.astype(x.dtype)

@@ -1,0 +1,41 @@
+"""Production meshes.
+
+Functions, not module-level constants: importing this module never touches
+jax device state (device count is locked at first jax init, and smoke tests
+must see 1 CPU device while the dry-run sees 512 placeholders).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips (data, model).
+    Multi-pod: 2 pods x 256 = 512 chips (pod, data, model)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_inl_mesh(num_clients: int, *, multi_pod: bool = False):
+    """Mesh for the paper-mode (INL) trainer: a 'client' axis holds the J
+    edge nodes; remaining capacity goes to data/model parallelism.
+    256 (or 512) chips total, same hardware as make_production_mesh."""
+    model = 16
+    total = 512 if multi_pod else 256
+    data = total // (num_clients * model)
+    assert data >= 1, f"J={num_clients} too large for {total} chips"
+    return jax.make_mesh((num_clients, data, model),
+                         ("client", "data", "model"))
+
+
+def make_host_mesh():
+    """Whatever devices exist locally (CPU smoke runs): 1D 'data' mesh."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))
+
+
+def data_axes(mesh) -> tuple:
+    """The batch-sharding axes for a mesh (everything that isn't 'model' or
+    'client')."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

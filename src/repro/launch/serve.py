@@ -1,0 +1,98 @@
+"""Serving driver: batched prefill + decode loop with a continuous-batching
+style request queue (reduced configs on CPU; the same step functions lower
+for the production mesh in the dry-run).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
+      --requests 8 --prompt-len 64 --gen-len 32
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.data import tokens as token_data
+from repro.launch import steps as steps_lib
+from repro.models import zoo
+
+
+def greedy(logits):
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def serve_batch(cfg, params, prompts, gen_len: int, *, temperature=0.0):
+    """prompts: (B, P) int32.  Returns (B, gen_len) generated ids.
+    Prefill once, then gen_len decode steps against the growing cache."""
+    B, P = prompts.shape
+    prefill = jax.jit(steps_lib.make_prefill_step(cfg))
+    decode = jax.jit(steps_lib.make_decode_step(cfg), donate_argnums=(2,))
+
+    if cfg.modality == "audio_tokens":
+        batch = {"tokens_mc": jnp.broadcast_to(
+            prompts[..., None], (B, P, cfg.num_codebooks))}
+    else:
+        batch = {"tokens": prompts}
+    last_logits, cache = prefill(params, batch)
+    cache = zoo.pad_cache(cache, gen_len)
+
+    out = []
+    tok = greedy(last_logits)
+    for t in range(gen_len):
+        out.append(tok)
+        step_batch = {"cache_len": jnp.asarray(P + t, jnp.int32)}
+        if cfg.modality == "audio_tokens":
+            step_batch["tokens_mc"] = jnp.broadcast_to(
+                tok[:, None, None] if tok.ndim == 1 else tok[:, None],
+                (B, 1, cfg.num_codebooks)).astype(jnp.int32)
+        else:
+            step_batch["tokens"] = tok.reshape(B, 1)[:, :1] if tok.ndim > 1 \
+                else tok[:, None]
+        logits, cache = decode(params, step_batch, cache)
+        tok = greedy(logits)
+        if tok.ndim > 1:                     # audio: (B, K) -> flatten choice
+            tok = tok[:, 0]
+    return jnp.stack(out, axis=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen-len", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.smoke:
+        cfg = dataclasses.replace(cfg, dtype="float32")
+    if cfg.modality == "vlm":
+        raise SystemExit("serve demo supports text/audio archs; VLM decode "
+                         "is exercised via the dry-run")
+
+    params = zoo.init_params(cfg, jax.random.PRNGKey(args.seed))
+    prompts = np.asarray(
+        token_data.markov_stream(cfg.vocab_size,
+                                 args.requests * args.prompt_len,
+                                 seed=args.seed)
+    ).reshape(args.requests, args.prompt_len).astype(np.int32)
+
+    t0 = time.time()
+    gen = serve_batch(cfg, params, jnp.asarray(prompts), args.gen_len)
+    dt = time.time() - t0
+    toks = args.requests * args.gen_len
+    print(f"arch={cfg.name} served {args.requests} requests, "
+          f"prompt={args.prompt_len}, generated {args.gen_len} each "
+          f"({toks} tokens, {dt:.1f}s, {toks/dt:.1f} tok/s incl. compile)")
+    print("sample:", np.asarray(gen[0, :16]).tolist())
+
+
+if __name__ == "__main__":
+    main()

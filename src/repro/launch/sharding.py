@@ -1,0 +1,222 @@
+"""Sharding rules: parameter / batch / cache / optimizer-state layouts.
+
+Megatron-style tensor parallelism on the 'model' axis + FSDP-style parameter
+sharding on the 'data' axis, expressed as path-keyed PartitionSpec rules over
+NEGATIVE dim indices so stacked (scan) leading axes never shift a rule.
+
+    column weights  (…, d_in, d_out): d_out -> model, d_in -> data (FSDP)
+    row weights     (…, d_in, d_out): d_in -> model, d_out -> data (FSDP)
+    expert weights  (…, E, d, f):     E -> model (expert parallel), d -> data
+    embeddings      (…, V, d):        V -> model, d -> data
+    INL encoders    (J, …):           J -> client (paper mode)
+    norms / biases / scalars:         replicated
+
+Every rule is divisibility-guarded: a dim that does not divide by the mesh
+axis size stays replicated on that axis (e.g. qwen's 20 heads on a 16-way
+model axis -> attention stays model-replicated; the §Perf pass revisits this
+with sequence parallelism).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# path-name classification ---------------------------------------------------
+
+_COLUMN = {"wq", "wk", "wv", "wi", "wg", "up", "wx", "in_proj", "wq_a",
+           "wq_b", "wkv_a", "wk_b", "wv_b", "unembed", "heads", "w_if",
+           "mu", "logvar"}
+_ROW = {"wo", "down", "out_proj", "adapter"}
+_EMBED = {"embed"}
+_MOE_STACK = {"moe"}
+_REPLICATE = {"router", "conv", "r", "A_log", "D", "dt_bias", "norm",
+              "q_norm", "kv_norm", "attn_norm", "ffn_norm", "final_norm",
+              "scale", "bias", "b"}
+
+
+def _axis_size(mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _assign(spec: list, axis_idx: int, mesh_axis: str, dim: int,
+            mesh) -> None:
+    size = _axis_size(mesh, mesh_axis)
+    if size > 1 and dim % size == 0 and spec[axis_idx] is None:
+        spec[axis_idx] = mesh_axis
+
+
+def _path_names(path) -> list:
+    return [p.key for p in path if hasattr(p, "key")]
+
+
+def param_spec(path, leaf, mesh, *, fsdp: bool = True,
+               client_axis: bool = False) -> P:
+    names = _path_names(path)
+    nd = leaf.ndim
+    spec: list = [None] * nd
+
+    if client_axis and names and names[0] == "encoders" and nd >= 1:
+        # INL: leading J axis of stacked per-node encoders
+        if leaf.shape[0] % _axis_size(mesh, "client") == 0:
+            spec[0] = "client"
+
+    def done():
+        return P(*spec)
+
+    if nd == 0 or not names:
+        return done()
+    last = names[-1]
+    parents = set(names[:-1])
+
+    if last in _REPLICATE or (last == "b") or nd == 1:
+        return done()
+
+    is_moe = bool(parents & _MOE_STACK) and last in {"wi", "wg", "wo"} and nd >= 3
+    if is_moe:
+        _assign(spec, nd - 3, "model", leaf.shape[nd - 3], mesh)   # experts
+        if fsdp:
+            _assign(spec, nd - 2, "data", leaf.shape[nd - 2], mesh)
+        return done()
+
+    if last in _EMBED or (names and names[-2:] == ["embed", "w"]) \
+            or "embed" in parents:
+        _assign(spec, nd - 2, "model", leaf.shape[nd - 2], mesh)    # vocab
+        if fsdp:
+            _assign(spec, nd - 1, "data", leaf.shape[nd - 1], mesh)
+        return done()
+
+    owner = names[-2] if last == "w" and len(names) >= 2 else last
+    if owner in _COLUMN:
+        _assign(spec, nd - 1, "model", leaf.shape[nd - 1], mesh)
+        if fsdp:
+            _assign(spec, nd - 2, "data", leaf.shape[nd - 2], mesh)
+        return done()
+    if owner in _ROW:
+        _assign(spec, nd - 2, "model", leaf.shape[nd - 2], mesh)
+        if fsdp:
+            _assign(spec, nd - 1, "data", leaf.shape[nd - 1], mesh)
+        return done()
+    # default: FSDP the largest dim on data
+    if fsdp and nd >= 2:
+        big = int(np.argmax(leaf.shape))
+        _assign(spec, big, "data", leaf.shape[big], mesh)
+    return done()
+
+
+def param_shardings(params_shape, mesh, *, fsdp: bool = True,
+                    client_axis: bool = False):
+    """params_shape: pytree of ShapeDtypeStructs (or arrays)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, param_spec(path, leaf, mesh, fsdp=fsdp,
+                             client_axis=client_axis)),
+        params_shape)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache / optimizer state
+# ---------------------------------------------------------------------------
+
+def _dp(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def batch_spec(name: str, leaf, mesh) -> P:
+    dp = _dp(mesh)
+    if leaf.ndim == 0:
+        return P()
+    batch = leaf.shape[0]
+    total = int(np.prod([_axis_size(mesh, a) for a in dp]))
+    if total > 1 and batch % total == 0:
+        return P(dp, *([None] * (leaf.ndim - 1)))
+    # long_500k: batch=1 -> shard the sequence axis instead where possible
+    if leaf.ndim >= 2 and leaf.shape[1] % total == 0 and total > 1:
+        return P(None, dp, *([None] * (leaf.ndim - 2)))
+    return P(*([None] * leaf.ndim))
+
+
+def batch_shardings(batch_specs, mesh):
+    return {k: NamedSharding(mesh, batch_spec(k, v, mesh))
+            for k, v in batch_specs.items()}
+
+
+_CACHE_BATCH_AXIS = {"k": -4, "v": -4, "c_kv": -3, "k_rope": -3,
+                     "conv": -3, "ssm": -4, "C": -4, "n": -3, "m": -2,
+                     "c": -3, "h": -3}
+_CACHE_TIME_AXIS = {"k": -3, "v": -3, "c_kv": -2, "k_rope": -2}
+_CACHE_HEAD_AXIS = {"k": -2, "v": -2, "ssm": -3, "C": -3, "n": -2, "m": -1,
+                    "c": -2, "h": -2}
+
+
+def cache_spec(path, leaf, mesh) -> P:
+    names = _path_names(path)
+    name = names[-1] if names else ""
+    dp = _dp(mesh)
+    total = int(np.prod([_axis_size(mesh, a) for a in dp]))
+    nd = leaf.ndim
+    spec: list = [None] * nd
+    ba = _CACHE_BATCH_AXIS.get(name)
+    if ba is not None and -ba <= nd:
+        bdim = leaf.shape[ba]
+        if total > 1 and bdim % total == 0:
+            spec[ba % nd] = dp
+        elif name in _CACHE_TIME_AXIS:
+            # batch=1 long-context: shard the cache TIME axis over data
+            ta = _CACHE_TIME_AXIS[name] % nd
+            if leaf.shape[ta] % total == 0 and total > 1:
+                spec[ta] = dp
+    ha = _CACHE_HEAD_AXIS.get(name)
+    msize = _axis_size(mesh, "model")
+    if ha is not None and -ha <= nd:
+        hdim = leaf.shape[ha]
+        if msize > 1 and hdim % msize == 0 and spec[ha % nd] is None:
+            spec[ha % nd] = "model"
+            return P(*spec)
+    # kv heads don't divide the model axis (MHA archs like qwen's 20 heads):
+    # shard the cache TIME axis over 'model' instead — flash-decode style
+    # partial-softmax with a cross-shard reduction, instead of replicating a
+    # 100+ GB/device cache (measured; EXPERIMENTS.md §Perf).
+    if name in _CACHE_TIME_AXIS and msize > 1:
+        ta = _CACHE_TIME_AXIS[name] % nd
+        if spec[ta] is None and leaf.shape[ta] % msize == 0:
+            spec[ta] = "model"
+    return P(*spec)
+
+
+def cache_shardings(cache_specs, mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, cache_spec(path, leaf, mesh)),
+        cache_specs)
+
+
+def opt_state_shardings(opt_shape, param_shardings_tree, mesh, *,
+                        zero1: bool = True):
+    """m/v/master mirror the param layout; scalars replicated.  With zero1,
+    any still-replicated large dim is additionally sharded over 'data'
+    (ZeRO-1: optimizer states fully partitioned)."""
+
+    def one(path, leaf):
+        names = _path_names(path)
+        if leaf.ndim == 0 or (names and names[0] == "step"):
+            return NamedSharding(mesh, P())
+        # the state mirrors the param at path[1:] (strip the m/v/master key)
+        spec = list(param_spec(path[1:], leaf, mesh))
+        if zero1:
+            dp = _dp(mesh)
+            used = {a for s in spec if s is not None
+                    for a in (s if isinstance(s, tuple) else (s,))}
+            free = tuple(a for a in dp if a not in used)
+            total = int(np.prod([_axis_size(mesh, a) for a in free])) \
+                if free else 1
+            if total > 1:
+                for ax in range(leaf.ndim):
+                    if spec[ax] is None and leaf.shape[ax] % total == 0:
+                        spec[ax] = free if len(free) > 1 else free[0]
+                        break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, opt_shape)

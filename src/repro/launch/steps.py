@@ -1,0 +1,104 @@
+"""Step functions: train / prefill / decode (+ INL paper-mode train), the
+units the launcher jits, shards, and the dry-run lowers.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim as optim_lib
+from repro.core import inl_llm
+from repro.models import zoo
+
+
+def make_train_step(cfg, optimizer, *, microbatches: int = 1,
+                    unroll: bool = False):
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    microbatches > 1 splits the global batch along axis 0 and accumulates
+    fp32 gradients over a lax.scan — activation residency divides by the
+    microbatch count while arithmetic is unchanged (gradient accumulation)."""
+    def grad_fn(params, batch):
+        return jax.value_and_grad(
+            lambda p: zoo.loss_and_metrics(p, cfg, batch), has_aux=True)(
+            params)
+
+    if microbatches == 1:
+        def train_step(params, opt_state, batch):
+            (loss, metrics), grads = grad_fn(params, batch)
+            new_params, new_opt = optimizer.update(grads, opt_state, params)
+            metrics["grad_norm"] = optim_lib.global_norm(grads)
+            return new_params, new_opt, metrics
+        return train_step
+
+    def train_step(params, opt_state, batch):
+        B = jax.tree.leaves(batch)[0].shape[0]
+        assert B % microbatches == 0, (B, microbatches)
+
+        def split(x):
+            return x.reshape((microbatches, B // microbatches) + x.shape[1:])
+        mb = jax.tree.map(split, batch)
+
+        def body(acc, one):
+            (loss, metrics), grads = grad_fn(params, one)
+            acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), acc, grads)
+            return acc, metrics
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        if unroll:
+            # inline accumulation loop: exact cost_analysis (a lax.scan body
+            # is counted once), used by the dry-run's trade-off studies
+            gsum = zeros
+            mlist = []
+            for i in range(microbatches):
+                one = jax.tree.map(lambda x: x[i], mb)
+                gsum, m = body(gsum, one)
+                mlist.append(m)
+            ms = jax.tree.map(lambda *t: jnp.stack(t), *mlist)
+        else:
+            gsum, ms = jax.lax.scan(body, zeros, mb)
+        grads = jax.tree.map(lambda g: g / microbatches, gsum)
+        metrics = jax.tree.map(lambda m: m.mean(axis=0), ms)
+        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        metrics["grad_norm"] = optim_lib.global_norm(grads)
+        return new_params, new_opt, metrics
+    return train_step
+
+
+def make_prefill_step(cfg):
+    """(params, batch) -> (last_logits, cache)."""
+    def prefill_step(params, batch):
+        logits, cache, _ = zoo.forward(params, cfg, batch, mode="prefill",
+                                       logits_positions="last")
+        return logits[:, -1], cache
+    return prefill_step
+
+
+def make_decode_step(cfg):
+    """(params, batch, cache) -> (logits, new_cache).  batch carries the new
+    token(s) + cache_len; serve_step semantics per the assignment: ONE new
+    token against a cache of seq_len entries."""
+    def decode_step(params, batch, cache):
+        logits, new_cache, _ = zoo.forward(params, cfg, batch, mode="decode",
+                                           cache=cache)
+        return logits[:, -1], new_cache
+    return decode_step
+
+
+def make_inl_train_step(cfg, optimizer):
+    """The paper's scheme on this architecture (core/inl_llm)."""
+    def inl_step(params, opt_state, batch, rng):
+        (loss, metrics), grads = jax.value_and_grad(
+            inl_llm.loss_fn, has_aux=True)(params, cfg, batch, rng)
+        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        return new_params, new_opt, metrics
+    return inl_step
+
+
+def default_optimizer(cfg, total_steps: int = 10_000):
+    sched = optim_lib.warmup_cosine_schedule(3e-4, min(200, total_steps // 10 + 1),
+                                             total_steps)
+    return optim_lib.adamw(sched, weight_decay=0.1, clip_norm=1.0)

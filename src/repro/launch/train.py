@@ -1,0 +1,118 @@
+"""Training driver.
+
+On real hardware this runs under the production mesh; on this container it
+runs reduced (smoke) configs on the host devices.  Supports three schemes:
+
+    standard  plain data/tensor-parallel LM training of the selected arch
+    inl       the paper's in-network learning split of the same arch
+              (J encoder nodes + fusion decoder, eq.-6 loss)
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --smoke \
+      --steps 50 --batch 8 --seq 128 [--scheme inl] [--ckpt-dir ckpts]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint, optim
+from repro.configs import get_config, get_smoke_config
+from repro.core import inl_llm
+from repro.data import tokens as token_data
+from repro.launch import steps as steps_lib
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-sized)")
+    ap.add_argument("--scheme", default="standard",
+                    choices=["standard", "inl"])
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    import dataclasses
+    cfg = dataclasses.replace(cfg, dtype="float32") if args.smoke else cfg
+
+    key = jax.random.PRNGKey(args.seed)
+    optimizer = optim.adamw(
+        optim.warmup_cosine_schedule(args.lr, max(args.steps // 10, 1),
+                                     args.steps), weight_decay=0.1,
+        clip_norm=1.0)
+
+    if args.scheme == "inl":
+        from repro.models import transformer
+        # the INL split needs >= encoder_layers + 1 periods; smoke configs
+        # have exactly one — grow the reduced model by one period
+        pat = transformer.block_pattern(cfg)
+        need = (cfg.inl.encoder_layers + 1) * len(pat) \
+            + cfg.moe.first_dense_layers
+        if cfg.num_layers < need:
+            cfg = dataclasses.replace(cfg, num_layers=need)
+        params = inl_llm.init(cfg, key)
+        opt_state = optimizer.init(params)
+        step_fn = jax.jit(inl_llm.make_train_step(cfg, optimizer))
+    else:
+        from repro.models import zoo
+        params = zoo.init_params(cfg, key)
+        opt_state = optimizer.init(params)
+        step_fn = jax.jit(steps_lib.make_train_step(
+            cfg, optimizer, microbatches=args.microbatches))
+
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"arch={cfg.name} scheme={args.scheme} params={n_params:,} "
+          f"devices={jax.device_count()}")
+
+    data = token_data.lm_batches(cfg, args.batch, args.seq, steps=args.steps,
+                                 seed=args.seed)
+    rng = jax.random.PRNGKey(args.seed + 1)
+    t0 = time.time()
+    history = []
+    for step, batch in enumerate(data):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        if args.scheme == "inl":
+            rng, sub = jax.random.split(rng)
+            params, opt_state, metrics = step_fn(params, opt_state, batch,
+                                                 sub)
+        else:
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            m = {k: float(v) for k, v in metrics.items()
+                 if jnp.ndim(v) == 0}
+            m["step"] = step
+            m["wall_s"] = round(time.time() - t0, 1)
+            history.append(m)
+            print(json.dumps({k: (round(v, 4) if isinstance(v, float) else v)
+                              for k, v in m.items()}), flush=True)
+        if args.ckpt_dir and args.ckpt_every and step and \
+                step % args.ckpt_every == 0:
+            checkpoint.save(args.ckpt_dir, step, params,
+                            extra={"arch": cfg.name, "scheme": args.scheme})
+    if args.ckpt_dir:
+        checkpoint.save(args.ckpt_dir, args.steps, params,
+                        extra={"arch": cfg.name, "scheme": args.scheme})
+    first, last = history[0], history[-1]
+    key_metric = "loss" if "loss" in last else "ce"
+    print(f"loss {first[key_metric]:.4f} -> {last[key_metric]:.4f} "
+          f"({args.steps} steps, {time.time()-t0:.1f}s)")
+    return history
+
+
+if __name__ == "__main__":
+    main()

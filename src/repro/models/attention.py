@@ -1,0 +1,498 @@
+"""Attention: GQA/MQA/MHA with RoPE, sliding windows, KV caches, and
+DeepSeek-V2 MLA (multi-head latent attention) with compressed-cache decode.
+
+The full-sequence path uses a blockwise online-softmax formulation (a pure-jnp
+"reference flash") via lax.scan over KV chunks so 32k-token prefill never
+materialises an (S x S) score matrix.  On TPU the Pallas flash kernel
+(repro.kernels.flash_attention) implements the same contract; repro.kernels.ops
+dispatches between them.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (flash-reference) multi-head attention
+# ---------------------------------------------------------------------------
+
+def _mask_for(q_pos, k_pos, Sk, *, causal, window):
+    mask = k_pos[None, :] <= q_pos[:, None] if causal else \
+        jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if window:
+        mask = mask & (q_pos[:, None] - k_pos[None, :] < window)
+    return mask & (k_pos[None, :] < Sk)
+
+
+def _flash_fwd_core(q, k, v, *, causal, window, q_offset, block_q,
+                    block_k, scale):
+    """Doubly-blocked online-softmax forward: an outer scan over query tiles,
+    an inner scan over key tiles — peak transient is one (block_q x block_k)
+    score tile, the same tiling discipline as the Pallas kernel.
+    Returns (out fp32 (B,Sq,KV,g,Dh), lse fp32 (B,Sq,KV,g))."""
+    B, Sq, H, Dh = q.shape
+    _, Sk, KV, _ = k.shape
+    g = H // KV
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    nq = -(-Sq // block_q)
+    nk = -(-Sk // block_k)
+    qpad = nq * block_q - Sq
+    kpad = nk * block_k - Sk
+    if qpad:
+        q = jnp.pad(q, ((0, 0), (0, qpad), (0, 0), (0, 0)))
+    if kpad:
+        k = jnp.pad(k, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+
+    qb = jnp.moveaxis((q.astype(jnp.float32) * scale)
+                      .reshape(B, nq, block_q, KV, g, Dh), 1, 0)
+    kb = jnp.moveaxis(k.reshape(B, nk, block_k, KV, Dh), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nk, block_k, KV, Dh), 1, 0)
+
+    def q_step(_, qin):
+        qc, qi = qin                                     # (B,bq,KV,g,Dh)
+        q_pos = qi * block_q + jnp.arange(block_q) + q_offset
+
+        def k_step(carry, kin):
+            m, l, acc = carry
+            kc, vc, ki = kin
+            s = jnp.einsum("bqkgd,btkd->bqkgt", qc, kc.astype(jnp.float32))
+            k_pos = ki * block_k + jnp.arange(block_k)
+            mask = _mask_for(q_pos, k_pos, Sk, causal=causal, window=window)
+            s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bqkgt,btkd->bqkgd", p, vc.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, block_q, KV, g), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, block_q, KV, g), jnp.float32)
+        a0 = jnp.zeros((B, block_q, KV, g, Dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(k_step, (m0, l0, a0),
+                                      (kb, vb, jnp.arange(nk)))
+        out_c = acc / jnp.maximum(l[..., None], 1e-30)
+        lse_c = m + jnp.log(jnp.maximum(l, 1e-30))
+        return None, (out_c, lse_c)
+
+    _, (ob, lseb) = jax.lax.scan(q_step, None, (qb, jnp.arange(nq)))
+    out = jnp.moveaxis(ob, 0, 1).reshape(B, nq * block_q, KV, g, Dh)
+    lse = jnp.moveaxis(lseb, 0, 1).reshape(B, nq * block_q, KV, g)
+    if qpad:
+        out, lse = out[:, :Sq], lse[:, :Sq]
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _blockwise_attention_vjp(q, k, v, causal: bool = True, window: int = 0,
+                             q_offset: int = 0, block_q: int = 512,
+                             block_k: int = 512, scale=None):
+    """Online-softmax attention with a flash-style custom VJP.
+
+    q: (B, Sq, H, Dh); k, v: (B, Sk, KV, Dh) with H % KV == 0.  q_offset:
+    absolute position of q[0] minus k[0]; window > 0 = sliding window.
+
+    The custom backward recomputes score blocks from saved (q, k, v, out,
+    lse) instead of differentiating through the forward scan — plain AD
+    stores the (B,Sq,H,Dh) fp32 accumulator carry per kv block, which at 32k
+    context costs >100 GB/device (measured; see EXPERIMENTS.md §Perf).
+    Returns (B, Sq, H, Dh) in q.dtype.
+    """
+    B, Sq, H, Dh = q.shape
+    scale = scale if scale is not None else 1.0 / np.sqrt(Dh)
+    out, _ = _flash_fwd_core(q, k, v, causal=causal, window=window,
+                             q_offset=q_offset, block_q=block_q,
+                             block_k=block_k, scale=scale)
+    return out.reshape(B, Sq, H, Dh).astype(q.dtype)
+
+
+def _flash_fwd(q, k, v, causal, window, q_offset, block_q, block_k, scale):
+    B, Sq, H, Dh = q.shape
+    scale_ = scale if scale is not None else 1.0 / np.sqrt(Dh)
+    out, lse = _flash_fwd_core(q, k, v, causal=causal, window=window,
+                               q_offset=q_offset, block_q=block_q,
+                               block_k=block_k, scale=scale_)
+    out_lp = out.reshape(B, Sq, H, Dh).astype(q.dtype)
+    return out_lp, (q, k, v, out_lp, lse)
+
+
+def _flash_bwd(causal, window, q_offset, block_q, block_k, scale, res, dout):
+    """Flash backward, doubly blocked: outer scan over key tiles (emitting
+    dk/dv tiles), inner scan over query tiles (accumulating dq in a carried
+    full-size fp32 buffer via dynamic_update_slice)."""
+    q, k, v, out, lse = res
+    B, Sq, H, Dh = q.shape
+    _, Sk, KV, _ = k.shape
+    g = H // KV
+    scale_ = scale if scale is not None else 1.0 / np.sqrt(Dh)
+    block_q_ = min(block_q, Sq)
+    block_k_ = min(block_k, Sk)
+    nq = -(-Sq // block_q_)
+    nk = -(-Sk // block_k_)
+    qpad = nq * block_q_ - Sq
+    kpad = nk * block_k_ - Sk
+    do = dout.astype(jnp.float32).reshape(B, Sq, KV, g, Dh)
+    delta = jnp.sum(do * out.astype(jnp.float32)
+                    .reshape(B, Sq, KV, g, Dh), axis=-1)    # (B,Sq,KV,g)
+    if qpad:
+        q = jnp.pad(q, ((0, 0), (0, qpad), (0, 0), (0, 0)))
+        do = jnp.pad(do, ((0, 0), (0, qpad), (0, 0), (0, 0), (0, 0)))
+        delta = jnp.pad(delta, ((0, 0), (0, qpad), (0, 0), (0, 0)))
+        lse = jnp.pad(lse, ((0, 0), (0, qpad), (0, 0), (0, 0)))
+    if kpad:
+        k = jnp.pad(k, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+
+    qb = jnp.moveaxis(q.astype(jnp.float32)
+                      .reshape(B, nq, block_q_, KV, g, Dh), 1, 0)
+    dob = jnp.moveaxis(do.reshape(B, nq, block_q_, KV, g, Dh), 1, 0)
+    deltab = jnp.moveaxis(delta.reshape(B, nq, block_q_, KV, g), 1, 0)
+    lseb = jnp.moveaxis(lse.reshape(B, nq, block_q_, KV, g), 1, 0)
+    kb = jnp.moveaxis(k.reshape(B, nk, block_k_, KV, Dh), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nk, block_k_, KV, Dh), 1, 0)
+
+    def k_step(dq_full, kin):
+        kc, vc, ki = kin
+        kcf, vcf = kc.astype(jnp.float32), vc.astype(jnp.float32)
+        k_pos = ki * block_k_ + jnp.arange(block_k_)
+
+        def q_step(carry, qin):
+            dq_full_, dk_acc, dv_acc = carry
+            qc, doc, dc, lc, qi = qin
+            q_pos = qi * block_q_ + jnp.arange(block_q_) + q_offset
+            s = jnp.einsum("bqkgd,btkd->bqkgt", qc, kcf) * scale_
+            mask = _mask_for(q_pos, k_pos, Sk, causal=causal, window=window)
+            s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+            p = jnp.exp(s - lc[..., None])
+            dv_acc = dv_acc + jnp.einsum("bqkgt,bqkgd->btkd", p, doc)
+            dp = jnp.einsum("bqkgd,btkd->bqkgt", doc, vcf)
+            ds = p * (dp - dc[..., None])
+            dq_c = jnp.einsum("bqkgt,btkd->bqkgd", ds, kcf) * scale_
+            prev = jax.lax.dynamic_slice_in_dim(dq_full_, qi * block_q_,
+                                                block_q_, axis=1)
+            dq_full_ = jax.lax.dynamic_update_slice_in_dim(
+                dq_full_, prev + dq_c, qi * block_q_, axis=1)
+            dk_acc = dk_acc + jnp.einsum("bqkgt,bqkgd->btkd", ds, qc) * scale_
+            return (dq_full_, dk_acc, dv_acc), None
+
+        dk0 = jnp.zeros((B, block_k_, KV, Dh), jnp.float32)
+        dv0 = jnp.zeros((B, block_k_, KV, Dh), jnp.float32)
+        (dq_full, dk_blk, dv_blk), _ = jax.lax.scan(
+            q_step, (dq_full, dk0, dv0),
+            (qb, dob, deltab, lseb, jnp.arange(nq)))
+        return dq_full, (dk_blk, dv_blk)
+
+    dq0 = jnp.zeros((B, nq * block_q_, KV, g, Dh), jnp.float32)
+    dq, (dk_b, dv_b) = jax.lax.scan(k_step, dq0, (kb, vb, jnp.arange(nk)))
+    dk = jnp.moveaxis(dk_b, 0, 1).reshape(B, nk * block_k_, KV, Dh)
+    dv = jnp.moveaxis(dv_b, 0, 1).reshape(B, nk * block_k_, KV, Dh)
+    if kpad:
+        dk, dv = dk[:, :Sk], dv[:, :Sk]
+    if qpad:
+        dq = dq[:, :Sq]
+    return (dq.reshape(B, Sq, H, Dh).astype(q.dtype),
+            dk.astype(k.dtype), dv.astype(v.dtype))
+
+
+_blockwise_attention_vjp.defvjp(_flash_fwd, _flash_bwd)
+
+
+def blockwise_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                        q_offset: int = 0, block_q: int = 512,
+                        block_k: int = 512, scale=None):
+    """Keyword-friendly front for the custom-VJP flash attention."""
+    return _blockwise_attention_vjp(q, k, v, causal, window, q_offset,
+                                    block_q, block_k, scale)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, k_new=None, v_new=None,
+                     *, window: int = 0, scale=None, exclude_slot=None):
+    """Single-token attention against a cache.
+
+    q: (B, 1, H, Dh); caches: (B, W, KV, Dh); cache_len: scalar count of valid
+    entries (for a ring buffer, W once wrapped).  Entries >= cache_len masked.
+
+    k_new/v_new (B, 1, KV, Dh): the CURRENT token's kv, attended explicitly so
+    the caller can keep the cache read-only here and write the ring-buffer
+    update as a separate in-place dynamic_update_slice — reading the updated
+    cache forces XLA to keep a full pre-update copy alive (a cache-sized temp,
+    measured at 32k decode).
+    """
+    B, _, H, Dh = q.shape
+    _, W, KV, _ = k_cache.shape
+    g = H // KV
+    scale = scale if scale is not None else 1.0 / np.sqrt(Dh)
+    # NOTE: never .astype(fp32) the cache — a materialised fp32 copy doubles
+    # decode memory; accumulate via preferred_element_type instead.
+    qf = (q.astype(jnp.float32) * scale).reshape(B, KV, g, Dh)
+    s = jnp.einsum("bkgd,btkd->bkgt", qf.astype(k_cache.dtype), k_cache,
+                   preferred_element_type=jnp.float32)
+    valid = jnp.arange(W) < cache_len
+    if exclude_slot is not None:
+        # ring buffer wrapped: the stale entry that the current token is
+        # about to overwrite must not be attended
+        valid = valid & (jnp.arange(W) != exclude_slot)
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    if k_new is not None:
+        s_new = jnp.einsum("bkgd,bkd->bkg", qf.astype(k_new.dtype),
+                           k_new[:, 0], preferred_element_type=jnp.float32)
+        m = jnp.maximum(s.max(axis=-1), s_new)
+        p = jnp.exp(s - m[..., None])
+        p_new = jnp.exp(s_new - m)
+        denom = p.sum(axis=-1) + p_new
+        out = (jnp.einsum("bkgt,btkd->bkgd", p.astype(v_cache.dtype), v_cache,
+                          preferred_element_type=jnp.float32)
+               + p_new[..., None] * v_new[:, 0, :, None, :].astype(jnp.float32)
+               ) / denom[..., None]
+    else:
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bkgt,btkd->bkgd", p.astype(v_cache.dtype), v_cache,
+                         preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, Dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA module
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, cfg, dtype):
+    d, H, KV, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": layers.dense_init(ks[0], d, H * Dh, bias=cfg.qkv_bias, dtype=dtype),
+        "wk": layers.dense_init(ks[1], d, KV * Dh, bias=cfg.qkv_bias, dtype=dtype),
+        "wv": layers.dense_init(ks[2], d, KV * Dh, bias=cfg.qkv_bias, dtype=dtype),
+        "wo": layers.dense_init(ks[3], H * Dh, d, dtype=dtype),
+    }
+
+
+def gqa_param_count(cfg) -> int:
+    d, H, KV, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    n = d * H * Dh * 2 + d * KV * Dh * 2
+    if cfg.qkv_bias:
+        n += H * Dh + 2 * KV * Dh
+    return n
+
+
+def gqa_make_cache(cfg, batch: int, max_len: int, dtype):
+    W = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    KV, Dh = cfg.num_kv_heads, cfg.head_dim
+    return {"k": jnp.zeros((batch, W, KV, Dh), dtype),
+            "v": jnp.zeros((batch, W, KV, Dh), dtype)}
+
+
+def gqa_apply(p, cfg, x, positions, *, mode: str, cache=None, cache_len=None):
+    """x: (B,S,d).  mode 'train'/'prefill' -> full-seq blockwise attention
+    (prefill also returns a filled cache); mode 'decode' -> S==1 against cache.
+    Returns (y, new_cache)."""
+    B, S, d = x.shape
+    H, KV, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = layers.dense(p["wq"], x).reshape(B, S, H, Dh)
+    k = layers.dense(p["wk"], x).reshape(B, S, KV, Dh)
+    v = layers.dense(p["wv"], x).reshape(B, S, KV, Dh)
+    q = layers.apply_rope(q, positions, cfg.rope_theta)
+    k = layers.apply_rope(k, positions, cfg.rope_theta)
+
+    if mode == "decode":
+        assert cache is not None and S == 1
+        W = cache["k"].shape[1]
+        slot = (cache_len % W) if cfg.sliding_window else cache_len
+        # attend over the READ-ONLY old cache + the new token explicitly;
+        # the ring-buffer write below is then a pure in-place update.
+        n_valid = jnp.minimum(cache_len, W)
+        excl = slot if cfg.sliding_window else None
+        out = decode_attention(q, cache["k"], cache["v"], n_valid,
+                               k_new=k, v_new=v, window=cfg.sliding_window,
+                               exclude_slot=excl)
+        k_cache = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+        new_cache = {"k": k_cache, "v": v_cache}
+    else:
+        out = blockwise_attention(q, k, v, causal=True,
+                                  window=cfg.sliding_window,
+                                  block_q=cfg.attn_block_q or 512,
+                                  block_k=cfg.attn_block_k or 512)
+        new_cache = None
+        if mode == "prefill":
+            W = min(S, cfg.sliding_window) if cfg.sliding_window else S
+            kc, vc = k[:, S - W:], v[:, S - W:]
+            if cfg.sliding_window and S > W:
+                # ring alignment: slot j must hold the token with pos%W == j
+                shift = (S - W) % W
+                kc = jnp.roll(kc, shift, axis=1)
+                vc = jnp.roll(vc, shift, axis=1)
+            new_cache = {"k": kc, "v": vc}
+    y = layers.dense(p["wo"], out.reshape(B, S, H * Dh))
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# DeepSeek-V2 MLA
+# ---------------------------------------------------------------------------
+
+def mla_init(key, cfg, dtype):
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.num_heads
+    ks = jax.random.split(key, 8)
+    p = {}
+    if m.q_lora_rank:
+        p["wq_a"] = layers.dense_init(ks[0], d, m.q_lora_rank, dtype=dtype)
+        p["q_norm"] = layers.rmsnorm_init(m.q_lora_rank, dtype)
+        p["wq_b"] = layers.dense_init(ks[1], m.q_lora_rank, H * m.qk_head_dim,
+                                      dtype=dtype)
+    else:
+        p["wq"] = layers.dense_init(ks[0], d, H * m.qk_head_dim, dtype=dtype)
+    p["wkv_a"] = layers.dense_init(ks[2], d, m.kv_lora_rank + m.qk_rope_head_dim,
+                                   dtype=dtype)
+    p["kv_norm"] = layers.rmsnorm_init(m.kv_lora_rank, dtype)
+    p["wk_b"] = layers.dense_init(ks[3], m.kv_lora_rank, H * m.qk_nope_head_dim,
+                                  dtype=dtype)
+    p["wv_b"] = layers.dense_init(ks[4], m.kv_lora_rank, H * m.v_head_dim,
+                                  dtype=dtype)
+    p["wo"] = layers.dense_init(ks[5], H * m.v_head_dim, d, dtype=dtype)
+    return p
+
+
+def mla_param_count(cfg) -> int:
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.num_heads
+    n = 0
+    if m.q_lora_rank:
+        n += d * m.q_lora_rank + m.q_lora_rank + m.q_lora_rank * H * m.qk_head_dim
+    else:
+        n += d * H * m.qk_head_dim
+    n += d * (m.kv_lora_rank + m.qk_rope_head_dim) + m.kv_lora_rank
+    n += m.kv_lora_rank * H * (m.qk_nope_head_dim + m.v_head_dim)
+    n += H * m.v_head_dim * d
+    return n
+
+
+def mla_make_cache(cfg, batch: int, max_len: int, dtype):
+    m = cfg.mla
+    W = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    return {"c_kv": jnp.zeros((batch, W, m.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, W, m.qk_rope_head_dim), dtype)}
+
+
+def _mla_q(p, cfg, x):
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    if m.q_lora_rank:
+        cq = layers.rmsnorm(p["q_norm"], layers.dense(p["wq_a"], x), cfg.norm_eps)
+        q = layers.dense(p["wq_b"], cq)
+    else:
+        q = layers.dense(p["wq"], x)
+    q = q.reshape(B, S, H, m.qk_head_dim)
+    return q[..., :m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+
+
+def mla_apply(p, cfg, x, positions, *, mode: str, cache=None, cache_len=None):
+    """MLA.  Prefill/train expand the compressed kv; decode runs in the
+    compressed space via weight absorption (the cache holds c_kv + k_rope,
+    rank kv_lora + rope_dim per token — DeepSeek-V2's ~1/24 cache)."""
+    m = cfg.mla
+    B, S, d = x.shape
+    H = cfg.num_heads
+    q_nope, q_rope = _mla_q(p, cfg, x)
+    q_rope = layers.apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = layers.dense(p["wkv_a"], x)
+    c_kv = layers.rmsnorm(p["kv_norm"], kv_a[..., :m.kv_lora_rank], cfg.norm_eps)
+    k_rope = kv_a[..., m.kv_lora_rank:][:, :, None, :]       # single shared head
+    k_rope = layers.apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0, :]
+
+    scale = 1.0 / np.sqrt(m.qk_head_dim)
+
+    if mode == "decode":
+        assert cache is not None and S == 1
+        W = cache["c_kv"].shape[1]
+        slot = (cache_len % W) if cfg.sliding_window else cache_len
+        c_cache = jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, slot, 0))
+        r_cache = jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), (0, slot, 0))
+        n_valid = jnp.minimum(cache_len + 1, W)
+        # --- weight absorption: score/combine entirely in rank-kv_lora space.
+        # fp32 accumulation via preferred_element_type — never cast the cache
+        # itself (a materialised fp32 copy doubles decode memory).
+        cdt = c_cache.dtype
+        wk_b = p["wk_b"]["w"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
+        q_abs = jnp.einsum("bshd,chd->bshc", q_nope, wk_b,
+                           preferred_element_type=jnp.float32)  # (B,1,H,rank)
+        s = (jnp.einsum("bshc,btc->bhst", q_abs.astype(cdt), c_cache,
+                        preferred_element_type=jnp.float32)
+             + jnp.einsum("bshd,btd->bhst", q_rope.astype(cdt), r_cache,
+                          preferred_element_type=jnp.float32)) * scale
+        valid = jnp.arange(W) < n_valid
+        s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1)
+        ctx = jnp.einsum("bhst,btc->bshc", w.astype(cdt), c_cache,
+                         preferred_element_type=jnp.float32)
+        wv_b = p["wv_b"]["w"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+        out = jnp.einsum("bshc,chd->bshd", ctx.astype(jnp.float32),
+                         wv_b.astype(jnp.float32))
+        out = out.astype(x.dtype).reshape(B, S, H * m.v_head_dim)
+        new_cache = {"c_kv": c_cache, "k_rope": r_cache}
+    else:
+        k_nope = layers.dense(p["wk_b"], c_kv).reshape(B, S, H, m.qk_nope_head_dim)
+        v = layers.dense(p["wv_b"], c_kv).reshape(B, S, H, m.v_head_dim)
+        k_rope_b = jnp.broadcast_to(k_rope[:, :, None, :],
+                                    (B, S, H, m.qk_rope_head_dim))
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+        # pad v up to qk_head_dim so blockwise_attention can run one einsum
+        v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0),
+                            (0, m.qk_head_dim - m.v_head_dim)))
+        out = blockwise_attention(q, k, v_pad, causal=True,
+                                  window=cfg.sliding_window, scale=scale,
+                                  block_q=cfg.attn_block_q or 512,
+                                  block_k=cfg.attn_block_k or 512)
+        out = out[..., :m.v_head_dim].reshape(B, S, H * m.v_head_dim)
+        new_cache = None
+        if mode == "prefill":
+            W = min(S, cfg.sliding_window) if cfg.sliding_window else S
+            cc, rc = c_kv[:, S - W:], k_rope[:, S - W:]
+            if cfg.sliding_window and S > W:
+                shift = (S - W) % W          # ring alignment (see gqa_apply)
+                cc = jnp.roll(cc, shift, axis=1)
+                rc = jnp.roll(rc, shift, axis=1)
+            new_cache = {"c_kv": cc, "k_rope": rc}
+    y = layers.dense(p["wo"], out)
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Unified front
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg, dtype):
+    return mla_init(key, cfg, dtype) if cfg.use_mla else gqa_init(key, cfg, dtype)
+
+
+def attn_param_count(cfg) -> int:
+    return mla_param_count(cfg) if cfg.use_mla else gqa_param_count(cfg)
+
+
+def attn_make_cache(cfg, batch: int, max_len: int, dtype):
+    return (mla_make_cache if cfg.use_mla else gqa_make_cache)(
+        cfg, batch, max_len, dtype)
+
+
+def attn_apply(p, cfg, x, positions, *, mode: str, cache=None, cache_len=None):
+    f = mla_apply if cfg.use_mla else gqa_apply
+    return f(p, cfg, x, positions, mode=mode, cache=cache, cache_len=cache_len)

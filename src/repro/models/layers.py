@@ -1,0 +1,146 @@
+"""Primitive layers: dense, norms, embeddings, rotary, MLPs.
+
+Pure-functional style: every module is an (init, apply) pair operating on
+pytrees of jnp arrays.  Params are stored in the config's dtype (bf16 for
+production configs); numerically sensitive reductions run in fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def cdtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, *, bias: bool = False,
+               dtype=jnp.bfloat16, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    w = (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype=jnp.bfloat16):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype=jnp.bfloat16):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+# ---------------------------------------------------------------------------
+
+def pad_vocab(vocab_size: int, multiple: int = 128) -> int:
+    """Pad vocab so the embedding/vocab dim shards cleanly on a 16-way axis."""
+    return int(-(-vocab_size // multiple) * multiple)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.bfloat16):
+    w = (jax.random.normal(key, (pad_vocab(vocab), d), jnp.float32)
+         * 0.02).astype(dtype)
+    return {"w": w}
+
+
+def embed(p, tokens):
+    return jnp.take(p["w"], tokens, axis=0)
+
+
+def unembed(p, x, vocab: int):
+    """Project to (padded) vocab logits; callers mask/crop to true vocab."""
+    logits = x @ p["w"].T
+    return logits[..., :vocab]
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    inv_freq = jnp.asarray(rope_frequencies(d, theta))
+    angles = positions[..., :, None].astype(jnp.float32) * inv_freq  # (...,S,D/2)
+    angles = angles[..., None, :]                                    # (...,S,1,D/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def _act(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+def mlp_init(key, d_model: int, d_ff: int, *, act: str = "silu",
+             dtype=jnp.bfloat16):
+    """act == 'silu' -> gated SwiGLU (3 mats); else plain 2-layer MLP."""
+    ks = jax.random.split(key, 3)
+    if act == "silu":
+        return {"wi": dense_init(ks[0], d_model, d_ff, dtype=dtype),
+                "wg": dense_init(ks[1], d_model, d_ff, dtype=dtype),
+                "wo": dense_init(ks[2], d_ff, d_model, dtype=dtype)}
+    return {"wi": dense_init(ks[0], d_model, d_ff, dtype=dtype),
+            "wo": dense_init(ks[2], d_ff, d_model, dtype=dtype)}
+
+
+def mlp(p, x, *, act: str = "silu"):
+    f = _act(act)
+    if "wg" in p:
+        h = f(dense(p["wi"], x)) * dense(p["wg"], x)
+    else:
+        h = f(dense(p["wi"], x))
+    return dense(p["wo"], h)
+
+
+def mlp_param_count(d_model: int, d_ff: int, act: str = "silu") -> int:
+    return (3 if act == "silu" else 2) * d_model * d_ff

@@ -1,0 +1,238 @@
+"""Mixture-of-experts: top-k router with capacity-based scatter dispatch,
+shared experts (DeepSeek-V2) and dense parallel residual (Arctic).
+
+Dispatch is scatter/gather-based (token -> (expert, slot) buffers) rather than
+one-hot-einsum-based: the (E, C, d) buffers stay small enough to shard the
+expert axis over the 'model' mesh axis (expert parallelism), and the scatter
+lowers to collectives chosen by the SPMD partitioner.  The §Perf pass replaces
+the partitioner's choice with an explicit shard_map all_to_all schedule.
+
+Aux losses: switch-style load-balance loss and router z-loss, returned to the
+caller for accumulation across layers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers
+
+
+def expert_capacity(num_tokens: int, cfg_moe) -> int:
+    """Per-expert buffer slots, from static shapes."""
+    k, E = cfg_moe.experts_per_token, cfg_moe.num_experts
+    cap = int(np.ceil(num_tokens * k / E * cfg_moe.capacity_factor))
+    return max(cap, k)
+
+
+def moe_init(key, cfg, dtype):
+    m = cfg.moe
+    d, f = cfg.d_model, m.d_ff_expert
+    ks = jax.random.split(key, 6)
+
+    def stack(key, d_in, d_out, n):
+        w = (jax.random.normal(key, (n, d_in, d_out), jnp.float32)
+             / np.sqrt(d_in)).astype(dtype)
+        return w
+
+    p = {
+        "router": layers.dense_init(ks[0], d, m.num_experts, dtype=jnp.float32),
+        "wi": stack(ks[1], d, f, m.num_experts),
+        "wg": stack(ks[2], d, f, m.num_experts),
+        "wo": stack(ks[3], f, d, m.num_experts),
+    }
+    if m.num_shared_experts:
+        p["shared"] = layers.mlp_init(ks[4], d, f * m.num_shared_experts,
+                                      act="silu", dtype=dtype)
+    return p
+
+
+def moe_param_count(cfg) -> int:
+    m = cfg.moe
+    d, f = cfg.d_model, m.d_ff_expert
+    n = d * m.num_experts + 3 * m.num_experts * d * f
+    if m.num_shared_experts:
+        n += 3 * d * f * m.num_shared_experts
+    return n
+
+
+def moe_active_param_count(cfg) -> int:
+    """Params touched per token (for 6·N_active·D roofline accounting)."""
+    m = cfg.moe
+    d, f = cfg.d_model, m.d_ff_expert
+    n = d * m.num_experts + 3 * m.experts_per_token * d * f
+    if m.num_shared_experts:
+        n += 3 * d * f * m.num_shared_experts
+    return n
+
+
+def moe_apply(p, cfg, x):
+    """x: (B, S, d) -> (y, aux) with aux = {'lb_loss', 'z_loss', 'router_probs'}."""
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    E, k = m.num_experts, m.experts_per_token
+    C = expert_capacity(T, m)
+
+    xf = x.reshape(T, d)
+    logits = layers.dense(p["router"], xf.astype(jnp.float32))      # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)                          # (T,k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # ---- slot assignment: rank of each (token, slot) inside its expert
+    flat_e = top_e.reshape(T * k)                                    # token-major
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)              # (Tk,E)
+    ranks = jnp.cumsum(onehot, axis=0) * onehot                      # 1-based
+    pos = (ranks.sum(axis=-1) - 1)                                   # (Tk,)
+    keep = pos < C
+    slot_e = jnp.where(keep, flat_e, 0)
+    slot_p = jnp.where(keep, pos, 0)
+
+    tok_id = jnp.repeat(jnp.arange(T), k)
+    gathered = jnp.take(xf, tok_id, axis=0)                          # (Tk,d)
+    gathered = gathered * keep[:, None].astype(xf.dtype)
+
+    buf = jnp.zeros((E, C, d), xf.dtype).at[slot_e, slot_p].add(gathered)
+
+    # ---- expert FFN (einsum over stacked expert weights; E shardable)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["wi"])) * \
+        jnp.einsum("ecd,edf->ecf", buf, p["wg"])
+    out = jnp.einsum("ecf,efd->ecd", h, p["wo"])                     # (E,C,d)
+
+    # ---- combine
+    slots_out = out[slot_e, slot_p]                                  # (Tk,d)
+    w = (top_w.reshape(T * k) * keep).astype(xf.dtype)
+    y = jnp.zeros((T, d), xf.dtype).at[tok_id].add(slots_out * w[:, None])
+
+    if m.num_shared_experts:
+        y = y + layers.mlp(p["shared"], xf, act="silu")
+
+    # ---- aux losses (fp32)
+    me = probs.mean(axis=0)                                          # (E,)
+    ce = jax.nn.one_hot(top_e, E, dtype=jnp.float32).sum(axis=(0, 1)) / (T * k)
+    lb_loss = E * jnp.sum(me * ce)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    aux = {"lb_loss": lb_loss, "z_loss": z_loss,
+           "expert_load": jax.lax.stop_gradient(ce)}
+    return y.reshape(B, S, d), aux
+
+
+def moe_apply_ep(p, cfg, x):
+    """Expert-parallel MoE via shard_map (the §Perf alternative to the
+    GSPMD-partitioned scatter of moe_apply).
+
+    Layout insight: activations are batch-sharded over (pod, data) and
+    REPLICATED over 'model', while experts are sharded over 'model' — so no
+    dispatch collective is needed at all.  Each device routes its local
+    tokens, keeps only the slots destined for its OWN E/16 experts, runs
+    them, scatters back into a local (T_loc, d) partial, and a single
+    psum over 'model' combines the k expert contributions per token.
+    Comm per layer = one (T_loc, d) all-reduce instead of the partitioner's
+    gather/scatter storm (measured ~100 GB/layer/device on deepseek-v2;
+    EXPERIMENTS.md §Perf iteration 5).
+
+    Falls back to moe_apply when no mesh with a 'model' axis is active.
+    """
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh.empty or "model" not in mesh.axis_names:
+        return moe_apply(p, cfg, x)
+    from jax.sharding import PartitionSpec as P
+    batch_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    m = cfg.moe
+    B, S, d = x.shape
+    E, k = m.num_experts, m.experts_per_token
+    msize = mesh.shape["model"]
+    assert E % msize == 0
+    e_loc = E // msize
+
+    def local_fn(xf, router, wi, wg, wo):
+        # xf (T_loc, d); router (d, E); wi/wg (e_loc, d, f); wo (e_loc, f, d)
+        T_loc = xf.shape[0]
+        C = expert_capacity(T_loc, m)
+        logits = xf.astype(jnp.float32) @ router
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_w, top_e = jax.lax.top_k(probs, k)
+        top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+        my_shard = jax.lax.axis_index("model")
+        flat_e = top_e.reshape(T_loc * k)
+        mine = (flat_e // e_loc) == my_shard
+        loc_e = jnp.where(mine, flat_e % e_loc, 0)
+        onehot = jax.nn.one_hot(loc_e, e_loc, dtype=jnp.int32) \
+            * mine[:, None].astype(jnp.int32)
+        pos = (jnp.cumsum(onehot, axis=0) * onehot).sum(-1) - 1
+        keep = mine & (pos >= 0) & (pos < C)
+        slot_e = jnp.where(keep, loc_e, 0)
+        slot_p = jnp.where(keep, pos, 0)
+        tok_id = jnp.repeat(jnp.arange(T_loc), k)
+        gathered = jnp.take(xf, tok_id, axis=0) \
+            * keep[:, None].astype(xf.dtype)
+        buf = jnp.zeros((e_loc, C, d), xf.dtype).at[slot_e, slot_p] \
+            .add(gathered)
+
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wi)) * \
+            jnp.einsum("ecd,edf->ecf", buf, wg)
+        out = jnp.einsum("ecf,efd->ecd", h, wo)
+
+        slots_out = out[slot_e, slot_p]
+        w = (top_w.reshape(T_loc * k) * keep).astype(xf.dtype)
+        y = jnp.zeros((T_loc, d), xf.dtype).at[tok_id] \
+            .add(slots_out * w[:, None])
+        y = jax.lax.psum(y, "model")                  # combine k experts
+
+        me = probs.mean(axis=0)
+        ce = jax.nn.one_hot(top_e, E, dtype=jnp.float32) \
+            .sum(axis=(0, 1)) / (T_loc * k)
+        lb = E * jnp.sum(me * ce)
+        z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+        # aux stats differ per batch shard: emit them with a sharded leading
+        # dim and average OUTSIDE the shard_map (pmean-inside trips a jax
+        # psum_invariant issue on meshes with extra axes, e.g. INL's client)
+        return y, lb[None], z[None], jax.lax.stop_gradient(ce)[None]
+
+    xf = x.reshape(B * S, d)
+    spec_tok = P(batch_axes or None, None)
+    aux_spec = P(batch_axes or None)
+    y, lb, z, ce = jax.shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(spec_tok, P(None, None), P("model", None, None),
+                  P("model", None, None), P("model", None, None)),
+        out_specs=(spec_tok, aux_spec, aux_spec,
+                   P(batch_axes or None, None)),
+    )(xf, p["router"]["w"], p["wi"], p["wg"], p["wo"])
+    y = y.reshape(B, S, d)
+    if m.num_shared_experts:
+        y = y + layers.mlp(p["shared"], x.reshape(B, S, d), act="silu")
+    aux = {"lb_loss": lb.mean(), "z_loss": z.mean(),
+           "expert_load": ce.mean(axis=0)}
+    return y, aux
+
+
+def moe_decode_apply(p, cfg, x):
+    """Decode-friendly MoE: with one token per sequence, skip buffers and use
+    a dense gather of the k selected experts per token (k small)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    xf = x.reshape(T, d)
+    logits = layers.dense(p["router"], xf.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, m.experts_per_token)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    wi = jnp.take(p["wi"], top_e, axis=0)                            # (T,k,d,f)
+    wg = jnp.take(p["wg"], top_e, axis=0)
+    wo = jnp.take(p["wo"], top_e, axis=0)
+    h = jax.nn.silu(jnp.einsum("td,tkdf->tkf", xf, wi)) * \
+        jnp.einsum("td,tkdf->tkf", xf, wg)
+    out = jnp.einsum("tkf,tkfd->tkd", h, wo)
+    y = jnp.einsum("tkd,tk->td", out, top_w.astype(out.dtype))
+    if m.num_shared_experts:
+        y = y + layers.mlp(p["shared"], xf, act="silu")
+    aux = {"lb_loss": jnp.zeros((), jnp.float32),
+           "z_loss": jnp.zeros((), jnp.float32),
+           "expert_load": jnp.zeros((m.num_experts,), jnp.float32)}
+    return y.reshape(B, S, d), aux

@@ -1,0 +1,281 @@
+"""Model zoo: full-model init/apply for every assigned architecture.
+
+API
+---
+  init_params(cfg, key)                     -> params pytree
+  forward(params, cfg, batch, mode, cache)  -> (logits, new_cache, aux)
+  make_cache(cfg, batch_size, max_len)      -> cache pytree
+  loss_and_metrics(params, cfg, batch)      -> (loss, metrics)
+  param_count(cfg, active_only=False)       -> analytic N
+  input_specs(cfg, shape_cfg)               -> {name: ShapeDtypeStruct}
+
+Batch dict keys (all optional except labels in train mode):
+  tokens        (B, S) int32           text / code token ids
+  tokens_mc     (B, S, K) int32        audio: K parallel codebook streams
+  input_embeds  (B, S, d)              audio stub frontend: frame embeddings
+  patch_embeds  (B, P, d)              vlm stub frontend: patch embeddings
+  labels        (B, S) or (B, S, K)    next-token targets, -1 = ignore
+  cache_len     () int32               decode: #valid cache entries
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers, transformer
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def init_params(cfg, key):
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    p = {"stack": transformer.stack_init(ks[0], cfg, dtype),
+         "final_norm": layers.rmsnorm_init(cfg.d_model, dtype)}
+    if cfg.modality == "audio_tokens":
+        # K codebook embedding tables, stored as one (K*Vpad, d) table.
+        vpad = layers.pad_vocab(cfg.vocab_size)
+        w = (jax.random.normal(ks[1], (cfg.num_codebooks * vpad, cfg.d_model),
+                               jnp.float32) * 0.02).astype(dtype)
+        p["embed"] = {"w": w}
+        p["heads"] = layers.dense_init(ks[2], cfg.d_model,
+                                       cfg.num_codebooks * vpad, dtype=dtype)
+    else:
+        p["embed"] = layers.embed_init(ks[1], cfg.vocab_size, cfg.d_model,
+                                       dtype)
+        if not cfg.tie_embeddings:
+            p["unembed"] = layers.dense_init(
+                ks[2], cfg.d_model, layers.pad_vocab(cfg.vocab_size),
+                dtype=dtype)
+    return p
+
+
+def param_count(cfg, active_only: bool = False) -> int:
+    """Analytic parameter count (matches init_params; verified in tests)."""
+    from repro.models import moe as moe_mod
+    n = transformer.stack_param_count(cfg) + cfg.d_model
+    if active_only and cfg.is_moe:
+        pat = transformer.block_pattern(cfg)
+        nper = transformer.num_periods(cfg)
+        n_moe_layers = nper * sum(1 for k in pat if k == "attn")
+        n -= n_moe_layers * (moe_mod.moe_param_count(cfg)
+                             - moe_mod.moe_active_param_count(cfg))
+    vpad = layers.pad_vocab(cfg.vocab_size)
+    if cfg.modality == "audio_tokens":
+        n += 2 * cfg.num_codebooks * vpad * cfg.d_model
+    else:
+        n += vpad * cfg.d_model
+        if not cfg.tie_embeddings:
+            n += vpad * cfg.d_model
+    return n
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(p, cfg, batch):
+    """Returns (h, positions).  Handles text / audio / vlm input plumbing."""
+    dtype = jnp.dtype(cfg.dtype)
+    if cfg.modality == "audio_tokens":
+        if "input_embeds" in batch:           # stub EnCodec frontend output
+            h = batch["input_embeds"].astype(dtype)
+        else:
+            vpad = layers.pad_vocab(cfg.vocab_size)
+            toks = batch["tokens_mc"]         # (B,S,K)
+            offs = jnp.arange(cfg.num_codebooks, dtype=jnp.int32) * vpad
+            h = jnp.take(p["embed"]["w"], toks + offs, axis=0).sum(axis=2)
+    elif cfg.modality == "vlm" and "patch_embeds" in batch:
+        txt = layers.embed(p["embed"], batch["tokens"])
+        h = jnp.concatenate([batch["patch_embeds"].astype(dtype), txt], axis=1)
+    else:
+        h = layers.embed(p["embed"], batch["tokens"])
+    B, S = h.shape[0], h.shape[1]
+    if "cache_len" in batch:                  # decode: absolute positions
+        positions = jnp.broadcast_to(batch["cache_len"], (B, S))
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    return h, positions
+
+
+def _project_out(p, cfg, h):
+    if cfg.modality == "audio_tokens":
+        vpad = layers.pad_vocab(cfg.vocab_size)
+        logits = layers.dense(p["heads"], h)
+        B, S = h.shape[0], h.shape[1]
+        logits = logits.reshape(B, S, cfg.num_codebooks, vpad)
+        return logits[..., :cfg.vocab_size]
+    if cfg.tie_embeddings:
+        return layers.unembed(p["embed"], h, cfg.vocab_size)
+    return layers.dense(p["unembed"], h)[..., :cfg.vocab_size]
+
+
+def forward(params, cfg, batch, *, mode: str = "train", cache=None,
+            logits_positions: str = "all"):
+    """Returns (logits, new_cache, aux).  logits_positions='last' projects
+    only the final position — at 32k prefill the full (B, S, vocab) logits
+    tensor is ~67 GB/device (measured), and XLA does not reliably push the
+    downstream slice through the projection."""
+    h, positions = _embed_inputs(params, cfg, batch)
+    cache_len = batch.get("cache_len")
+    h, new_cache, aux = transformer.stack_apply(
+        params["stack"], cfg, h, positions, mode=mode, cache=cache,
+        cache_len=cache_len)
+    h = layers.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    if logits_positions == "last":
+        h = h[:, -1:]
+    logits = _project_out(params, cfg, h)
+    return logits, new_cache, aux
+
+
+def make_cache(cfg, batch_size: int, max_len: int):
+    dtype = jnp.dtype(cfg.dtype)
+    return transformer.stack_make_cache(cfg, batch_size, max_len, dtype)
+
+
+_CACHE_TIME_AXIS = {"k": -3, "v": -3, "c_kv": -2, "k_rope": -2}
+
+
+def pad_cache(cache, extra: int):
+    """Grow every attention cache's time axis by `extra` zero slots (e.g. after
+    prefill, to make room for generated tokens).  SSM states are untouched."""
+    def pad_leaf(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else None
+        ax = _CACHE_TIME_AXIS.get(name)
+        if ax is None:
+            return leaf
+        widths = [(0, 0)] * leaf.ndim
+        widths[ax % leaf.ndim] = (0, extra)
+        return jnp.pad(leaf, widths)
+    return jax.tree_util.tree_map_with_path(pad_leaf, cache)
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def softmax_xent(logits, labels, ignore: int = -1):
+    """Mean CE over non-ignored labels, fp32.  labels broadcast to logits[:-1]."""
+    mask = (labels != ignore).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    return -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+CE_CHUNK = 512
+
+
+def chunked_xent(params, cfg, h, labels, *, chunk: int = CE_CHUNK):
+    """Sequence-chunked projection + CE: the (B, S, vocab) fp32 logits tensor
+    is never materialised — each (B, chunk, vocab) tile is projected, reduced
+    and (via jax.checkpoint) recomputed in the backward pass.  At 128k vocab
+    and 1M tokens the unchunked logits alone are ~0.5 TB fp32 (measured;
+    EXPERIMENTS.md §Perf) — this is the fused-CE analogue."""
+    B, S = h.shape[0], h.shape[1]
+    chunk = min(chunk, S)
+    nch = -(-S // chunk)
+    pad = nch * chunk - S
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad)) + ((0, 0),) * (h.ndim - 2))
+        labels = jnp.pad(labels, ((0, 0), (0, pad))
+                         + ((0, 0),) * (labels.ndim - 2),
+                         constant_values=-1)
+
+    hb = jnp.moveaxis(h.reshape(B, nch, chunk, -1), 1, 0)
+    lb = jnp.moveaxis(labels.reshape((B, nch, chunk) + labels.shape[2:]), 1, 0)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        nll_sum, cnt = carry
+        h_c, lab_c = inp
+        logits = _project_out(params, cfg, h_c)
+        mask = (lab_c != -1).astype(jnp.float32)
+        safe = jnp.maximum(lab_c, 0)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        ll = jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+        return (nll_sum - (ll * mask).sum(), cnt + mask.sum()), None
+
+    (nll, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hb, lb))
+    return nll / jnp.maximum(cnt, 1.0)
+
+
+def loss_and_metrics(params, cfg, batch, *, mode: str = "train"):
+    labels = batch["labels"]
+    h, positions = _embed_inputs(params, cfg, batch)
+    cache_len = batch.get("cache_len")
+    h, _, aux = transformer.stack_apply(
+        params["stack"], cfg, h, positions, mode=mode, cache=None,
+        cache_len=cache_len)
+    h = layers.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    ce = chunked_xent(params, cfg, h, labels,
+                      chunk=cfg.ce_chunk or CE_CHUNK)
+    loss = ce
+    metrics = {"ce": ce}
+    if cfg.is_moe:
+        loss = loss + cfg.moe.router_aux_weight * aux["lb_loss"] \
+                    + cfg.moe.router_z_weight * aux["z_loss"]
+        metrics.update(lb_loss=aux["lb_loss"], z_loss=aux["z_loss"])
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg, shape_cfg):
+    """Batch spec for (cfg, shape).  Decode shapes describe ONE new token; the
+    KV cache spec comes from cache_specs()."""
+    B, S = shape_cfg.global_batch, shape_cfg.seq_len
+    i32 = jnp.int32
+    dt = jnp.dtype(cfg.dtype)
+    sds = jax.ShapeDtypeStruct
+    if shape_cfg.mode in ("train", "prefill"):
+        if cfg.modality == "audio_tokens":
+            return {"input_embeds": sds((B, S, cfg.d_model), dt),
+                    "labels": sds((B, S, cfg.num_codebooks), i32)}
+        if cfg.modality == "vlm":
+            P = cfg.num_prefix_tokens
+            return {"patch_embeds": sds((B, P, cfg.d_model), dt),
+                    "tokens": sds((B, S - P), i32),
+                    "labels": sds((B, S), i32)}
+        return {"tokens": sds((B, S), i32), "labels": sds((B, S), i32)}
+    # decode: one token against a cache of S entries
+    if cfg.modality == "audio_tokens":
+        return {"tokens_mc": sds((B, 1, cfg.num_codebooks), i32),
+                "cache_len": sds((), i32)}
+    return {"tokens": sds((B, 1), i32), "cache_len": sds((), i32)}
+
+
+def cache_specs(cfg, shape_cfg):
+    """ShapeDtypeStructs for the decode cache (shape only, no allocation)."""
+    cache = jax.eval_shape(
+        lambda: make_cache(cfg, shape_cfg.global_batch, shape_cfg.seq_len))
+    return cache
+
+
+def dummy_batch(cfg, shape_cfg, key=None):
+    """Materialised batch for smoke tests / examples (small configs only)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    specs = input_specs(cfg, shape_cfg)
+    out = {}
+    for name, spec in specs.items():
+        key, sub = jax.random.split(key)
+        if spec.dtype == jnp.int32:
+            if name == "cache_len":
+                out[name] = jnp.asarray(shape_cfg.seq_len - 1, jnp.int32)
+            else:
+                out[name] = jax.random.randint(sub, spec.shape, 0,
+                                               cfg.vocab_size, jnp.int32)
+        else:
+            out[name] = jax.random.normal(sub, spec.shape, jnp.float32) \
+                .astype(spec.dtype)
+    return out

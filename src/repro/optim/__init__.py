@@ -1,0 +1,166 @@
+"""Optimizers (pure pytree transforms, optax-style but self-contained):
+SGD(+momentum), Adam, AdamW with decoupled weight decay, global-norm clipping,
+and LR schedules.  Mixed precision: if params are low-precision (bf16), the
+optimizer keeps an fp32 master copy in its state and casts on update.
+
+ZeRO-1: optimizer state tensors inherit the *sharded* layout assigned by the
+launcher via shard_optimizer_state() — m/v/master are sharded over the
+('pod','data') axes regardless of param layout.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable      # (grads, state, params, step) -> (new_params, new_state)
+
+
+def _tree_zeros_like(tree, dtype=jnp.float32):
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, dtype), tree)
+
+
+def global_norm(tree):
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+def constant_schedule(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine_schedule(peak_lr: float, warmup_steps: int, total_steps: int,
+                           final_frac: float = 0.1):
+    def sched(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else \
+            jnp.asarray(step, jnp.float32)
+        warm = step / max(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps)
+                        / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(np.pi * prog))
+        return peak_lr * jnp.where(step < warmup_steps, warm, cos)
+    return sched
+
+
+def linear_schedule(peak_lr: float, warmup_steps: int, total_steps: int):
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = step / max(warmup_steps, 1)
+        decay = jnp.clip(1.0 - (step - warmup_steps)
+                         / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        return peak_lr * jnp.where(step < warmup_steps, warm, decay)
+    return sched
+
+
+def _as_schedule(lr):
+    return lr if callable(lr) else constant_schedule(lr)
+
+
+# ---------------------------------------------------------------------------
+# SGD
+# ---------------------------------------------------------------------------
+
+def sgd(lr, momentum: float = 0.0, clip_norm: Optional[float] = None):
+    sched = _as_schedule(lr)
+
+    def init(params):
+        state = {"step": jnp.zeros((), jnp.int32)}
+        if momentum:
+            state["mom"] = _tree_zeros_like(params)
+        return state
+
+    def update(grads, state, params, step=None):
+        if clip_norm:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        step = state["step"]
+        lr_t = sched(step)
+        new_state = {"step": step + 1}
+        if momentum:
+            mom = jax.tree.map(
+                lambda m, g: momentum * m + g.astype(jnp.float32),
+                state["mom"], grads)
+            new_state["mom"] = mom
+            upd = mom
+        else:
+            upd = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        new_params = jax.tree.map(
+            lambda p, u: (p.astype(jnp.float32) - lr_t * u).astype(p.dtype),
+            params, upd)
+        return new_params, new_state
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adam / AdamW (with fp32 master weights when params are low-precision)
+# ---------------------------------------------------------------------------
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0, clip_norm: Optional[float] = 1.0,
+          keep_master: bool = True):
+    sched = _as_schedule(lr)
+
+    def _needs_master(params):
+        return keep_master and any(
+            x.dtype != jnp.float32 for x in jax.tree.leaves(params))
+
+    def init(params):
+        state = {"step": jnp.zeros((), jnp.int32),
+                 "m": _tree_zeros_like(params),
+                 "v": _tree_zeros_like(params)}
+        if _needs_master(params):
+            state["master"] = jax.tree.map(
+                lambda x: x.astype(jnp.float32), params)
+        return state
+
+    def update(grads, state, params, step=None):
+        if clip_norm:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        step = state["step"] + 1
+        lr_t = sched(step)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) *
+                         g.astype(jnp.float32), state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) *
+                         jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        base = state.get("master", params)
+
+        def upd(p, m_, v_):
+            mh = m_ / bc1
+            vh = v_ / bc2
+            step_ = mh / (jnp.sqrt(vh) + eps)
+            if weight_decay:
+                step_ = step_ + weight_decay * p.astype(jnp.float32)
+            return p.astype(jnp.float32) - lr_t * step_
+
+        new_master = jax.tree.map(upd, base, m, v)
+        new_params = jax.tree.map(lambda nm, p: nm.astype(p.dtype),
+                                  new_master, params)
+        new_state = {"step": step, "m": m, "v": v}
+        if "master" in state:
+            new_state["master"] = new_master
+        return new_params, new_state
+
+    return Optimizer(init, update)
+
+
+def adam(lr, **kw):
+    return adamw(lr, weight_decay=0.0, **kw)

@@ -1,0 +1,2 @@
+from repro.roofline.analysis import (HW, analyze, collective_bytes,  # noqa
+                                     model_flops, roofline_terms)

@@ -1,0 +1,148 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), all in seconds:
+
+    compute    = HLO_FLOPs      / (chips * PEAK_FLOPS)
+    memory     = HLO_bytes      / (chips * HBM_BW)
+    collective = coll_bytes     / (chips * ICI_BW)
+
+HLO_FLOPs / HLO_bytes come from compiled.cost_analysis(); collective bytes
+are parsed out of the post-SPMD HLO text (cost_analysis does not expose
+them).  cost_analysis counts a lax.scan body ONCE (verified empirically), so
+the launcher lowers 1-period and 2-period UNROLLED variants to solve
+
+    cost(k periods) = fixed + k * body   =>   total = fixed + n_periods * body
+
+and the same compensation applies to collective bytes.  Known residual
+undercount: recurrences *inside* a block (xLSTM time scans, the SSD
+inter-chunk scan) stay counted once; they are <10% of block FLOPs for the
+assigned configs (dominated by projections) — cross-checked against the
+analytic 6ND MODEL_FLOPS column.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Dict
+
+# ---------------------------------------------------------------------------
+# Hardware constants — TPU v5e (target platform)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Hardware:
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12        # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9             # bytes/s per chip
+    ici_bw: float = 50e9              # bytes/s per link
+    hbm_bytes: float = 16e9           # capacity per chip
+
+
+HW = Hardware()
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute", "ragged-all-to-all")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_LINE_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?)\s+"
+    r"(" + "|".join(_COLL_OPS) + r")(-start)?\(")
+
+
+def _shape_bytes(segment: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(segment):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum output-shape bytes per collective op kind in a post-SPMD module.
+    '-done' ops are skipped (the '-start' already carries the shape)."""
+    out: Dict[str, float] = {k: 0.0 for k in _COLL_OPS}
+    out["total"] = 0.0
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        b = _shape_bytes(m.group(1))
+        out[m.group(2)] += b
+        out["total"] += b
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Analytic model FLOPs
+# ---------------------------------------------------------------------------
+
+def model_flops(cfg, shape_cfg) -> float:
+    """6*N*D (train), 2*N*D (prefill), 2*N*B (decode); N = active params."""
+    from repro.models import zoo
+    n_active = zoo.param_count(cfg, active_only=True)
+    if shape_cfg.mode == "train":
+        tokens = shape_cfg.global_batch * shape_cfg.seq_len
+        return 6.0 * n_active * tokens
+    if shape_cfg.mode == "prefill":
+        tokens = shape_cfg.global_batch * shape_cfg.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape_cfg.global_batch      # decode: 1 token/seq
+
+
+# ---------------------------------------------------------------------------
+# The three terms
+# ---------------------------------------------------------------------------
+
+def roofline_terms(flops: float, hbm_bytes: float, coll_bytes: float,
+                   chips: int, hw: Hardware = HW) -> Dict[str, float]:
+    compute = flops / (chips * hw.peak_flops)
+    memory = hbm_bytes / (chips * hw.hbm_bw)
+    collective = coll_bytes / (chips * hw.ici_bw)
+    dominant = max(("compute", compute), ("memory", memory),
+                   ("collective", collective), key=lambda kv: kv[1])[0]
+    return {"compute_s": compute, "memory_s": memory,
+            "collective_s": collective, "dominant": dominant}
+
+
+_SUGGESTIONS = {
+    "compute": ("shard the replicated attention heads (sequence/context "
+                "parallelism) or cut recompute from remat to reduce HLO "
+                "FLOPs toward the 6ND model floor"),
+    "memory": ("reduce activation residency: flash custom-VJP instead of "
+               "AD-through-scan, fp8/bf16 intermediates, or larger "
+               "microbatching to raise arithmetic intensity"),
+    "collective": ("overlap or restructure collectives: all-to-all expert "
+                   "dispatch via shard_map, reduce-scatter+all-gather "
+                   "(ZeRO) instead of all-reduce, INL-style bottleneck "
+                   "compression of cross-boundary activations"),
+}
+
+
+def analyze(record: dict, cfg, shape_cfg, chips: int,
+            hw: Hardware = HW) -> dict:
+    """record: {'flops', 'hbm_bytes', 'coll_bytes'} (scan-compensated)."""
+    terms = roofline_terms(record["flops"], record["hbm_bytes"],
+                           record["coll_bytes"], chips, hw)
+    mf = model_flops(cfg, shape_cfg)
+    terms["model_flops"] = mf
+    terms["hlo_flops"] = record["flops"]
+    terms["useful_flop_ratio"] = mf / record["flops"] if record["flops"] else 0.0
+    terms["suggestion"] = _SUGGESTIONS[terms["dominant"]]
+    return terms

@@ -1,0 +1,14 @@
+"""Shared test fixtures.  NOTE: no XLA_FLAGS here — smoke tests must see the
+real 1-CPU environment (only launch/dryrun.py may request 512 placeholder
+devices, in its own process)."""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration test")

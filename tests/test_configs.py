@@ -1,0 +1,85 @@
+"""The assigned architectures must match the assignment sheet exactly."""
+import pytest
+
+from repro.configs import get_config, get_smoke_config, list_archs
+
+ASSIGNED = {
+    # name: (L, d_model, H, kv, d_ff, vocab)
+    "xlstm-125m": (12, 768, 4, 4, 0, 50_304),
+    "qwen1.5-4b": (40, 2560, 20, 20, 6912, 151_936),
+    "arctic-480b": (35, 7168, 56, 8, 4864, 32_000),
+    "llama3.2-1b": (16, 2048, 32, 8, 8192, 128_256),
+    "musicgen-medium": (48, 1536, 24, 24, 6144, 2048),
+    "internvl2-2b": (24, 2048, 16, 8, 8192, 92_553),
+    "starcoder2-3b": (30, 3072, 24, 2, 12_288, 49_152),
+    "deepseek-v2-236b": (60, 5120, 128, 128, 12_288, 102_400),
+    "codeqwen1.5-7b": (32, 4096, 32, 32, 13_440, 92_416),
+    "zamba2-2.7b": (54, 2560, 32, 32, 10_240, 32_000),
+}
+
+
+def test_all_archs_registered():
+    assert sorted(list_archs()) == sorted(ASSIGNED)
+
+
+@pytest.mark.parametrize("name", sorted(ASSIGNED))
+def test_assigned_numbers(name):
+    L, d, H, kv, dff, vocab = ASSIGNED[name]
+    cfg = get_config(name)
+    assert cfg.num_layers == L
+    assert cfg.d_model == d
+    assert cfg.num_heads == H
+    assert cfg.num_kv_heads == kv
+    assert cfg.d_ff == dff or (name == "xlstm-125m" and cfg.d_ff == 0) \
+        or (name == "deepseek-v2-236b")
+    assert cfg.vocab_size == vocab
+
+
+def test_moe_specs():
+    arctic = get_config("arctic-480b")
+    assert arctic.moe.num_experts == 128
+    assert arctic.moe.experts_per_token == 2
+    assert arctic.moe.dense_residual
+    ds = get_config("deepseek-v2-236b")
+    assert ds.moe.num_experts == 160
+    assert ds.moe.experts_per_token == 6
+    assert ds.moe.num_shared_experts == 2
+    assert ds.moe.d_ff_expert == 1536
+    assert ds.use_mla and ds.mla.kv_lora_rank == 512
+
+
+def test_ssm_specs():
+    z = get_config("zamba2-2.7b")
+    assert z.ssm.state_dim == 64
+    assert "mamba+shared_attn" in z.block_pattern
+    x = get_config("xlstm-125m")
+    assert {"mlstm", "slstm"} <= set(x.block_pattern)
+
+
+@pytest.mark.parametrize("name", sorted(ASSIGNED))
+def test_smoke_configs_reduced(name):
+    cfg = get_smoke_config(name)
+    assert cfg.num_layers <= 4
+    assert cfg.d_model <= 512
+    assert cfg.moe.num_experts <= 4
+
+
+@pytest.mark.parametrize("name", sorted(ASSIGNED))
+def test_param_counts_sane(name):
+    """Analytic N within the ballpark implied by the arch's marketing size."""
+    cfg = get_config(name)
+    n = cfg.param_count()
+    expect = {"xlstm-125m": 125e6, "qwen1.5-4b": 4e9, "arctic-480b": 480e9,
+              "llama3.2-1b": 1.2e9, "musicgen-medium": 1.5e9,
+              "internvl2-2b": 2e9, "starcoder2-3b": 3e9,
+              "deepseek-v2-236b": 236e9, "codeqwen1.5-7b": 7e9,
+              "zamba2-2.7b": 2.7e9}[name]
+    assert 0.4 * expect < n < 2.2 * expect, f"{name}: N={n:.3e}"
+
+
+def test_inl_eq5_widths():
+    """Eq. (5): sum of bottleneck widths == decoder input width (== d_model
+    by our convention)."""
+    for name in sorted(ASSIGNED):
+        cfg = get_config(name)
+        assert cfg.inl.num_nodes * cfg.inl.d_bottleneck == cfg.d_model, name

@@ -1,0 +1,103 @@
+"""Serving-path correctness: prefill -> decode must reproduce the full
+forward, including ring-buffer sliding windows and MoE serving paths."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_smoke_config, list_archs
+from repro.models import zoo
+
+S = 32
+
+
+def _cfg(name, **kw):
+    cfg = get_smoke_config(name)
+    cfg = dataclasses.replace(cfg, dtype="float32", **kw)
+    # capacity routing is length-dependent; use a no-drop factor for exact
+    # train/serve agreement (see test_moe.py for the dropping property)
+    return dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+
+
+def _batches(cfg, key):
+    if cfg.modality == "audio_tokens":
+        toks = jax.random.randint(key, (2, S, cfg.num_codebooks), 0,
+                                  cfg.vocab_size)
+        return ({"tokens_mc": toks}, {"tokens_mc": toks[:, :S - 1]},
+                {"tokens_mc": toks[:, S - 1:S],
+                 "cache_len": jnp.asarray(S - 1)})
+    if cfg.modality == "vlm":
+        P = cfg.num_prefix_tokens
+        pe = jax.random.normal(key, (2, P, cfg.d_model))
+        toks = jax.random.randint(key, (2, S - P), 0, cfg.vocab_size)
+        return ({"patch_embeds": pe, "tokens": toks},
+                {"patch_embeds": pe, "tokens": toks[:, :-1]},
+                {"tokens": toks[:, -1:], "cache_len": jnp.asarray(S - 1)})
+    toks = jax.random.randint(key, (2, S), 0, cfg.vocab_size)
+    return ({"tokens": toks}, {"tokens": toks[:, :S - 1]},
+            {"tokens": toks[:, S - 1:S], "cache_len": jnp.asarray(S - 1)})
+
+
+def _check(cfg, tol=1e-3):
+    params = zoo.init_params(cfg, jax.random.PRNGKey(0))
+    full, pre, dec = _batches(cfg, jax.random.PRNGKey(1))
+    lt, _, _ = zoo.forward(params, cfg, full, mode="train")
+    _, cache, _ = zoo.forward(params, cfg, pre, mode="prefill")
+    if not cfg.sliding_window or cfg.sliding_window >= S:
+        cache = zoo.pad_cache(cache, 1)
+    ld, _, _ = zoo.forward(params, cfg, dec, mode="decode", cache=cache)
+    err = float(jnp.max(jnp.abs(ld[:, 0] - lt[:, -1])))
+    assert err < tol, f"{cfg.name}: decode mismatch {err}"
+
+
+@pytest.mark.parametrize("name", sorted(list_archs()))
+def test_prefill_decode_consistency(name):
+    _check(_cfg(name))
+
+
+@pytest.mark.parametrize("window", [8, 16, 33])
+def test_sliding_window_ring_buffer(window):
+    _check(_cfg("llama3.2-1b", sliding_window=window))
+
+
+def test_mla_sliding_window():
+    _check(_cfg("deepseek-v2-236b", sliding_window=8))
+
+
+def test_multi_step_decode_matches_teacher_forcing():
+    """Decode 4 tokens sequentially; logits must match the full forward at
+    each position."""
+    cfg = _cfg("llama3.2-1b")
+    params = zoo.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, S), 0,
+                              cfg.vocab_size)
+    lt, _, _ = zoo.forward(params, cfg, {"tokens": toks}, mode="train")
+    P = S - 4
+    _, cache, _ = zoo.forward(params, cfg, {"tokens": toks[:, :P]},
+                              mode="prefill")
+    cache = zoo.pad_cache(cache, 4)
+    for t in range(4):
+        ld, cache, _ = zoo.forward(
+            params, cfg, {"tokens": toks[:, P + t:P + t + 1],
+                          "cache_len": jnp.asarray(P + t)},
+            mode="decode", cache=cache)
+        err = float(jnp.max(jnp.abs(ld[:, 0] - lt[:, P + t])))
+        assert err < 1e-3, f"step {t}: {err}"
+
+
+def test_ssm_decode_state_carries():
+    """SSM decode state must evolve (not be recreated) across steps."""
+    cfg = _cfg("zamba2-2.7b")
+    params = zoo.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                              cfg.vocab_size)
+    _, cache, _ = zoo.forward(params, cfg, {"tokens": toks}, mode="prefill")
+    cache1 = zoo.pad_cache(cache, 1)
+    _, cache2, _ = zoo.forward(
+        params, cfg, {"tokens": toks[:, :1], "cache_len": jnp.asarray(8)},
+        mode="decode", cache=cache1)
+    ssm_before = jax.tree.leaves(cache1["pattern"][0])[0]
+    ssm_after = jax.tree.leaves(cache2["pattern"][0])[0]
+    assert float(jnp.max(jnp.abs(ssm_before - ssm_after))) > 0

@@ -1,0 +1,71 @@
+"""INL applied to the assigned LLM architectures (core/inl_llm)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import optim
+from repro.configs import get_smoke_config
+from repro.core import inl_llm
+from repro.models import transformer
+
+
+def _cfg(name):
+    cfg = dataclasses.replace(get_smoke_config(name), dtype="float32")
+    pat = transformer.block_pattern(cfg)
+    need = (cfg.inl.encoder_layers + 1) * len(pat) + cfg.moe.first_dense_layers
+    if cfg.num_layers < need:
+        cfg = dataclasses.replace(cfg, num_layers=need)
+    return cfg
+
+
+@pytest.mark.parametrize("name", ["llama3.2-1b", "zamba2-2.7b",
+                                  "deepseek-v2-236b"])
+def test_inl_llm_loss_finite(name):
+    cfg = _cfg(name)
+    params = inl_llm.init(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 32
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                          cfg.vocab_size),
+             "labels": jax.random.randint(jax.random.PRNGKey(2), (B, S), 0,
+                                          cfg.vocab_size)}
+    loss, metrics = inl_llm.loss_fn(params, cfg, batch, jax.random.PRNGKey(3))
+    assert bool(jnp.isfinite(loss))
+    assert metrics["bits_per_token"] == 2 * cfg.inl.num_nodes \
+        * cfg.inl.d_bottleneck * cfg.inl.link_bits
+
+
+def test_inl_llm_eq5_decoder_width():
+    cfg = _cfg("llama3.2-1b")
+    params = inl_llm.init(cfg, jax.random.PRNGKey(0))
+    w = params.decoder["in_proj"]["w"]
+    assert w.shape[0] == cfg.inl.num_nodes * cfg.inl.d_bottleneck
+
+
+def test_inl_llm_train_step_updates():
+    cfg = _cfg("llama3.2-1b")
+    params = inl_llm.init(cfg, jax.random.PRNGKey(0))
+    opt = optim.adam(1e-3)
+    opt_state = opt.init(params)
+    step = jax.jit(inl_llm.make_train_step(cfg, opt))
+    B, S = 2, 32
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                          cfg.vocab_size),
+             "labels": jax.random.randint(jax.random.PRNGKey(2), (B, S), 0,
+                                          cfg.vocab_size)}
+    p2, _, m = step(params, opt_state, batch, jax.random.PRNGKey(4))
+    assert bool(jnp.isfinite(m["loss"]))
+    delta = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(
+        a.astype(jnp.float32) - b.astype(jnp.float32)))), params, p2)
+    assert max(jax.tree.leaves(delta)) > 0
+
+
+def test_encoder_decoder_layer_split():
+    cfg = _cfg("zamba2-2.7b")
+    e, d = inl_llm.encoder_cfg(cfg), inl_llm.decoder_cfg(cfg)
+    pat = len(transformer.block_pattern(cfg))
+    assert e.num_layers + d.num_layers == \
+        cfg.num_layers + cfg.moe.first_dense_layers * 0 \
+        if cfg.moe.first_dense_layers == 0 else True
+    assert e.num_layers == cfg.inl.encoder_layers * pat

@@ -1,0 +1,151 @@
+"""Properties of the eq.-(6) loss and the paper's training algorithm.
+
+The key invariant (Remark 2 / eq. 10): JAX AD through the latent
+concatenation reproduces exactly the paper's error-vector split — node j's
+encoder receives only chunk delta[j] of the decoder-input cotangent plus the
+local gradient of its own rate term.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.paper_inl import SMOKE as CFG
+from repro.core import bottleneck, inl, losses, paper_model
+
+
+def _setup(seed=0, B=8):
+    params, state = inl.init(CFG, jax.random.PRNGKey(seed))
+    views = jax.random.normal(jax.random.PRNGKey(seed + 1),
+                              (CFG.num_clients, B) + CFG.image_shape)
+    labels = jax.random.randint(jax.random.PRNGKey(seed + 2), (B,), 0,
+                                CFG.num_classes)
+    return params, state, views, labels
+
+
+def test_loss_decomposition():
+    """loss == ce_joint + s * (sum branch CE + sum rates)."""
+    params, state, views, labels = _setup()
+    loss, (m, _) = inl.loss_fn(params, state, views, labels,
+                               jax.random.PRNGKey(3), CFG)
+    J = CFG.num_clients
+    recon = m["ce_joint"] + CFG.s * (J * m["ce_branch_mean"]
+                                     + m["rate_total"])
+    np.testing.assert_allclose(float(loss), float(recon), rtol=1e-5)
+
+
+def test_s_zero_reduces_to_joint_ce():
+    import dataclasses
+    cfg0 = dataclasses.replace(CFG, s=0.0)
+    params, state, views, labels = _setup()
+    loss, (m, _) = inl.loss_fn(params, state, views, labels,
+                               jax.random.PRNGKey(3), cfg0)
+    np.testing.assert_allclose(float(loss), float(m["ce_joint"]), rtol=1e-6)
+
+
+def test_gradient_split_matches_paper_eq10():
+    """d loss / d u_j computed by full AD == the hand-split backprop: the
+    j-th chunk of the decoder-input error vector (+ branch-head term),
+    plus s * d(rate_j)/d u_j from the sampled estimator."""
+    params, state, views, labels = _setup()
+    rng = jax.random.PRNGKey(7)
+    u, mu, logvar, _ = inl.encode(params, state, views, train=True, rng=rng,
+                                  link_bits=32)
+    J, B, d = u.shape
+    s = CFG.s
+
+    def total_loss(u_all):
+        joint, branch = inl.decode(params, u_all, train=False)
+        ce_j = losses.xent(joint, labels)
+        ce_b = jnp.stack([losses.xent(bl, labels) for bl in branch]).sum()
+        rate = jnp.stack([
+            jnp.mean(bottleneck.rate_sampled(u_all[j], mu[j], logvar[j]))
+            for j in range(J)]).sum()
+        return ce_j + s * (ce_b + rate)
+
+    g_full = jax.grad(total_loss)(u)                     # (J,B,d)
+
+    # --- the paper's split: backprop the DECODER path only, then add the
+    # local rate gradient per node (eq. 10)
+    def decoder_only(u_all):
+        joint, branch = inl.decode(params, u_all, train=False)
+        ce_j = losses.xent(joint, labels)
+        ce_b = jnp.stack([losses.xent(bl, labels) for bl in branch]).sum()
+        return ce_j + s * ce_b
+
+    delta = jax.grad(decoder_only)(u)                    # split error vectors
+    for j in range(J):
+        rate_j = lambda uj: s * jnp.mean(
+            bottleneck.rate_sampled(uj, mu[j], logvar[j]))
+        g_manual_j = delta[j] + jax.grad(rate_j)(u[j])
+        np.testing.assert_allclose(np.asarray(g_full[j]),
+                                   np.asarray(g_manual_j),
+                                   atol=1e-6, rtol=1e-5)
+
+
+def test_error_vector_is_chunked_concat():
+    """The decoder-input cotangent splits horizontally into J chunks of size
+    d_bottleneck — i.e. node j needs only its own sub-vector (Remark 2)."""
+    params, state, views, labels = _setup()
+    u, _, _, _ = inl.encode(params, state, views, train=False,
+                            sample_latent=False)
+    J, B, d = u.shape
+
+    def dec_loss_cat(u_cat):
+        joint = paper_model.decoder_apply(params.decoder, u_cat, train=False)
+        return losses.xent(joint, labels)
+
+    u_cat = jnp.moveaxis(u, 0, 1).reshape(B, J * d)
+    g_cat = jax.grad(dec_loss_cat)(u_cat)               # (B, J*d)
+
+    def dec_loss_stacked(u_all):
+        cat = jnp.moveaxis(u_all, 0, 1).reshape(B, J * d)
+        return dec_loss_cat(cat)
+
+    g_stacked = jax.grad(dec_loss_stacked)(u)           # (J,B,d)
+    for j in range(J):
+        np.testing.assert_allclose(
+            np.asarray(g_cat[:, j * d:(j + 1) * d]),
+            np.asarray(g_stacked[j]), atol=1e-7)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2 ** 16))
+def test_sampled_rate_matches_analytic_in_expectation(seed):
+    """E_eps[log P(u|x)/Q(u)] == KL(P || Q) — the paper's estimator is
+    unbiased for the Gaussian case."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    mu = jax.random.normal(k1, (4, 8))
+    lv = jnp.clip(jax.random.normal(k2, (4, 8)), -2, 1)
+    n = 4000
+    eps_keys = jax.random.split(k3, n)
+    us = jax.vmap(lambda k: bottleneck.sample(k, mu, lv))(eps_keys)
+    sampled = jax.vmap(
+        lambda u: bottleneck.rate_sampled(u, mu, lv))(us).mean(axis=0)
+    analytic = bottleneck.rate_analytic(mu, lv)
+    se = jnp.std(jax.vmap(lambda u: bottleneck.rate_sampled(u, mu, lv))(us),
+                 axis=0) / np.sqrt(n)
+    assert bool((jnp.abs(sampled - analytic) < 6 * se + 5e-2).all())
+
+
+def test_quantizer_straight_through():
+    from repro.core import linkmodel
+    u = jnp.linspace(-3, 3, 64).reshape(8, 8)
+    q8 = linkmodel.quantize_st(u, 8)
+    assert float(jnp.max(jnp.abs(q8 - u))) < 8.0 / 255 + 1e-6
+    # straight-through: gradient of sum(quantize(u)) == ones
+    g = jax.grad(lambda x: linkmodel.quantize_st(x, 4).sum())(u)
+    np.testing.assert_allclose(np.asarray(g), np.ones_like(g))
+    # capacity ordering: fewer bits -> larger distortion
+    e4 = float(jnp.mean((linkmodel.quantize_st(u, 4) - u) ** 2))
+    e8 = float(jnp.mean((q8 - u) ** 2))
+    assert e4 > e8
+
+
+def test_bits_accounting_matches_paper_formula():
+    from repro.core import linkmodel
+    b, p, s = 64, CFG.num_clients * CFG.d_bottleneck, CFG.link_bits
+    assert linkmodel.training_step_bits(b, p, s) == 2 * b * p * s
+    assert linkmodel.inference_step_bits(b, p, s) == b * p * s

@@ -1,0 +1,95 @@
+"""MoE dispatch properties."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_smoke_config
+from repro.models import moe, zoo
+
+
+def _cfg(cf=8.0, name="arctic-480b"):
+    cfg = dataclasses.replace(get_smoke_config(name), dtype="float32")
+    return dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=cf))
+
+
+def _moe_params(cfg, seed=0):
+    return moe.moe_init(jax.random.PRNGKey(seed), cfg, jnp.float32)
+
+
+def test_capacity_paths_match_when_droppless():
+    """With capacity >= E/k * k (no drops possible) the buffer dispatch must
+    equal the dense-gather decode path exactly."""
+    cfg = _cfg(cf=8.0)
+    p = _moe_params(cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 31, cfg.d_model))
+    y1, _ = moe.moe_apply(p, cfg, x)
+    y2, _ = moe.moe_decode_apply(p, cfg, x)
+    np.testing.assert_allclose(y1, y2, atol=1e-5, rtol=1e-5)
+
+
+def test_dropping_is_order_preserving():
+    """Dropping a LATER token never changes an EARLIER token's output
+    (slot ranks are causal in token order)."""
+    cfg = _cfg(cf=1.0)
+    p = _moe_params(cfg)
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 32, cfg.d_model))
+    y_full, _ = moe.moe_apply(p, cfg, x)
+    y_head, _ = moe.moe_apply(p, cfg, x[:, :16])
+    cap_full = moe.expert_capacity(32, cfg.moe)
+    cap_head = moe.expert_capacity(16, cfg.moe)
+    if cap_full == cap_head:        # identical capacity -> exact prefix match
+        np.testing.assert_allclose(y_full[:, :16], y_head, atol=1e-5)
+
+
+def test_load_balance_loss_bounds():
+    """lb_loss == E * sum(f_e p_e) >= 1 at uniform routing, z_loss >= 0."""
+    cfg = _cfg()
+    p = _moe_params(cfg)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 64, cfg.d_model))
+    _, aux = moe.moe_apply(p, cfg, x)
+    assert float(aux["lb_loss"]) >= 0.99   # >= 1 in expectation
+    assert float(aux["z_loss"]) >= 0.0
+    np.testing.assert_allclose(float(aux["expert_load"].sum()), 1.0,
+                               atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 10), k=st.sampled_from([1, 2, 3]))
+def test_topk_weights_normalised(seed, k):
+    cfg = _cfg()
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, experts_per_token=k))
+    p = _moe_params(cfg, seed=seed % 3)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1, 16, cfg.d_model))
+    y, aux = moe.moe_apply(p, cfg, x)
+    assert bool(jnp.isfinite(y).all())
+
+
+def test_shared_experts_always_active():
+    """DeepSeek-style shared experts contribute even when routed experts
+    drop everything (capacity ~ 0)."""
+    cfg = _cfg(name="deepseek-v2-236b", cf=1e-9)
+    p = _moe_params(cfg)
+    x = jax.random.normal(jax.random.PRNGKey(4), (1, 16, cfg.d_model))
+    y, _ = moe.moe_apply(p, cfg, x)
+    assert float(jnp.max(jnp.abs(y))) > 0.0
+
+
+def test_active_param_count_less_than_total():
+    cfg = get_smoke_config("deepseek-v2-236b")
+    assert zoo.param_count(cfg, active_only=True) < zoo.param_count(cfg)
+
+
+def test_ep_falls_back_without_mesh():
+    """moe_apply_ep on a mesh-less CPU must equal moe_apply exactly."""
+    cfg = _cfg(cf=8.0, name="deepseek-v2-236b")
+    p = _moe_params(cfg)
+    x = jax.random.normal(jax.random.PRNGKey(9), (2, 16, cfg.d_model))
+    y1, _ = moe.moe_apply(p, cfg, x)
+    y2, _ = moe.moe_apply_ep(p, cfg, x)
+    np.testing.assert_allclose(y1, y2, atol=0)

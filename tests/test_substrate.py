@@ -1,0 +1,203 @@
+"""Substrate: optimizer, checkpoint, data pipeline, sharding rules,
+roofline parsing."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import checkpoint, optim
+from repro.data import multiview, tokens
+from repro.roofline import analysis as roofline
+
+
+# ---------------------------------------------------------------------------
+# optim
+# ---------------------------------------------------------------------------
+
+def test_adamw_converges_quadratic():
+    opt = optim.adamw(0.1, clip_norm=None)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        params, state = opt.update(grads, state, params)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 1e-2
+
+
+def test_adamw_master_weights_bf16():
+    opt = optim.adamw(1e-2)
+    params = {"w": jnp.ones((4,), jnp.bfloat16)}
+    state = opt.init(params)
+    assert "master" in state and state["master"]["w"].dtype == jnp.float32
+    grads = {"w": jnp.full((4,), 1e-3, jnp.bfloat16)}
+    p2, s2 = opt.update(grads, state, params)
+    assert p2["w"].dtype == jnp.bfloat16
+    # master accumulates sub-bf16 updates
+    assert float(jnp.abs(s2["master"]["w"] - 1.0).max()) > 0
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones((10,)) * 100.0}
+    clipped, norm = optim.clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(float(optim.global_norm(clipped)), 1.0,
+                               rtol=1e-5)
+
+
+def test_warmup_cosine_schedule():
+    sched = optim.warmup_cosine_schedule(1.0, 10, 100)
+    assert float(sched(jnp.asarray(0))) == 0.0
+    np.testing.assert_allclose(float(sched(jnp.asarray(10))), 1.0, rtol=1e-5)
+    assert float(sched(jnp.asarray(100))) < 0.11
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip():
+    tree = {"a": {"b": jnp.arange(6).reshape(2, 3).astype(jnp.float32)},
+            "c": [jnp.ones((4,), jnp.bfloat16), jnp.zeros((2,), jnp.int32)]}
+    with tempfile.TemporaryDirectory() as d:
+        checkpoint.save(d, 7, tree)
+        template = jax.tree.map(jnp.zeros_like, tree)
+        restored, step = checkpoint.restore(d, template)
+        assert step == 7
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32))
+
+
+def test_checkpoint_shape_mismatch_raises():
+    tree = {"w": jnp.ones((3,))}
+    with tempfile.TemporaryDirectory() as d:
+        checkpoint.save(d, 1, tree)
+        with pytest.raises(ValueError):
+            checkpoint.restore(d, {"w": jnp.ones((4,))})
+        with pytest.raises(ValueError):
+            checkpoint.restore(d, {"w2": jnp.ones((3,))})
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+def test_multiview_classes_separable():
+    imgs, labels = multiview.make_base_dataset(400, seed=0)
+    # nearest class-mean classifier on clean images must beat chance easily
+    means = np.stack([imgs[labels == c].mean(axis=0) for c in range(10)])
+    d = ((imgs[:, None] - means[None]) ** 2).sum(axis=(2, 3, 4))
+    acc = (d.argmin(axis=1) == labels).mean()
+    assert acc > 0.5, acc
+
+
+def test_views_noise_ordering():
+    imgs, _ = multiview.make_base_dataset(64, seed=0)
+    views = multiview.make_views(imgs, (0.4, 1.0, 4.0))
+    errs = [float(((views[j] - imgs) ** 2).mean()) for j in range(3)]
+    assert errs[0] < errs[1] < errs[2]
+
+
+def test_experiment_splits():
+    imgs, labels = multiview.make_base_dataset(100, seed=0)
+    views = multiview.make_views(imgs, (0.4, 1.0))
+    s1 = multiview.split_experiment1(views, labels, 2)
+    assert s1["inl"][0].shape[1] == 100
+    assert sum(l.shape[0] for _, l in s1["fl"]) == 100
+    s2 = multiview.split_experiment2(views, labels, 2)
+    assert all(v.shape[0] == 100 for v, _ in s2["fl"])
+
+
+def test_token_stream_learnable():
+    toks = tokens.markov_stream(64, 4000, seed=1, noise=0.1)
+    # the mode of next-token given current captures >= 50% transitions
+    from collections import Counter, defaultdict
+    nxt = defaultdict(Counter)
+    for a, b in zip(toks[:-1], toks[1:]):
+        nxt[a][b] += 1
+    hit = sum(c.most_common(1)[0][1] for c in nxt.values())
+    assert hit / (len(toks) - 1) > 0.5
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+
+def test_param_specs_divisibility_guard():
+    from jax.sharding import AbstractMesh, PartitionSpec as P
+    from repro.launch.sharding import param_spec
+
+    mesh = AbstractMesh((16, 16), ("data", "model"))
+
+    class Key:
+        def __init__(self, k):
+            self.key = k
+
+    leaf = jax.ShapeDtypeStruct((2048, 4096), jnp.bfloat16)
+    spec = param_spec((Key("attn"), Key("wq"), Key("w")), leaf, mesh)
+    assert spec == P("data", "model")
+    # non-divisible output dim stays replicated on model
+    leaf2 = jax.ShapeDtypeStruct((2048, 20), jnp.bfloat16)
+    spec2 = param_spec((Key("attn"), Key("wq"), Key("w")), leaf2, mesh)
+    assert spec2 == P("data", None)
+    # moe experts on model, fsdp on d
+    leaf3 = jax.ShapeDtypeStruct((4, 128, 2048, 64), jnp.bfloat16)
+    spec3 = param_spec((Key("moe"), Key("wi")), leaf3, mesh)
+    assert spec3 == P(None, "model", "data", None)
+    # norms replicated
+    leaf4 = jax.ShapeDtypeStruct((2048,), jnp.bfloat16)
+    spec4 = param_spec((Key("attn_norm"), Key("scale")), leaf4, mesh)
+    assert spec4 == P(None)
+
+
+# ---------------------------------------------------------------------------
+# roofline
+# ---------------------------------------------------------------------------
+
+HLO_SAMPLE = """
+  %ag = bf16[2,1024,512]{2,1,0} all-gather(%x), replica_groups=...
+  %ar.1 = f32[256,128]{1,0} all-reduce(%y), to_apply=%add
+  %tuple = (bf16[64,64]{1,0}, bf16[64,64]{1,0}) all-to-all(%a, %b)
+  %cp = f32[8,8]{1,0} collective-permute-start(%z)
+  %cpd = f32[8,8]{1,0} collective-permute-done(%cp)
+  %rs = bf16[4,4]{1,0} reduce-scatter(%w), dimensions={0}
+"""
+
+
+def test_collective_parser():
+    got = roofline.collective_bytes(HLO_SAMPLE)
+    assert got["all-gather"] == 2 * 1024 * 512 * 2
+    assert got["all-reduce"] == 256 * 128 * 4
+    assert got["all-to-all"] == 2 * 64 * 64 * 2
+    assert got["collective-permute"] == 8 * 8 * 4     # -done not re-counted
+    assert got["reduce-scatter"] == 4 * 4 * 2
+    assert got["total"] == sum(v for k, v in got.items()
+                               if k not in ("total",))
+
+
+def test_roofline_terms_dominance():
+    t = roofline.roofline_terms(1e15, 1e12, 1e9, 256)
+    assert t["dominant"] == "compute"
+    t = roofline.roofline_terms(1e12, 1e15, 1e9, 256)
+    assert t["dominant"] == "memory"
+    t = roofline.roofline_terms(1e10, 1e10, 1e13, 256)
+    assert t["dominant"] == "collective"
+
+
+def test_model_flops_modes():
+    from repro.configs import INPUT_SHAPES, get_config
+    cfg = get_config("llama3.2-1b")
+    n = cfg.param_count()
+    f_train = roofline.model_flops(cfg, INPUT_SHAPES["train_4k"])
+    f_prefill = roofline.model_flops(cfg, INPUT_SHAPES["prefill_32k"])
+    f_decode = roofline.model_flops(cfg, INPUT_SHAPES["decode_32k"])
+    assert f_train == 6 * n * 256 * 4096
+    assert f_prefill == 2 * n * 32 * 32768
+    assert f_decode == 2 * n * 128
+    # MoE: active < total drives the roofline
+    ds = get_config("deepseek-v2-236b")
+    assert roofline.model_flops(ds, INPUT_SHAPES["train_4k"]) \
+        < 6 * ds.param_count() * 256 * 4096

@@ -1,0 +1,65 @@
+"""End-to-end behaviour tests for the paper's system (the old placeholder).
+
+The INL architecture must (a) train distributively with only bottleneck
+activations crossing node boundaries, (b) produce a soft prediction at node
+J+1, and (c) beat chance on the multi-view task within a few epochs —
+the qualitative claims of §IV.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.configs.paper_inl import SMOKE as CFG
+from repro.core import inl
+from repro.data import multiview
+
+
+@pytest.fixture(scope="module")
+def trained():
+    imgs, labels = multiview.make_base_dataset(256, seed=0)
+    views = multiview.make_views(imgs, CFG.noise_stds)
+    params, state = inl.init(CFG, jax.random.PRNGKey(0))
+    opt = optim.adam(2e-3)
+    opt_state = opt.init(params)
+    step = inl.make_train_step(CFG, opt)
+    rng = jax.random.PRNGKey(1)
+    for ep in range(3):
+        for v, l in multiview.multiview_batches(views, labels, 64, seed=ep):
+            rng, sub = jax.random.split(rng)
+            params, state, opt_state, m = step(
+                params, state, opt_state, jnp.asarray(v), jnp.asarray(l), sub)
+    return params, state, views, labels
+
+
+@pytest.mark.slow
+def test_soft_output_is_distribution(trained):
+    params, state, views, labels = trained
+    probs = inl.predict(params, state, jnp.asarray(views[:, :16]))
+    np.testing.assert_allclose(np.asarray(probs.sum(axis=-1)), 1.0,
+                               atol=1e-5)
+    assert probs.shape == (16, CFG.num_classes)
+
+
+@pytest.mark.slow
+def test_inference_uses_only_bottleneck(trained):
+    """Inference phase (§III-B): node J+1 sees ONLY (u_1..u_J) — predictions
+    must be reproducible from the latents alone."""
+    params, state, views, labels = trained
+    v = jnp.asarray(views[:, :16])
+    u, _, _, _ = inl.encode(params, state, v, train=False,
+                            sample_latent=False)
+    joint, _ = inl.decode(params, u, train=False)
+    probs_direct = jax.nn.softmax(joint, axis=-1)
+    probs_full = inl.predict(params, state, v)
+    np.testing.assert_allclose(np.asarray(probs_direct),
+                               np.asarray(probs_full), atol=1e-6)
+
+
+@pytest.mark.slow
+def test_trained_above_chance(trained):
+    params, state, views, labels = trained
+    acc = float(inl.evaluate(params, state, jnp.asarray(views),
+                             jnp.asarray(labels)))
+    assert acc > 0.3, acc
