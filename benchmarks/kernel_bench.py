@@ -2,29 +2,51 @@
 
 On this CPU container the timed implementations are the compiled jnp
 formulations (what actually executes here); the Pallas kernels are the TPU
-target and are validated (not timed) in interpret mode.  us_per_call is
-wall-clock over N repetitions after a warmup call.
+target and are validated (not timed) in interpret mode.  Timings are the
+MEDIAN of N repetitions after a warmup call.
+
+The cut-layer section times the paper's hot inner loop both ways:
+
+    unfused  the seed's 3-pass formulation — reparametrised sample,
+             straight-through link quantizer, eq.-(6) rate — as three
+             separately compiled passes (three HBM round trips over the
+             (T, d) latents), gradients by plain AD.
+    fused    kernels/ops.cutlayer — one compiled pass producing u AND the
+             rate, hand-written eq.-(10) VJP for the backward.
+
+Results go to stdout (CSV) and, for the cut layer, to a machine-readable
+JSON file (--json, default BENCH_cutlayer.json) so the perf trajectory is
+tracked across PRs.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import statistics
 import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
+from repro.core import linkmodel
+from repro.kernels import ops, ref
 from repro.models.attention import blockwise_attention
 from repro.models.ssm import _ssd_chunked
 
+DEFAULT_REPS = 20
 
-def _time(fn, *args, reps=5):
+
+def _time(fn, *args, reps=DEFAULT_REPS):
+    """Median wall-clock microseconds per call after one warmup."""
     out = fn(*args)
     jax.block_until_ready(out)
-    t0 = time.perf_counter()
+    ts = []
     for _ in range(reps):
+        t0 = time.perf_counter()
         out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps * 1e6
+        jax.block_until_ready(out)
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return statistics.median(ts)
 
 
 def rows():
@@ -39,7 +61,7 @@ def rows():
     v = jax.random.normal(ks[2], (B, S, KV, Dh), jnp.float32)
     fa = jax.jit(lambda q, k, v: blockwise_attention(q, k, v, causal=True))
     na = jax.jit(lambda q, k, v: ref.attention_ref(q, k, v, causal=True))
-    t_f, t_n = _time(fa, q, k, v), _time(na, q, k, v)
+    t_f, t_n = _time(fa, q, k, v, reps=5), _time(na, q, k, v, reps=5)
     flops = 4 * B * H * S * S * Dh / 2
     out.append(("attention_blockwise_2k", t_f, f"{flops/t_f/1e3:.1f}GFLOPs"))
     out.append(("attention_naive_2k", t_n, f"{flops/t_n/1e3:.1f}GFLOPs"))
@@ -55,28 +77,148 @@ def rows():
     d = jnp.ones((Hh,))
     ch = jax.jit(lambda *t: _ssd_chunked(*t, 128)[0])
     sq = jax.jit(ref.ssd_scan_ref)
-    t_c = _time(ch, x, dt, a, bm, cm, d)
-    t_s = _time(sq, x, dt, a, bm, cm, d)
+    t_c = _time(ch, x, dt, a, bm, cm, d, reps=5)
+    t_s = _time(sq, x, dt, a, bm, cm, d, reps=5)
     out.append(("ssd_chunked_4k", t_c, f"speedup_vs_seq={t_s/t_c:.1f}x"))
     out.append(("ssd_sequential_4k", t_s, ""))
-
-    # fused bottleneck vs unfused ops
-    T, d_b = 8192, 256
-    ks = jax.random.split(key, 3)
-    mu = jax.random.normal(ks[0], (T, d_b))
-    lv = jax.random.normal(ks[1], (T, d_b)) * 0.3
-    eps = jax.random.normal(ks[2], (T, d_b))
-    fused = jax.jit(ref.bottleneck_ref)           # XLA fuses the jnp form
-    t_b = _time(fused, mu, lv, eps)
-    bytes_ = 3 * T * d_b * 4
-    out.append(("inl_bottleneck_8k", t_b, f"{bytes_/t_b/1e3:.1f}GB/s"))
     return out
 
 
+def bench_cutlayer(T: int = 8192, d_b: int = 256, bits: int = 8,
+                   reps: int = DEFAULT_REPS):
+    """Fused megakernel vs the seed's unfused 3-pass cut layer, forward and
+    value_and_grad.  Returns (csv_rows, json_record)."""
+    key = jax.random.PRNGKey(1)
+    ks = jax.random.split(key, 5)
+    mu = jax.random.normal(ks[0], (T, d_b))
+    lv = jax.random.normal(ks[1], (T, d_b)) * 0.3
+    eps = jax.random.normal(ks[2], (T, d_b))
+    cu = jax.random.normal(ks[3], (T, d_b))
+    cr = jax.random.normal(ks[4], (T,))
+
+    # --- unfused: three separately compiled passes (the seed formulation:
+    # bottleneck.sample -> linkmodel.quantize_st -> rate term), each a full
+    # HBM round trip over the (T, d) latents
+    sample_p = jax.jit(lambda mu, lv, eps: mu + jnp.exp(0.5 * lv) * eps)
+    quant_p = jax.jit(lambda u: linkmodel.quantize_st(u, bits))
+    rate_p = jax.jit(lambda u, mu, lv: 0.5 * jnp.sum(
+        u * u - (u - mu) ** 2 * jnp.exp(-lv) - lv, axis=-1))
+
+    def unfused(mu, lv, eps):
+        u = quant_p(sample_p(mu, lv, eps))
+        return u, rate_p(u, mu, lv)
+
+    def unfused_loss(mu, lv, eps):
+        u, r = unfused(mu, lv, eps)
+        return (u * cu).sum() + (r * cr).sum()
+
+    unfused_grad = jax.value_and_grad(unfused_loss, argnums=(0, 1))
+
+    # --- fused: one compiled pass + the hand-written eq.-(10) VJP
+    # (backend="auto" -> compiled jnp reference on CPU, Pallas on TPU)
+    fused = jax.jit(lambda mu, lv, eps: ops.cutlayer(
+        mu, lv, eps, link_bits=bits, rate_estimator="sample"))
+
+    @jax.jit
+    def fused_loss_grad(mu, lv, eps):
+        def loss(mu, lv):
+            u, r = ops.cutlayer(mu, lv, eps, link_bits=bits,
+                                rate_estimator="sample")
+            return (u * cu).sum() + (r * cr).sum()
+        return jax.value_and_grad(loss, argnums=(0, 1))(mu, lv)
+
+    # interleave the four measurements so cache pressure and scheduler noise
+    # hit fused and unfused alike (sequential blocks flatter whichever runs
+    # with a warmer cache)
+    fns = {"unfused_fwd": unfused, "fused_fwd": fused,
+           "unfused_grad": unfused_grad, "fused_grad": fused_loss_grad}
+    for f in fns.values():
+        jax.block_until_ready(f(mu, lv, eps))              # warmup/compile
+    samples = {k: [] for k in fns}
+    for _ in range(reps):
+        for name, f in fns.items():
+            t0 = time.perf_counter()
+            out = f(mu, lv, eps)
+            jax.block_until_ready(out)
+            samples[name].append((time.perf_counter() - t0) * 1e6)
+    med = {k: statistics.median(v) for k, v in samples.items()}
+    t_uf, t_ff = med["unfused_fwd"], med["fused_fwd"]
+    t_ug, t_fg = med["unfused_grad"], med["fused_grad"]
+
+    # the unfused value_and_grad cannot be outer-jitted without fusing the
+    # 3 passes back together, so its timings include per-call Python
+    # trace/dispatch overhead.  Measure that overhead at a compute-free
+    # shape (same graph, 8 rows) and report overhead-adjusted speedups so
+    # the fusion win is not overstated.
+    cu8, cr8 = cu[:8], cr[:8]
+
+    def unfused_loss_tiny(mu, lv, eps):
+        u, r = unfused(mu, lv, eps)
+        return (u * cu8).sum() + (r * cr8).sum()
+
+    tiny_grad = jax.value_and_grad(unfused_loss_tiny, argnums=(0, 1))
+    tiny = [x[:8] for x in (mu, lv, eps)]
+    dispatch_us = _time(tiny_grad, *tiny, reps=reps)
+    t_ug_adj = max(t_ug - dispatch_us, 1e-3)
+
+    # the training hot path runs forward + backward every step
+    step_speedup = (t_uf + t_ug_adj) / (t_ff + t_fg)
+
+    bytes_fwd = 3 * T * d_b * 4
+    csv = [
+        ("cutlayer_unfused_fwd", t_uf, f"{bytes_fwd/t_uf/1e3:.1f}GB/s"),
+        ("cutlayer_fused_fwd", t_ff,
+         f"{bytes_fwd/t_ff/1e3:.1f}GB/s speedup={t_uf/t_ff:.2f}x"),
+        ("cutlayer_unfused_grad", t_ug,
+         f"incl_dispatch_overhead={dispatch_us:.0f}us"),
+        ("cutlayer_fused_grad", t_fg, f"speedup={t_ug_adj/t_fg:.2f}x"),
+        ("cutlayer_train_step", t_ff + t_fg,
+         f"speedup_vs_unfused={step_speedup:.2f}x"),
+    ]
+    record = {
+        "bench": "cutlayer",
+        "shape": {"T": T, "d_bottleneck": d_b, "link_bits": bits},
+        "reps": reps,
+        "backend": jax.default_backend(),
+        "impl": ops.resolve_backend("auto"),
+        "us_median": {
+            "unfused_fwd": round(t_uf, 2), "fused_fwd": round(t_ff, 2),
+            "unfused_grad": round(t_ug, 2), "fused_grad": round(t_fg, 2),
+            # per-call Python trace/dispatch cost of the un-jittable
+            # unfused value_and_grad, measured at a compute-free shape;
+            # already subtracted from the adjusted speedups below
+            "unfused_grad_dispatch_overhead": round(dispatch_us, 2),
+        },
+        "speedup": {"fwd": round(t_uf / t_ff, 3),
+                    "grad": round(t_ug_adj / t_fg, 3),
+                    "train_step": round(step_speedup, 3)},
+    }
+    return csv, record
+
+
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_cutlayer.json",
+                    help="machine-readable cut-layer results ('' disables)")
+    ap.add_argument("--T", type=int, default=8192)
+    ap.add_argument("--d", type=int, default=256)
+    ap.add_argument("--bits", type=int, default=8)
+    ap.add_argument("--reps", type=int, default=DEFAULT_REPS)
+    ap.add_argument("--skip-generic", action="store_true",
+                    help="only run the cut-layer benchmark")
+    args = ap.parse_args()
+
     print("name,us_per_call,derived")
-    for name, us, derived in rows():
+    if not args.skip_generic:
+        for name, us, derived in rows():
+            print(f"{name},{us:.1f},{derived}")
+    csv, record = bench_cutlayer(args.T, args.d, args.bits, args.reps)
+    for name, us, derived in csv:
         print(f"{name},{us:.1f},{derived}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(record, f, indent=2)
+        print(f"# wrote {args.json}")
 
 
 if __name__ == "__main__":

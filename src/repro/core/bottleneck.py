@@ -45,6 +45,28 @@ def sample(key, mu, logvar):
     return mu + jnp.exp(0.5 * logvar.astype(jnp.float32)) * eps.astype(mu.dtype)
 
 
+def fused_sample_rate(key, mu, logvar, *, link_bits: int = 32,
+                      rate_estimator: str = "sample", backend: str = "auto",
+                      block_t: int = None):
+    """The cut-layer hot path in ONE fused kernel pass (standard-normal
+    prior): draws eps and returns
+
+        u    = quantize_st(mu + exp(logvar/2) * eps)   (..., d)
+        rate = eq.-(6) rate term per row                (...,)  fp32
+
+    with mu/logvar read from HBM once (kernels/inl_bottleneck.py via
+    kernels/ops.py dispatch).  The backward pass is the hand-written
+    eq.-(10) split, not AD through three unfused ops.  Leading axes —
+    including the J client axis — fold into the kernel row grid, so all
+    nodes share one launch.  Use the unfused `sample` + `rate_*` functions
+    only for learned (non-standard-normal) priors."""
+    from repro.kernels import ops
+    eps = jax.random.normal(key, mu.shape, jnp.float32)
+    return ops.cutlayer(mu, logvar, eps, link_bits=link_bits,
+                        rate_estimator=rate_estimator, backend=backend,
+                        block_t=block_t)
+
+
 def gaussian_logpdf(u, mu, logvar):
     lv = logvar.astype(jnp.float32)
     d = (u - mu).astype(jnp.float32)

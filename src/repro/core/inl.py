@@ -42,21 +42,44 @@ def init(cfg, key):
     return (INLParams(enc_params, dec, {}), {"encoders": enc_state})
 
 
-def encode(params: INLParams, state, views, *, train: bool, rng=None,
-           link_bits: int = 32, sample_latent: bool = True):
-    """views: (J,B,H,W,C) -> (u (J,B,d), mu, logvar, new_state).
+def encode_and_rate(params: INLParams, state, views, *, train: bool, rng,
+                    link_bits: int = 32, rate_estimator: str = "sample",
+                    backend: str = "auto"):
+    """The fused edge hot path: views (J,B,H,W,C) ->
+    (u (J,B,d), mu, logvar, rate (J,B), new_state).
 
-    This is everything that runs AT THE EDGE.  u is what crosses the links
-    (quantized to link_bits)."""
+    After the per-node encoders produce (mu, logvar), ONE cut-layer kernel
+    launch (client axis folded into the row grid, kernels/ops.cutlayer)
+    yields both the quantized transmission u and the per-sample rate term
+    of eq. (6); the backward pass is the paper's eq.-(10) error-vector +
+    rate-gradient split."""
     (mu, logvar), new_state = jax.vmap(
         lambda p, s, v: paper_model.encoder_apply(p, s, v, train=train)
     )(params.encoders, state["encoders"], views)
+    u, rate = bottleneck.fused_sample_rate(
+        rng, mu, logvar, link_bits=link_bits, rate_estimator=rate_estimator,
+        backend=backend)
+    return u, mu, logvar, rate, {"encoders": new_state}
+
+
+def encode(params: INLParams, state, views, *, train: bool, rng=None,
+           link_bits: int = 32, sample_latent: bool = True,
+           backend: str = "auto"):
+    """views: (J,B,H,W,C) -> (u (J,B,d), mu, logvar, new_state).
+
+    This is everything that runs AT THE EDGE.  u is what crosses the links
+    (quantized to link_bits).  The sampling path routes through the fused
+    cut-layer kernel; the deterministic path (inference, u = mu) stays on
+    the standalone quantizer."""
     if sample_latent and rng is not None:
-        eps_keys = jax.random.split(rng, mu.shape[0])
-        u = jax.vmap(bottleneck.sample)(eps_keys, mu, logvar)
-    else:
-        u = mu
-    u_sent = linkmodel.quantize_st(u, link_bits)
+        u, mu, logvar, _, new_state = encode_and_rate(
+            params, state, views, train=train, rng=rng, link_bits=link_bits,
+            backend=backend)
+        return u, mu, logvar, new_state
+    (mu, logvar), new_state = jax.vmap(
+        lambda p, s, v: paper_model.encoder_apply(p, s, v, train=train)
+    )(params.encoders, state["encoders"], views)
+    u_sent = linkmodel.quantize_st(mu, link_bits)
     return u_sent, mu, logvar, {"encoders": new_state}
 
 
@@ -71,17 +94,24 @@ def decode(params: INLParams, u, *, train: bool, rng=None):
 
 
 def loss_fn(params: INLParams, state, views, labels, rng, cfg, *,
-            train: bool = True, rate_estimator: str = "sample"):
-    """Full eq.-(6) loss.  Returns (loss, (metrics, new_state))."""
+            train: bool = True, rate_estimator: str = "sample",
+            backend: str = "auto"):
+    """Full eq.-(6) loss.  Returns (loss, (metrics, new_state)).
+
+    The encode side runs the fused cut-layer megakernel, which also emits
+    the per-sample rate — losses.inl_loss consumes it instead of
+    recomputing the rate from (u, mu, logvar)."""
     r_enc, r_dec = jax.random.split(rng)
-    u, mu, logvar, new_state = encode(params, state, views, train=train,
-                                      rng=r_enc, link_bits=cfg.link_bits)
+    u, mu, logvar, rate, new_state = encode_and_rate(
+        params, state, views, train=train, rng=r_enc,
+        link_bits=cfg.link_bits, rate_estimator=rate_estimator,
+        backend=backend)
     joint, branch = decode(params, u, train=train, rng=r_dec)
     J = u.shape[0]
     loss, metrics = losses.inl_loss(
         joint, list(branch), labels,
         list(mu), list(logvar), list(u),
-        s=cfg.s, rate_estimator=rate_estimator)
+        s=cfg.s, rate_estimator=rate_estimator, rates=list(rate))
     metrics["accuracy"] = losses.accuracy(joint, labels)
     # §III-C accounting: activations forward + error vectors backward
     p_total = J * cfg.d_bottleneck
@@ -132,19 +162,22 @@ def init_heterogeneous(cfgs, key):
 
 
 def loss_fn_heterogeneous(params, state, views, labels, rng, cfg, *,
-                          train: bool = True):
-    us, mus, lvs, new_states = [], [], [], []
+                          train: bool = True, backend: str = "auto"):
+    """Per-node encoder architectures may differ, but every node emits the
+    same d_bottleneck — so after the (necessarily sequential) encoder
+    applies, the cut layer is still ONE fused kernel launch over the
+    stacked (J, B, d) latents."""
+    mus, lvs, new_states = [], [], []
     for j, (ep, es) in enumerate(zip(params["encoders"], state["encoders"])):
         (mu, lv), ns = paper_model.encoder_apply(ep, es, views[j], train=train)
-        rng, sub = jax.random.split(rng)
-        u = linkmodel.quantize_st(bottleneck.sample(sub, mu, lv),
-                                  cfg.link_bits)
-        us.append(u); mus.append(mu); lvs.append(lv); new_states.append(ns)
-    u = jnp.stack(us)
+        mus.append(mu); lvs.append(lv); new_states.append(ns)
+    rng, r_cut, r_dec = jax.random.split(rng, 3)
+    u, rate = bottleneck.fused_sample_rate(
+        r_cut, jnp.stack(mus), jnp.stack(lvs), link_bits=cfg.link_bits,
+        rate_estimator="sample", backend=backend)
     fake = INLParams(None, params["decoder"], {})
-    rng, sub = jax.random.split(rng)
-    joint, branch = decode(fake, u, train=train, rng=sub)
-    loss, metrics = losses.inl_loss(joint, list(branch), labels, mus, lvs, us,
-                                    s=cfg.s)
+    joint, branch = decode(fake, u, train=train, rng=r_dec)
+    loss, metrics = losses.inl_loss(joint, list(branch), labels, mus, lvs,
+                                    list(u), s=cfg.s, rates=list(rate))
     metrics["accuracy"] = losses.accuracy(joint, labels)
     return loss, (metrics, {"encoders": new_states})

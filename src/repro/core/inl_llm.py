@@ -84,17 +84,24 @@ def init(cfg, key):
     return INLLLMParams(encoders, decoder, {"w": bh})
 
 
-def encode(params: INLLLMParams, cfg, tokens, rng, *, train: bool = True):
+def encode(params: INLLLMParams, cfg, tokens, rng, *, train: bool = True,
+           rate_estimator: str = "sample", backend: str = "auto"):
     """tokens: (B,S).  Views differ by per-node embedding + feature noise.
-    Returns (u, mu, logvar): (J, B, S, d_b)."""
+    Returns (u, mu, logvar, rate): u/mu/logvar (J, B, S, d_b); rate
+    (J, B, S) fp32 from the fused cut-layer kernel (None when train=False).
+
+    The per-node encoders run under vmap, but the cut layer itself —
+    sample + link quantizer + rate — is ONE fused kernel launch over all
+    J * B * S rows (kernels/ops.cutlayer), with the hand-written eq.-(10)
+    backward.  With link_bits <= 8 the int8 wire in `decode` carries the
+    quantization instead, so the kernel runs with a full-precision link."""
     J = cfg.inl.num_nodes
     e_cfg = encoder_cfg(cfg)
     B, S = tokens.shape
     positions = jnp.broadcast_to(jnp.arange(S), (B, S))
     noise_keys = jax.random.split(jax.random.fold_in(rng, 0), J)
-    eps_keys = jax.random.split(jax.random.fold_in(rng, 1), J)
 
-    def one(enc, nk, ek):
+    def one(enc, nk):
         h = layers.embed(enc["embed"], tokens)
         # view-specific observation noise (sigma grows with node index via key
         # folding is NOT used here: homogeneous sigma keeps nodes exchangeable)
@@ -103,13 +110,18 @@ def encode(params: INLLLMParams, cfg, tokens, rng, *, train: bool = True):
         h, _, _ = transformer.stack_apply(enc["stack"], e_cfg, h, positions,
                                           mode="train")
         h = layers.rmsnorm(enc["norm"], h, cfg.norm_eps)
-        mu, logvar = bottleneck.head_apply(enc["head"], h)
-        u = bottleneck.sample(ek, mu, logvar) if train else mu
-        if cfg.inl.link_bits > 8:        # <= 8: the int8 wire (decode)
-            u = linkmodel.quantize_st(u, cfg.inl.link_bits)  # quantizes
-        return u, mu, logvar
+        return bottleneck.head_apply(enc["head"], h)
 
-    return jax.vmap(one)(params.encoders, noise_keys, eps_keys)
+    mu, logvar = jax.vmap(one)(params.encoders, noise_keys)
+    bits = cfg.inl.link_bits if cfg.inl.link_bits > 8 else 32
+    if train:
+        u, rate = bottleneck.fused_sample_rate(
+            jax.random.fold_in(rng, 1), mu, logvar, link_bits=bits,
+            rate_estimator=rate_estimator, backend=backend)
+    else:
+        u = linkmodel.quantize_st(mu, bits)
+        rate = None
+    return u, mu, logvar, rate
 
 
 def decode(params: INLLLMParams, cfg, u, tokens_shape):
@@ -122,8 +134,9 @@ def decode(params: INLLLMParams, cfg, u, tokens_shape):
     J, B, S, db = u.shape
     d_cfg = decoder_cfg(cfg)
     if cfg.inl.link_bits <= 8:
-        mesh = jax.sharding.get_abstract_mesh()
-        if not mesh.empty and "client" in mesh.axis_names:
+        from repro.launch.mesh import current_abstract_mesh
+        mesh = current_abstract_mesh()
+        if mesh is not None and "client" in mesh.axis_names:
             dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
             # (J,B,S,db) int8, client axis replicated = the link gather
             gathered = jax.sharding.PartitionSpec(None, dp or None,
@@ -190,15 +203,14 @@ def _chunked_inl_ce(params: INLLLMParams, cfg, h, u, labels,
 
 
 def loss_fn(params: INLLLMParams, cfg, batch, rng, *,
-            rate_estimator: str = "sample"):
+            rate_estimator: str = "sample", backend: str = "auto"):
     tokens, labels = batch["tokens"], batch["labels"]
-    u, mu, logvar = encode(params, cfg, tokens, rng, train=True)
+    u, mu, logvar, rates = encode(params, cfg, tokens, rng, train=True,
+                                  rate_estimator=rate_estimator,
+                                  backend=backend)
     h, moe_aux = decode(params, cfg, u, tokens.shape)
     ce_joint, ce_branch_sum, acc = _chunked_inl_ce(params, cfg, h, u, labels)
-    if rate_estimator == "sample":
-        rates = jax.vmap(bottleneck.rate_sampled)(u, mu, logvar)
-    else:
-        rates = jax.vmap(bottleneck.rate_analytic)(mu, logvar)
+    # rates (J,B,S) come from the fused cut-layer kernel — not recomputed
     rate_total = jnp.mean(rates.reshape(cfg.inl.num_nodes, -1),
                           axis=-1).sum()
     loss = ce_joint + cfg.inl.s * (ce_branch_sum + rate_total)

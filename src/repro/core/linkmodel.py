@@ -16,21 +16,40 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ref as _kref
 
-def quantize_st(u, bits: int, *, u_range: float = 4.0):
+QUANT_RANGE = _kref.QUANT_RANGE       # single source of truth with kernels
+
+
+def quantize_st(u, bits: int, *, u_range: float = QUANT_RANGE):
     """Uniform quantizer with straight-through estimator.
 
     bits >= 32 is treated as 'no quantization' (full-precision link).
     Latents are clipped to [-u_range, u_range] (Gaussian bottlenecks are
-    near-standard-normal, so 4 sigma covers them).
+    near-standard-normal, so 4 sigma covers them).  The value map is
+    kernels/ref.quantize_value — the same math the fused cut-layer kernel
+    (kernels/inl_bottleneck.py) bakes in, so the standalone quantizer and
+    the megakernel cannot drift apart.
     """
     if bits >= 32:
         return u
-    levels = (1 << bits) - 1
-    scale = levels / (2.0 * u_range)
-    clipped = jnp.clip(u, -u_range, u_range)
-    q = jnp.round((clipped + u_range) * scale) / scale - u_range
+    q = _kref.quantize_value(u, bits, u_range=u_range)
     return u + jax.lax.stop_gradient(q - u)
+
+
+def transmit(key, mu, logvar, *, bits: int, rate_estimator: str = "sample",
+             backend: str = "auto", block_t: int = None):
+    """Fused node->(J+1) transmission: everything the edge sends, one pass.
+
+    Draws eps, then a single cut-layer kernel launch produces the quantized
+    latent u AND the per-row rate term of eq. (6); the backward is the
+    paper's eq.-(10) error-vector + rate-gradient split.  mu/logvar:
+    (..., d) with all leading axes (J clients, batch, ...) folded into the
+    kernel's row grid.  Returns (u, rate)."""
+    from repro.core import bottleneck
+    return bottleneck.fused_sample_rate(key, mu, logvar, link_bits=bits,
+                                        rate_estimator=rate_estimator,
+                                        backend=backend, block_t=block_t)
 
 
 _WIRE_RANGE = 4.0                 # Gaussian bottlenecks: 4 sigma coverage

@@ -37,19 +37,28 @@ def xent(logits, labels):
 def inl_loss(joint_logits, branch_logits: Sequence, labels,
              mus: Sequence, logvars: Sequence, us: Sequence,
              *, s: float, priors: Sequence = None,
-             rate_estimator: str = "sample"):
-    """Eq. (6) as a minimisation objective.  Returns (loss, metrics)."""
+             rate_estimator: str = "sample", rates: Sequence = None):
+    """Eq. (6) as a minimisation objective.  Returns (loss, metrics).
+
+    `rates` — optional precomputed per-row rate terms (one array per node),
+    e.g. the second output of the fused cut-layer kernel
+    (kernels/ops.cutlayer); when given, the rate is NOT recomputed here and
+    `rate_estimator`/`priors` are ignored for the rate term."""
     J = len(branch_logits)
     priors = priors if priors is not None else [{}] * J
     ce_joint = xent(joint_logits, labels)
     ce_branches = [xent(bl, labels) for bl in branch_logits]
-    rates = []
-    for j in range(J):
-        if rate_estimator == "sample":
-            r = bottleneck.rate_sampled(us[j], mus[j], logvars[j], priors[j])
-        else:
-            r = bottleneck.rate_analytic(mus[j], logvars[j], priors[j])
-        rates.append(jnp.mean(r))
+    if rates is not None:
+        rates = [jnp.mean(r) for r in rates]
+    else:
+        rates = []
+        for j in range(J):
+            if rate_estimator == "sample":
+                r = bottleneck.rate_sampled(us[j], mus[j], logvars[j],
+                                            priors[j])
+            else:
+                r = bottleneck.rate_analytic(mus[j], logvars[j], priors[j])
+            rates.append(jnp.mean(r))
     loss = ce_joint + s * (jnp.sum(jnp.stack(ce_branches))
                            + jnp.sum(jnp.stack(rates)))
     metrics = {

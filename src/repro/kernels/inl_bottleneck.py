@@ -1,14 +1,42 @@
-"""Pallas TPU kernel for the INL bottleneck hot-spot: fused
-[mu, logvar -> reparametrised sample -> per-sample KL rate].
+"""Fused cut-layer megakernel for in-network learning (the paper's hot loop).
 
-This is the paper's per-node/per-sample inner loop (eq. 6's rate term + the
-reparametrization trick).  Unfused, XLA issues 4 HBM round-trips over the
-(T, d) latent tensors (exp, mul-add, square-sum, log-sum); fused, each tile
-is read once into VMEM and both outputs (u, kl) are produced in one pass —
-the op is bandwidth-bound, so fusion is worth ~4x on the cut layer.
+Per node j the cut layer is  (mu, logvar) -> u = Q(mu + exp(logvar/2)*eps)
+-> per-row rate  forward, and the eq.-(8c)/(10) error-vector split backward.
+Unfused that is three HBM-bound passes (reparametrised sample, link
+quantizer, rate term) plus vanilla AD; here it is ONE Pallas pass per
+direction:
 
-Tiling: rows (tokens*nodes) x d_bottleneck tiles of (BLOCK_T, d); d_b is
-small (<= 1024) so a full row fits VMEM comfortably.
+  forward   `_cut_fwd_kernel`: each (block_t, d) tile of mu/logvar/eps is
+            read into VMEM once and produces BOTH the quantized transmission
+            u and the per-row rate (sampled estimator of eq. 6 evaluated at
+            the quantized latent, or the analytic Gaussian KL).
+  backward  `_cut_bwd_kernel`: given the decoder cotangent chunk delta[j]
+            (straight-through through the quantizer) and the rate cotangent,
+            recomputes sigma/u from the saved inputs and emits
+            (dmu, dlogvar, deps) in a single fused pass — the paper's
+            error-vector + local-rate-gradient split, eq. (10).
+
+Both directions hang off one `jax.custom_vjp` (`cutlayer_fused`), so
+training never differentiates through `pallas_call` (interpret-mode AD was
+the seed's CPU bottleneck).  The J client nodes are BATCHED into one kernel
+launch: callers pass (J, ..., d) and the leading axes are folded into the
+row grid — no `jax.vmap` over per-node calls.
+
+Contract:
+  * arbitrary leading dims; rows padded to a block_t multiple (no assert),
+    outputs sliced back.
+  * `impl="reference"` routes the same custom VJP through the jnp oracle
+    (kernels/ref.py), which XLA compiles to one fused pass on CPU — CI and
+    TPU run identical code paths.
+  * `interpret=None` auto-detects via the kernels/ops.py backend resolver
+    (compiled on TPU, interpret elsewhere); never silently interprets on
+    TPU.
+  * quantizer semantics (clip to +-QUANT_RANGE, uniform midtread,
+    straight-through) are shared with core/linkmodel.py via
+    ref.quantize_value.
+
+`bottleneck_fused` (sample + analytic KL, no quantizer) is kept as the
+seed-compatible entry point on top of the same kernels.
 """
 from __future__ import annotations
 
@@ -18,41 +46,186 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import ref
+
 DEFAULT_BLOCK_T = 256
 
 
-def _bottleneck_kernel(mu_ref, logvar_ref, eps_ref, u_ref, kl_ref):
+# ---------------------------------------------------------------------------
+# Pallas kernels
+# ---------------------------------------------------------------------------
+
+def _quantize(pre, bits: int):
+    """In-kernel uniform quantizer value map; identical math to
+    ref.quantize_value (bits is a compile-time constant)."""
+    if bits >= 32:
+        return pre
+    r = ref.QUANT_RANGE
+    scale = ((1 << bits) - 1) / (2.0 * r)
+    return jnp.round((jnp.clip(pre, -r, r) + r) * scale) / scale - r
+
+
+def _cut_fwd_kernel(mu_ref, lv_ref, eps_ref, u_ref, rate_ref, *,
+                    bits: int, sampled: bool):
     mu = mu_ref[...].astype(jnp.float32)
-    lv = logvar_ref[...].astype(jnp.float32)
+    lv = lv_ref[...].astype(jnp.float32)
     eps = eps_ref[...].astype(jnp.float32)
     sigma = jnp.exp(0.5 * lv)
-    u = mu + sigma * eps
+    u = _quantize(mu + sigma * eps, bits)
     u_ref[...] = u.astype(u_ref.dtype)
-    # KL(N(mu, sigma^2) || N(0, I)) per row
-    kl = 0.5 * jnp.sum(jnp.exp(lv) + mu * mu - 1.0 - lv, axis=-1)
-    kl_ref[...] = kl.astype(kl_ref.dtype)
+    if sampled:
+        rate = 0.5 * jnp.sum(u * u - (u - mu) ** 2 * jnp.exp(-lv) - lv,
+                             axis=-1)
+    else:
+        rate = 0.5 * jnp.sum(jnp.exp(lv) + mu * mu - 1.0 - lv, axis=-1)
+    rate_ref[...] = rate.astype(rate_ref.dtype)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("block_t", "interpret"))
-def bottleneck_fused(mu, logvar, eps, *, block_t: int = DEFAULT_BLOCK_T,
-                     interpret: bool = True):
-    """mu/logvar/eps: (T, d).  Returns (u (T,d) in mu.dtype, kl (T,) fp32).
+def _cut_bwd_kernel(mu_ref, lv_ref, eps_ref, gu_ref, gr_ref,
+                    dmu_ref, dlv_ref, deps_ref, *, bits: int, sampled: bool):
+    mu = mu_ref[...].astype(jnp.float32)
+    lv = lv_ref[...].astype(jnp.float32)
+    eps = eps_ref[...].astype(jnp.float32)
+    gu = gu_ref[...].astype(jnp.float32)
+    gr = gr_ref[...].astype(jnp.float32)[:, None]
+    sigma = jnp.exp(0.5 * lv)
+    if sampled:
+        u = _quantize(mu + sigma * eps, bits)
+        w = (u - mu) * jnp.exp(-lv)
+        g_pre = gu + gr * (u - w)
+        dmu = gu + gr * u
+        dlv = g_pre * (0.5 * sigma * eps) + gr * 0.5 * (w * (u - mu) - 1.0)
+        deps = g_pre * sigma
+    else:
+        dmu = gu + gr * mu
+        dlv = gu * (0.5 * sigma * eps) + gr * 0.5 * (jnp.exp(lv) - 1.0)
+        deps = gu * sigma
+    dmu_ref[...] = dmu.astype(dmu_ref.dtype)
+    dlv_ref[...] = dlv.astype(dlv_ref.dtype)
+    deps_ref[...] = deps.astype(deps_ref.dtype)
 
-    T % block_t == 0 required (pad upstream)."""
-    T, d = mu.shape
-    block_t = min(block_t, T)
-    assert T % block_t == 0
 
-    grid = (T // block_t,)
+def _fwd_pallas(mu, logvar, eps, bits, sampled, block_t, interpret):
+    R, d = mu.shape
+    grid = (R // block_t,)
     spec = pl.BlockSpec((block_t, d), lambda i: (i, 0))
-    u, kl = pl.pallas_call(
-        _bottleneck_kernel,
+    return pl.pallas_call(
+        functools.partial(_cut_fwd_kernel, bits=bits, sampled=sampled),
         grid=grid,
         in_specs=[spec, spec, spec],
         out_specs=[spec, pl.BlockSpec((block_t,), lambda i: (i,))],
-        out_shape=[jax.ShapeDtypeStruct((T, d), mu.dtype),
-                   jax.ShapeDtypeStruct((T,), jnp.float32)],
+        out_shape=[jax.ShapeDtypeStruct((R, d), mu.dtype),
+                   jax.ShapeDtypeStruct((R,), jnp.float32)],
         interpret=interpret,
     )(mu, logvar, eps)
-    return u, kl
+
+
+def _bwd_pallas(mu, logvar, eps, gu, grate, bits, sampled, block_t,
+                interpret):
+    R, d = mu.shape
+    grid = (R // block_t,)
+    spec = pl.BlockSpec((block_t, d), lambda i: (i, 0))
+    spec1 = pl.BlockSpec((block_t,), lambda i: (i,))
+    return pl.pallas_call(
+        functools.partial(_cut_bwd_kernel, bits=bits, sampled=sampled),
+        grid=grid,
+        in_specs=[spec, spec, spec, spec, spec1],
+        out_specs=[spec, spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((R, d), mu.dtype),
+                   jax.ShapeDtypeStruct((R, d), logvar.dtype),
+                   jax.ShapeDtypeStruct((R, d), eps.dtype)],
+        interpret=interpret,
+    )(mu, logvar, eps, gu, grate)
+
+
+# ---------------------------------------------------------------------------
+# Shared custom VJP (pallas and reference impls run the same wrapper)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _cutlayer(mu, logvar, eps, bits, sampled, impl, block_t, interpret):
+    if impl == "pallas":
+        return _fwd_pallas(mu, logvar, eps, bits, sampled, block_t, interpret)
+    return ref.cutlayer_fwd_ref(mu, logvar, eps, bits, sampled)
+
+
+def _cutlayer_fwd(mu, logvar, eps, bits, sampled, impl, block_t, interpret):
+    out = _cutlayer(mu, logvar, eps, bits, sampled, impl, block_t, interpret)
+    return out, (mu, logvar, eps)
+
+
+def _cutlayer_bwd(bits, sampled, impl, block_t, interpret, res, cts):
+    mu, logvar, eps = res
+    gu, grate = cts
+    if impl == "pallas":
+        return _bwd_pallas(mu, logvar, eps, gu, grate, bits, sampled,
+                           block_t, interpret)
+    return ref.cutlayer_bwd_ref(mu, logvar, eps, gu, grate, bits, sampled)
+
+
+_cutlayer.defvjp(_cutlayer_fwd, _cutlayer_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+def _resolve_interpret(interpret):
+    if interpret is not None:
+        return interpret
+    from repro.kernels import ops          # lazy: ops imports this module
+    return not ops.on_tpu()
+
+
+@functools.partial(jax.jit, static_argnames=("link_bits", "rate_estimator",
+                                             "impl", "block_t", "interpret"))
+def _cutlayer_call(mu, logvar, eps, link_bits, rate_estimator, impl,
+                   block_t, interpret):
+    shape = mu.shape
+    d = shape[-1]
+    R = 1
+    for s in shape[:-1]:
+        R *= s
+    mu2 = mu.reshape(R, d)
+    lv2 = logvar.reshape(R, d)
+    eps2 = eps.reshape(R, d)
+    bt = min(block_t or DEFAULT_BLOCK_T, R)
+    pad = (-R) % bt
+    if pad:
+        mu2 = jnp.pad(mu2, ((0, pad), (0, 0)))
+        lv2 = jnp.pad(lv2, ((0, pad), (0, 0)))
+        eps2 = jnp.pad(eps2, ((0, pad), (0, 0)))
+    u, rate = _cutlayer(mu2, lv2, eps2, link_bits,
+                        rate_estimator == "sample", impl, bt, interpret)
+    if pad:
+        u, rate = u[:R], rate[:R]
+    return u.reshape(shape), rate.reshape(shape[:-1])
+
+
+def cutlayer_fused(mu, logvar, eps, *, link_bits: int = 32,
+                   rate_estimator: str = "analytic", impl: str = "pallas",
+                   block_t: int = None, interpret: bool = None):
+    """One fused pass over the cut layer, all J nodes in one launch.
+
+    mu/logvar/eps: (..., d) — fold any leading axes (J clients, batch,
+    sequence) in; they become the row grid.  Returns
+    (u (..., d) in mu.dtype, rate (...,) fp32).
+
+    link_bits >= 32 disables the quantizer; rate_estimator selects the
+    paper's sampled eq.-(6) estimator (evaluated at the quantized latent)
+    or the analytic Gaussian KL.  Gradients flow through the hand-written
+    fused backward (eq. 10), never through AD of the kernel body."""
+    return _cutlayer_call(mu, logvar, eps, link_bits, rate_estimator, impl,
+                          block_t, _resolve_interpret(interpret))
+
+
+def bottleneck_fused(mu, logvar, eps, *, block_t: int = DEFAULT_BLOCK_T,
+                     interpret: bool = None):
+    """Seed-compatible entry: u = mu + exp(logvar/2)*eps (no quantizer) and
+    the per-row analytic KL.  mu/logvar/eps: (T, d); returns (u, kl).
+
+    T need not divide block_t (rows are padded internally); interpret=None
+    auto-detects the backend."""
+    return cutlayer_fused(mu, logvar, eps, link_bits=32,
+                          rate_estimator="analytic", impl="pallas",
+                          block_t=block_t, interpret=interpret)

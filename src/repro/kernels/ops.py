@@ -9,6 +9,16 @@ scan, models/ssm.py's chunked SSD) which XLA compiles efficiently.  The
     backend="pallas"     pallas_call, interpret on CPU / compiled on TPU
     backend="reference"  kernels/ref.py jnp oracle
     backend="auto"       pallas on TPU, reference elsewhere
+
+`cutlayer` is the fused cut-layer megakernel (inl_bottleneck.py): sample +
+link-quantize + rate in one forward pass, the paper's eq.-(10) error-vector
+split in one backward pass, under a single shared `jax.custom_vjp`.  Both
+backends run that same VJP wrapper — "reference" swaps the kernel bodies
+for the jnp oracle so CPU CI exercises the training code path exactly.
+
+`resolve_backend` / `on_tpu` are the canonical resolvers; kernel modules
+use them for their `interpret=None` auto-detection (a kernel must never
+silently interpret on TPU, nor compile Mosaic on CPU).
 """
 from __future__ import annotations
 
@@ -20,35 +30,57 @@ from repro.kernels import ref
 from repro.kernels import ssm_scan as _ssd
 
 
-def _on_tpu() -> bool:
+def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def _resolve(backend: str) -> str:
+_on_tpu = on_tpu                      # back-compat alias
+
+
+def resolve_backend(backend: str) -> str:
     if backend == "auto":
-        return "pallas" if _on_tpu() else "reference"
+        return "pallas" if on_tpu() else "reference"
+    if backend not in ("pallas", "reference"):
+        raise ValueError(f"unknown backend {backend!r}")
     return backend
+
+
+_resolve = resolve_backend            # back-compat alias
 
 
 def attention(q, k, v, *, causal=True, window=0, q_offset=0,
               backend: str = "auto", **block_kw):
-    if _resolve(backend) == "pallas":
+    if resolve_backend(backend) == "pallas":
         return _fa.flash_attention(q, k, v, causal=causal, window=window,
                                    q_offset=q_offset,
-                                   interpret=not _on_tpu(), **block_kw)
+                                   interpret=not on_tpu(), **block_kw)
     return ref.attention_ref(q, k, v, causal=causal, window=window,
                              q_offset=q_offset)
 
 
 def bottleneck(mu, logvar, eps, *, backend: str = "auto", **block_kw):
-    if _resolve(backend) == "pallas":
+    """Seed-compatible fused sample + analytic KL (no quantizer)."""
+    if resolve_backend(backend) == "pallas":
         return _bn.bottleneck_fused(mu, logvar, eps,
-                                    interpret=not _on_tpu(), **block_kw)
+                                    interpret=not on_tpu(), **block_kw)
     return ref.bottleneck_ref(mu, logvar, eps)
 
 
+def cutlayer(mu, logvar, eps, *, link_bits: int = 32,
+             rate_estimator: str = "sample", backend: str = "auto",
+             block_t: int = None):
+    """Fused cut layer: (u_quantized, per-row rate) in one kernel pass,
+    custom-VJP backward.  mu/logvar/eps: (..., d) with all leading axes
+    (clients, batch, sequence) folded into the row grid — one launch for
+    all J nodes."""
+    return _bn.cutlayer_fused(mu, logvar, eps, link_bits=link_bits,
+                              rate_estimator=rate_estimator,
+                              impl=resolve_backend(backend),
+                              block_t=block_t, interpret=None)
+
+
 def ssd_scan(x, dt, a, bm, cm, dskip, *, backend: str = "auto", **block_kw):
-    if _resolve(backend) == "pallas":
+    if resolve_backend(backend) == "pallas":
         return _ssd.ssd_scan(x, dt, a, bm, cm, dskip,
-                             interpret=not _on_tpu(), **block_kw)
+                             interpret=not on_tpu(), **block_kw)
     return ref.ssd_scan_ref(x, dt, a, bm, cm, dskip)

@@ -1,12 +1,41 @@
 """Pure-jnp oracles for every Pallas kernel.  Deliberately naive and
 obviously-correct; used by tests/test_kernels.py for allclose sweeps and by
 ops.py as the CPU fallback for tiny shapes.
+
+For the fused cut layer this module carries two things:
+
+  * `cutlayer_ref` — the UNFUSED 3-pass formulation (sample, quantize,
+    rate) written with `stop_gradient` straight-through semantics so plain
+    `jax.grad` yields the ground-truth gradients the hand-written VJP in
+    `inl_bottleneck.py` must match.
+  * `cutlayer_fwd_ref` / `cutlayer_bwd_ref` — single-expression jnp
+    implementations of the fused forward and the hand-derived backward.
+    `inl_bottleneck.cutlayer_fused(impl="reference")` plugs these into the
+    SAME `jax.custom_vjp` wrapper the Pallas path uses, so CPU CI exercises
+    the exact code path that runs on TPU.
+
+The link quantizer's value map (`quantize_value`, `QUANT_RANGE`) lives here
+as the single source of truth shared by `core/linkmodel.py` and the kernels.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+QUANT_RANGE = 4.0   # Gaussian bottlenecks: 4 sigma covers the latents
+
+
+def quantize_value(u, bits: int, *, u_range: float = QUANT_RANGE):
+    """Value map of the uniform link quantizer (no gradient semantics).
+
+    bits >= 32 is the identity (full-precision link)."""
+    if bits >= 32:
+        return u
+    levels = (1 << bits) - 1
+    scale = levels / (2.0 * u_range)
+    clipped = jnp.clip(u, -u_range, u_range)
+    return jnp.round((clipped + u_range) * scale) / scale - u_range
 
 
 def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
@@ -40,6 +69,87 @@ def bottleneck_ref(mu, logvar, eps):
     u = muf + jnp.exp(0.5 * lv) * eps.astype(jnp.float32)
     kl = 0.5 * jnp.sum(jnp.exp(lv) + muf * muf - 1.0 - lv, axis=-1)
     return u.astype(mu.dtype), kl
+
+
+def cutlayer_ref(mu, logvar, eps, *, link_bits: int = 32,
+                 rate_estimator: str = "sample"):
+    """Unfused 3-pass cut layer, ground truth for the fused kernel.
+
+    u    = quantize_st(mu + exp(logvar/2) * eps)      (straight-through)
+    rate = log P(u|x) - log Q(u)   ("sample", eq. 6, standard-normal prior;
+           the log(2 pi) terms cancel) or the analytic Gaussian KL.
+
+    Differentiable by plain AD: the quantizer uses `stop_gradient`, so
+    `jax.grad` through this function defines the gradients — including the
+    eq.-(10) error-vector + rate split — that the hand-written VJP in
+    `inl_bottleneck.py` must reproduce."""
+    muf = mu.astype(jnp.float32)
+    lv = logvar.astype(jnp.float32)
+    sigma = jnp.exp(0.5 * lv)
+    pre = muf + sigma * eps.astype(jnp.float32)
+    q = quantize_value(pre, link_bits)
+    u = pre + jax.lax.stop_gradient(q - pre)
+    if rate_estimator == "sample":
+        rate = 0.5 * jnp.sum(u * u - (u - muf) ** 2 * jnp.exp(-lv) - lv,
+                             axis=-1)
+    else:
+        rate = 0.5 * jnp.sum(jnp.exp(lv) + muf * muf - 1.0 - lv, axis=-1)
+    return u.astype(mu.dtype), rate
+
+
+def cutlayer_fwd_ref(mu, logvar, eps, bits: int, sampled: bool):
+    """Fused forward as one jnp expression (XLA compiles it to a single
+    pass on CPU).  Must match `inl_bottleneck._cut_fwd_kernel` bit-for-bit
+    in fp32 arithmetic order."""
+    muf = mu.astype(jnp.float32)
+    lv = logvar.astype(jnp.float32)
+    sigma = jnp.exp(0.5 * lv)
+    pre = muf + sigma * eps.astype(jnp.float32)
+    u = quantize_value(pre, bits)
+    if sampled:
+        rate = 0.5 * jnp.sum(u * u - (u - muf) ** 2 * jnp.exp(-lv) - lv,
+                             axis=-1)
+    else:
+        rate = 0.5 * jnp.sum(jnp.exp(lv) + muf * muf - 1.0 - lv, axis=-1)
+    return u.astype(mu.dtype), rate
+
+
+def cutlayer_bwd_ref(mu, logvar, eps, gu, grate, bits: int, sampled: bool):
+    """Hand-derived fused backward (the paper's eq.-10 split).
+
+    Inputs: residuals (mu, logvar, eps) and cotangents gu (rows, d) — the
+    decoder error-vector chunk delta[j], straight-through through the
+    quantizer — and grate (rows,) on the rate output.  With
+    w = (u - mu) * exp(-logvar) (the whitened residual) and straight-through
+    du/dpre = 1:
+
+      sample:   dmu  = gu + grate * u
+                dlv  = (gu + grate*(u - w)) * eps*sigma/2
+                       + grate * ((u-mu)^2 exp(-lv) - 1) / 2
+                deps = (gu + grate*(u - w)) * sigma
+      analytic: dmu  = gu + grate * mu
+                dlv  = gu * eps*sigma/2 + grate * (exp(lv) - 1) / 2
+                deps = gu * sigma
+    """
+    muf = mu.astype(jnp.float32)
+    lv = logvar.astype(jnp.float32)
+    ef = eps.astype(jnp.float32)
+    sigma = jnp.exp(0.5 * lv)
+    gu = gu.astype(jnp.float32)
+    gr = grate.astype(jnp.float32)[..., None]
+    if sampled:
+        u = quantize_value(muf + sigma * ef, bits)
+        w = (u - muf) * jnp.exp(-lv)
+        g_pre = gu + gr * (u - w)
+        dmu = gu + gr * u
+        dlv = g_pre * (0.5 * sigma * ef) + gr * 0.5 * (w * (u - muf) - 1.0)
+        deps = g_pre * sigma
+    else:
+        dmu = gu + gr * muf
+        dlv = gu * (0.5 * sigma * ef) + gr * 0.5 * (jnp.exp(lv) - 1.0)
+        deps = gu * sigma
+    return (dmu.astype(mu.dtype), dlv.astype(logvar.dtype),
+            deps.astype(eps.dtype))
 
 
 def ssd_scan_ref(x, dt, a, bm, cm, dskip):

@@ -9,6 +9,23 @@ from __future__ import annotations
 import jax
 
 
+def current_abstract_mesh():
+    """The ambient abstract mesh, or None when no mesh is active.
+
+    `jax.sharding.get_abstract_mesh` is only public from jax >= 0.5; on the
+    pinned 0.4.x it lives in `jax._src.mesh` and returns a non-mesh sentinel
+    when nothing is set.  Callers branch on None instead of `.empty` so both
+    versions work."""
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get is None:
+        from jax._src import mesh as _mesh
+        get = _mesh.get_abstract_mesh
+    m = get()
+    if not hasattr(m, "axis_names") or getattr(m, "empty", False):
+        return None
+    return m
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """Single pod: 16x16 = 256 chips (data, model).
     Multi-pod: 2 pods x 256 = 512 chips (pod, data, model)."""

@@ -1,5 +1,9 @@
 """Step functions: train / prefill / decode (+ INL paper-mode train), the
 units the launcher jits, shards, and the dry-run lowers.
+
+`make_scan_train_step` wraps K optimizer steps into one jitted
+lax.scan with donated (params, opt_state) buffers — the launcher's epoch
+unit; per-batch Python dispatch overhead amortises over K.
 """
 from __future__ import annotations
 
@@ -96,6 +100,47 @@ def make_inl_train_step(cfg, optimizer):
         new_params, new_opt = optimizer.update(grads, opt_state, params)
         return new_params, new_opt, metrics
     return inl_step
+
+
+def make_scan_train_step(cfg, optimizer, *, scheme: str = "standard",
+                         microbatches: int = 1, donate: bool = None):
+    """K optimizer steps in ONE jitted `jax.lax.scan`, with the (params,
+    opt_state) buffers donated — per-step Python dispatch and the
+    params/opt_state copy at every update both disappear.
+
+    standard scheme: (params, opt_state, batches) -> (params, opt_state,
+    stacked metrics), where `batches` is the usual batch pytree with an
+    extra leading K axis.  inl scheme additionally takes `rngs` (K, 2)
+    PRNG keys, one per step.
+
+    donate=None donates only on accelerators (CPU XLA cannot alias the
+    buffers and would just warn)."""
+    if donate is None:
+        donate = jax.default_backend() != "cpu"
+    donate_args = (0, 1) if donate else ()
+
+    if scheme == "inl":
+        inner = make_inl_train_step(cfg, optimizer)
+
+        def epoch(params, opt_state, batches, rngs):
+            def body(carry, x):
+                batch, rng = x
+                p, o, m = inner(carry[0], carry[1], batch, rng)
+                return (p, o), m
+            (p, o), ms = jax.lax.scan(body, (params, opt_state),
+                                      (batches, rngs))
+            return p, o, ms
+    else:
+        inner = make_train_step(cfg, optimizer, microbatches=microbatches)
+
+        def epoch(params, opt_state, batches):
+            def body(carry, batch):
+                p, o, m = inner(carry[0], carry[1], batch)
+                return (p, o), m
+            (p, o), ms = jax.lax.scan(body, (params, opt_state), batches)
+            return p, o, ms
+
+    return jax.jit(epoch, donate_argnums=donate_args)
 
 
 def default_optimizer(cfg, total_steps: int = 10_000):

@@ -40,10 +40,15 @@ def main():
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--scan-steps", type=int, default=10,
+                    help="optimizer steps per jitted lax.scan call (donated "
+                         "params/opt_state buffers; 1 = step-per-dispatch)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
-    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--log-every", type=int, default=10,
+                    help="(superseded: metrics are logged once per scan "
+                         "group, i.e. every --scan-steps steps)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -67,13 +72,12 @@ def main():
             cfg = dataclasses.replace(cfg, num_layers=need)
         params = inl_llm.init(cfg, key)
         opt_state = optimizer.init(params)
-        step_fn = jax.jit(inl_llm.make_train_step(cfg, optimizer))
     else:
         from repro.models import zoo
         params = zoo.init_params(cfg, key)
         opt_state = optimizer.init(params)
-        step_fn = jax.jit(steps_lib.make_train_step(
-            cfg, optimizer, microbatches=args.microbatches))
+    epoch_fn = steps_lib.make_scan_train_step(
+        cfg, optimizer, scheme=args.scheme, microbatches=args.microbatches)
 
     n_params = sum(x.size for x in jax.tree.leaves(params))
     print(f"arch={cfg.name} scheme={args.scheme} params={n_params:,} "
@@ -84,26 +88,47 @@ def main():
     rng = jax.random.PRNGKey(args.seed + 1)
     t0 = time.time()
     history = []
-    for step, batch in enumerate(data):
-        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+    K = max(args.scan_steps, 1)
+    step = 0
+
+    def run_group(params, opt_state, rng, group):
+        # one jitted scan over the group: K optimizer steps, zero
+        # per-step dispatch, donated params/opt_state
+        nonlocal step
+        batches = jax.tree.map(lambda *xs: jnp.stack(xs),
+                               *[{k: jnp.asarray(v) for k, v in b.items()}
+                                 for b in group])
         if args.scheme == "inl":
             rng, sub = jax.random.split(rng)
-            params, opt_state, metrics = step_fn(params, opt_state, batch,
-                                                 sub)
+            rngs = jax.random.split(sub, len(group))
+            params, opt_state, ms = epoch_fn(params, opt_state, batches,
+                                             rngs)
         else:
-            params, opt_state, metrics = step_fn(params, opt_state, batch)
-        if step % args.log_every == 0 or step == args.steps - 1:
-            m = {k: float(v) for k, v in metrics.items()
-                 if jnp.ndim(v) == 0}
-            m["step"] = step
-            m["wall_s"] = round(time.time() - t0, 1)
-            history.append(m)
-            print(json.dumps({k: (round(v, 4) if isinstance(v, float) else v)
-                              for k, v in m.items()}), flush=True)
-        if args.ckpt_dir and args.ckpt_every and step and \
-                step % args.ckpt_every == 0:
+            params, opt_state, ms = epoch_fn(params, opt_state, batches)
+        prev_step, step = step, step + len(group)
+        last = jax.tree.map(lambda x: x[-1], ms)
+        m = {k: float(v) for k, v in last.items() if jnp.ndim(v) == 0}
+        m["step"] = step - 1
+        m["wall_s"] = round(time.time() - t0, 1)
+        history.append(m)
+        print(json.dumps({k: (round(v, 4) if isinstance(v, float) else v)
+                          for k, v in m.items()}), flush=True)
+        # checkpoint when the group crossed a --ckpt-every boundary (step
+        # advances by the group size, so an exact-multiple test would skip)
+        if args.ckpt_dir and args.ckpt_every and \
+                step // args.ckpt_every > prev_step // args.ckpt_every:
             checkpoint.save(args.ckpt_dir, step, params,
                             extra={"arch": cfg.name, "scheme": args.scheme})
+        return params, opt_state, rng
+
+    group = []
+    for batch in data:                  # data stays a streaming iterator
+        group.append(batch)
+        if len(group) == K:
+            params, opt_state, rng = run_group(params, opt_state, rng, group)
+            group = []
+    if group:                           # final partial group
+        params, opt_state, rng = run_group(params, opt_state, rng, group)
     if args.ckpt_dir:
         checkpoint.save(args.ckpt_dir, args.steps, params,
                         extra={"arch": cfg.name, "scheme": args.scheme})

@@ -135,8 +135,9 @@ def moe_apply_ep(p, cfg, x):
 
     Falls back to moe_apply when no mesh with a 'model' axis is active.
     """
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh.empty or "model" not in mesh.axis_names:
+    from repro.launch.mesh import current_abstract_mesh
+    mesh = current_abstract_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
         return moe_apply(p, cfg, x)
     from jax.sharding import PartitionSpec as P
     batch_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))

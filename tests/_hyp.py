@@ -1,0 +1,68 @@
+"""hypothesis compatibility layer for the test suite.
+
+Tier-1 CI (`PYTHONPATH=src python -m pytest -x -q`) must collect and pass
+without optional dependencies.  When `hypothesis` is installed (see
+requirements-test.txt) the real library is re-exported; otherwise a
+minimal deterministic fallback runs each property test over a fixed-seed
+sample of the strategy space — weaker shrinking/coverage, but the
+properties still execute.
+
+Usage in tests:  `from _hyp import given, settings, st`
+"""
+import inspect
+import random
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # deterministic fallback
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_EXAMPLES = 10
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class st:                                         # noqa: N801 (mimic API)
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return _Strategy(lambda r: r.choice(seq))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda r: r.random() < 0.5)
+
+    def settings(**_kw):
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            def wrapper(*args, **kwargs):
+                rnd = random.Random(0x5EED)
+                for _ in range(_FALLBACK_EXAMPLES):
+                    drawn = {k: s.draw(rnd) for k, s in strategies.items()}
+                    fn(*args, **drawn, **kwargs)
+            # pytest must not see the strategy params (it would treat them
+            # as fixtures), so expose a signature without them — and no
+            # __wrapped__, which pytest would follow back to the original.
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            sig = inspect.signature(fn)
+            wrapper.__signature__ = sig.replace(parameters=[
+                p for name, p in sig.parameters.items()
+                if name not in strategies])
+            return wrapper
+        return deco

@@ -1,0 +1,161 @@
+"""The fused cut-layer megakernel's hand-written VJP vs ground truth.
+
+Ground truth is plain `jax.grad` through `kernels/ref.cutlayer_ref` — the
+unfused 3-pass formulation with `stop_gradient` straight-through quantizer
+semantics.  The custom VJP (kernels/inl_bottleneck.py) must reproduce it:
+the decoder-cotangent chunk delta[j] passed straight through the quantizer,
+plus the local rate gradient (paper eq. 10), for both rate estimators,
+across dtypes and odd (non-block-multiple) row counts.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp import given, settings, st  # hypothesis, or deterministic fallback
+
+from repro.kernels import ops, ref
+from repro.kernels.inl_bottleneck import cutlayer_fused
+
+GRAD_TOL = {jnp.float32: 1e-5, jnp.bfloat16: 5e-2}
+FWD_TOL = {jnp.float32: 1e-5, jnp.bfloat16: 2e-2}
+
+
+def _data(T, d, dtype, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    mu = jax.random.normal(ks[0], (T, d), dtype)
+    lv = (jax.random.normal(ks[1], (T, d)) * 0.4).astype(dtype)
+    eps = jax.random.normal(ks[2], (T, d), dtype)
+    cu = jax.random.normal(ks[3], (T, d))        # decoder cotangent delta[j]
+    cr = jax.random.normal(ks[4], (T,))          # rate cotangent
+    return mu, lv, eps, cu, cr
+
+
+def _scalar(fn, cu, cr):
+    def f(mu, lv, eps):
+        u, rate = fn(mu, lv, eps)
+        return (u.astype(jnp.float32) * cu).sum() + (rate * cr).sum()
+    return f
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("rate", ["sample", "analytic"])
+@pytest.mark.parametrize("bits", [32, 8, 4])
+@pytest.mark.parametrize("T", [257, 1000])          # odd / non-block rows
+def test_custom_vjp_matches_ad_reference(T, bits, rate, dtype):
+    d = 32
+    mu, lv, eps, cu, cr = _data(T, d, dtype)
+    fused = _scalar(lambda m, l, e: ops.cutlayer(
+        m, l, e, link_bits=bits, rate_estimator=rate, backend="reference"),
+        cu, cr)
+    oracle = _scalar(lambda m, l, e: ref.cutlayer_ref(
+        m, l, e, link_bits=bits, rate_estimator=rate), cu, cr)
+    g_fused = jax.grad(fused, argnums=(0, 1, 2))(mu, lv, eps)
+    g_ref = jax.grad(oracle, argnums=(0, 1, 2))(mu, lv, eps)
+    tol = GRAD_TOL[dtype]
+    for name, a, b in zip(("dmu", "dlogvar", "deps"), g_fused, g_ref):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            atol=tol, rtol=tol, err_msg=f"{name} bits={bits} rate={rate}")
+
+
+@pytest.mark.kernel_interpret
+@pytest.mark.parametrize("rate", ["sample", "analytic"])
+def test_pallas_vjp_matches_reference_vjp(rate):
+    """Interpret-mode Pallas backward kernel == the jnp reference backward
+    under the same custom_vjp wrapper (odd rows exercise the padding)."""
+    T, d, bits = 97, 16, 6
+    mu, lv, eps, cu, cr = _data(T, d, jnp.float32, seed=1)
+    f_pal = _scalar(lambda m, l, e: cutlayer_fused(
+        m, l, e, link_bits=bits, rate_estimator=rate, impl="pallas",
+        block_t=64), cu, cr)
+    f_ref = _scalar(lambda m, l, e: cutlayer_fused(
+        m, l, e, link_bits=bits, rate_estimator=rate, impl="reference"),
+        cu, cr)
+    vp, gp = jax.value_and_grad(f_pal, argnums=(0, 1, 2))(mu, lv, eps)
+    vr, gr = jax.value_and_grad(f_ref, argnums=(0, 1, 2))(mu, lv, eps)
+    np.testing.assert_allclose(float(vp), float(vr), rtol=1e-5)
+    for a, b in zip(gp, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_client_axis_folds_into_rows():
+    """(J, B, d) input == per-node calls stacked: one launch for all J."""
+    J, B, d = 3, 40, 24
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    mu = jax.random.normal(ks[0], (J, B, d))
+    lv = jax.random.normal(ks[1], (J, B, d)) * 0.3
+    eps = jax.random.normal(ks[2], (J, B, d))
+    u, rate = ops.cutlayer(mu, lv, eps, link_bits=8, backend="reference")
+    assert u.shape == (J, B, d) and rate.shape == (J, B)
+    for j in range(J):
+        uj, rj = ops.cutlayer(mu[j], lv[j], eps[j], link_bits=8,
+                              backend="reference")
+        np.testing.assert_allclose(np.asarray(u[j]), np.asarray(uj),
+                                   atol=1e-6)
+        np.testing.assert_allclose(np.asarray(rate[j]), np.asarray(rj),
+                                   atol=1e-4, rtol=1e-5)
+
+
+def test_fused_rate_matches_bottleneck_estimators():
+    """The kernel's rate == core/bottleneck's sampled / analytic rates."""
+    from repro.core import bottleneck
+    T, d = 64, 16
+    mu, lv, eps, _, _ = _data(T, d, jnp.float32, seed=3)
+    u, r_s = ops.cutlayer(mu, lv, eps, link_bits=32,
+                          rate_estimator="sample", backend="reference")
+    want = bottleneck.rate_sampled(u, mu, lv)
+    np.testing.assert_allclose(np.asarray(r_s), np.asarray(want),
+                               atol=1e-4, rtol=1e-5)
+    _, r_a = ops.cutlayer(mu, lv, eps, link_bits=32,
+                          rate_estimator="analytic", backend="reference")
+    np.testing.assert_allclose(np.asarray(r_a),
+                               np.asarray(bottleneck.rate_analytic(mu, lv)),
+                               atol=1e-4, rtol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), T=st.sampled_from([31, 64, 130]),
+       bits=st.sampled_from([4, 8, 32]))
+def test_vjp_property_random_shapes(seed, T, bits):
+    """Property pass: gradients match AD for arbitrary seeds / odd T."""
+    mu, lv, eps, cu, cr = _data(T, 16, jnp.float32, seed=seed)
+    fused = _scalar(lambda m, l, e: ops.cutlayer(
+        m, l, e, link_bits=bits, rate_estimator="sample",
+        backend="reference"), cu, cr)
+    oracle = _scalar(lambda m, l, e: ref.cutlayer_ref(
+        m, l, e, link_bits=bits, rate_estimator="sample"), cu, cr)
+    g1 = jax.grad(fused, argnums=(0, 1))(mu, lv, eps)
+    g2 = jax.grad(oracle, argnums=(0, 1))(mu, lv, eps)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_linkmodel_transmit_is_the_fused_entry():
+    """linkmodel.transmit (the wire-side name) == bottleneck's fused
+    sample+quantize+rate entry, key for key."""
+    from repro.core import bottleneck, linkmodel
+    key = jax.random.PRNGKey(5)
+    ks = jax.random.split(jax.random.PRNGKey(6), 2)
+    mu = jax.random.normal(ks[0], (3, 20, 16))
+    lv = jax.random.normal(ks[1], (3, 20, 16)) * 0.3
+    u1, r1 = linkmodel.transmit(key, mu, lv, bits=8, backend="reference")
+    u2, r2 = bottleneck.fused_sample_rate(key, mu, lv, link_bits=8,
+                                          backend="reference")
+    np.testing.assert_array_equal(np.asarray(u1), np.asarray(u2))
+    np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
+
+
+def test_quantized_forward_respects_link_capacity():
+    """Fewer link bits -> coarser u (capacity ordering) and u stays in the
+    quantizer's clip range."""
+    T, d = 128, 32
+    mu, lv, eps, _, _ = _data(T, d, jnp.float32, seed=4)
+    u32, _ = ops.cutlayer(mu, lv, eps, link_bits=32, backend="reference")
+    u8, _ = ops.cutlayer(mu, lv, eps, link_bits=8, backend="reference")
+    u4, _ = ops.cutlayer(mu, lv, eps, link_bits=4, backend="reference")
+    e8 = float(jnp.mean((u8 - u32) ** 2))
+    e4 = float(jnp.mean((u4 - u32) ** 2))
+    assert e4 > e8 > 0.0
+    assert float(jnp.max(jnp.abs(u4))) <= ref.QUANT_RANGE + 1e-6

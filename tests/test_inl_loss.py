@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis, or deterministic fallback
 
 from repro.configs.paper_inl import SMOKE as CFG
 from repro.core import bottleneck, inl, losses, paper_model

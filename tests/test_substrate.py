@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis, or deterministic fallback
 
 from repro import checkpoint, optim
 from repro.data import multiview, tokens
@@ -130,7 +130,10 @@ def test_param_specs_divisibility_guard():
     from jax.sharding import AbstractMesh, PartitionSpec as P
     from repro.launch.sharding import param_spec
 
-    mesh = AbstractMesh((16, 16), ("data", "model"))
+    try:
+        mesh = AbstractMesh((16, 16), ("data", "model"))      # jax >= 0.5
+    except TypeError:
+        mesh = AbstractMesh((("data", 16), ("model", 16)))    # jax 0.4.x
 
     class Key:
         def __init__(self, k):
