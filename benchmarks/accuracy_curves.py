@@ -1,8 +1,10 @@
 """Benchmark 2 — paper Figures 5 & 7: accuracy vs epochs and accuracy vs
-bandwidth for INL / FL / SL on the (synthetic) multi-view task.
+bandwidth for every registered scheme on the (synthetic) multi-view task.
 
-Experiment 1 partitions the data per scheme (§IV-A); Experiment 2 trains all
-schemes on the same data, differing only in per-client noise (§IV-B).
+All schemes run through the unified Scheme registry
+(`repro.core.schemes`): one loop (`schemes.runner.run_scheme`) drives
+init / rounds / predict / bandwidth for INL, FL, SL — and any scheme
+registered later — on the same data and the same fused cut-layer substrate.
 Reduced scale for CPU: the paper's qualitative claims to check are
   (1) INL reaches higher accuracy than FL, and converges faster;
   (2) per unit of exchanged bandwidth, INL >> SL > FL.
@@ -11,13 +13,8 @@ from __future__ import annotations
 
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro import optim
 from repro.configs.paper_inl import PaperExperimentConfig
-from repro.core import bandwidth, fl, inl, paper_model, sl
+from repro.core import schemes
 from repro.data import multiview
 
 CFG = PaperExperimentConfig(conv_channels=(8, 16), d_bottleneck=16,
@@ -27,112 +24,30 @@ BATCH = 64
 
 
 def _data(experiment: int):
+    """Multi-view data for the comparison runs.
+
+    NOTE: this reduced-scale harness (like the seed's runners) trains every
+    scheme under the Exp-2 protocol — all clients see all images, differing
+    only by their per-client noise level.  `experiment` selects the figure
+    LABEL (fig5 vs fig7) for the CSV; the Exp-1 per-scheme data partition
+    (multiview.split_experiment1, paper §IV-A) is not wired into the
+    unified runner yet."""
     imgs, labels = multiview.make_base_dataset(CFG.dataset_size, seed=0)
     views = multiview.make_views(imgs, CFG.noise_stds)
-    split = (multiview.split_experiment1 if experiment == 1
-             else lambda v, l, J: multiview.split_experiment2(v, l, J))(
-        views, labels, CFG.num_clients)
-    return views, labels, split
-
-
-def run_inl(views, labels, epochs=EPOCHS):
-    params, state = inl.init(CFG, jax.random.PRNGKey(0))
-    opt = optim.adam(2e-3)
-    opt_state = opt.init(params)
-    step = inl.make_train_step(CFG, opt)
-    rng = jax.random.PRNGKey(1)
-    meter = bandwidth.BandwidthMeter()
-    p_total = CFG.num_clients * CFG.d_bottleneck
-    curve = []
-    ev = jnp.asarray(views[:, :512])
-    el = jnp.asarray(labels[:512])
-    for ep in range(epochs):
-        for v, l in multiview.multiview_batches(views, labels, BATCH,
-                                                seed=ep):
-            rng, sub = jax.random.split(rng)
-            params, state, opt_state, m = step(
-                params, state, opt_state, jnp.asarray(v), jnp.asarray(l),
-                sub)
-            meter.add(2 * BATCH * p_total * CFG.link_bits)
-        acc = float(inl.evaluate(params, state, ev, el))
-        curve.append((ep + 1, acc, meter.gbits))
-    return curve
-
-
-def run_sl(views, labels, epochs=EPOCHS):
-    (client, server), state = sl.init(CFG, jax.random.PRNGKey(0))
-    oc, os_ = optim.adam(2e-3), optim.adam(2e-3)
-    oc_s, os_s = oc.init(client), os_.init(server)
-    step = sl.make_train_step(oc, os_)
-    rng = jax.random.PRNGKey(1)
-    meter = bandwidth.BandwidthMeter()
-    p_total = CFG.num_clients * CFG.d_bottleneck
-    n_client = sum(x.size for x in jax.tree.leaves(client))
-    curve = []
-    ev = jnp.asarray(views[:, :512])
-    el = jnp.asarray(labels[:512])
-    for ep in range(epochs):
-        # round-robin: each epoch every client takes one pass over its shard
-        for v, l in multiview.multiview_batches(views, labels, BATCH,
-                                                seed=ep):
-            rng, sub = jax.random.split(rng)
-            client, server, state, oc_s, os_s, m = step(
-                client, server, state, oc_s, os_s, jnp.asarray(v),
-                jnp.asarray(l), sub)
-            meter.add(2 * BATCH * p_total * 32)
-        meter.add(n_client * CFG.num_clients * 32)     # weight hand-offs
-        probs = sl.predict(client, server, state, ev)
-        acc = float((jnp.argmax(probs, -1) == el).mean())
-        curve.append((ep + 1, acc, meter.gbits))
-    return curve
-
-
-def run_fl(views, labels, epochs=EPOCHS, local_steps=2):
-    params, state = fl.init(CFG, jax.random.PRNGKey(0))
-    opt = optim.adam(2e-3)
-    opt_state = jax.vmap(opt.init)(params)
-    round_fn = fl.make_round(CFG, opt, local_steps)
-    J = CFG.num_clients
-    n_params = paper_model.fl_param_count(CFG)
-    meter = bandwidth.BandwidthMeter()
-    curve = []
-    n = labels.shape[0]
-    img_avg = jnp.asarray(multiview.average_view(views[:, :512]))
-    el = jnp.asarray(labels[:512])
-    rng = jax.random.PRNGKey(1)
-    rounds_per_epoch = max(n // (BATCH * local_steps * J), 1)
-    for ep in range(epochs):
-        for r in range(rounds_per_epoch):
-            vs, ls = [], []
-            for j in range(J):
-                idx = np.random.default_rng(ep * 1000 + r * 10 + j) \
-                    .integers(0, n, BATCH * local_steps)
-                vj = views[j][idx].reshape(local_steps, BATCH,
-                                           *views.shape[2:])
-                vs.append(np.broadcast_to(
-                    vj[:, None], (local_steps, J, BATCH)
-                    + views.shape[2:]).copy())
-                ls.append(labels[idx].reshape(local_steps, BATCH))
-            rng, *subs = jax.random.split(rng, J + 1)
-            params, state, opt_state, m = round_fn(
-                params, state, opt_state, jnp.asarray(np.stack(vs)),
-                jnp.asarray(np.stack(ls)), jnp.stack(subs))
-            meter.add(fl.round_bits(CFG, n_params))
-        probs = fl.predict(params, state, img_avg)
-        acc = float((jnp.argmax(probs, -1) == el).mean())
-        curve.append((ep + 1, acc, meter.gbits))
-    return curve
+    return views, labels
 
 
 def main(experiment: int = 2, epochs: int = EPOCHS):
-    views, labels, split = _data(experiment)
+    views, labels = _data(experiment)
     print("name,scheme,epoch,accuracy,gbits_exchanged")
     t0 = time.time()
-    for scheme, runner in (("inl", run_inl), ("sl", run_sl), ("fl", run_fl)):
-        curve = runner(views, labels, epochs)
-        for ep, acc, gb in curve:
-            print(f"fig{5 if experiment == 1 else 7},{scheme},{ep},"
-                  f"{acc:.4f},{gb:.6f}", flush=True)
+    fig = 5 if experiment == 1 else 7
+    for name in schemes.available():
+        curve = schemes.runner.run_scheme(name, views, labels, CFG,
+                                          epochs=epochs, batch_size=BATCH)
+        for pt in curve:
+            print(f"fig{fig},{name},{pt.epoch},{pt.accuracy:.4f},"
+                  f"{pt.gbits:.6f}", flush=True)
     print(f"# wall {time.time()-t0:.1f}s")
 
 

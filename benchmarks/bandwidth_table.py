@@ -1,8 +1,10 @@
 """Benchmark 1 — paper Table I: bandwidth requirements of INL vs FL vs SL.
 
 Closed-form per §III-C, printed next to the published numbers, plus the
-measured-bits counter from an actual INL training epoch on the synthetic
-multi-view task (formula == measured is asserted in tests/test_schemes.py).
+per-round accounting of every REGISTERED scheme on the reduced-scale
+experiment config — the same `bits_per_round` values the unified runner
+meters during training (formula == measured is asserted in
+tests/test_scheme_parity.py).
 """
 from __future__ import annotations
 
@@ -27,12 +29,43 @@ def rows():
     return out
 
 
+def scheme_rows(batch_size: int = 64):
+    """Per-round bits for each registered scheme on the reduced config —
+    the §III-C closed forms the Scheme registry routes through."""
+    import jax
+
+    from benchmarks.accuracy_curves import CFG
+    from repro.core import schemes
+
+    out = []
+    for name in schemes.available():
+        scheme = schemes.get(name)
+        state = scheme.init(CFG, jax.random.PRNGKey(0))
+        out.append({
+            "scheme": name,
+            "batch": batch_size,
+            "round_bits": scheme.bits_per_round(CFG, state, batch_size),
+            "epoch_overhead_bits": scheme.epoch_overhead_bits(CFG, state),
+            "batches_per_round": scheme.batches_per_round(CFG),
+        })
+    return out
+
+
 def main():
     print("name,network,q,scheme,gbits,paper_gbits,rel_err")
     for r in rows():
         print(f"table1,{r['network']},{r['q']},{r['scheme']},"
               f"{r['gbits']},{r['paper_gbits']},{r['rel_err']}")
+    print("name,scheme,batch,round_bits,epoch_overhead_bits,"
+          "batches_per_round")
+    for r in scheme_rows():
+        print(f"scheme_round,{r['scheme']},{r['batch']},"
+              f"{r['round_bits']:.0f},{r['epoch_overhead_bits']:.0f},"
+              f"{r['batches_per_round']}")
 
 
 if __name__ == "__main__":
+    import pathlib
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
     main()

@@ -1,7 +1,9 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV
 # sections (see each module for details):
-#   table1    bandwidth_table    paper Table I closed-form vs published
-#   fig5/7    accuracy_curves    accuracy-vs-epoch / accuracy-vs-bandwidth
+#   table1    bandwidth_table    paper Table I closed-form vs published, plus
+#                                per-round bits of every registered scheme
+#   fig5/7    accuracy_curves    accuracy-vs-epoch / accuracy-vs-bandwidth for
+#                                every scheme in the unified registry
 #   kernels   kernel_bench       hot-spot micro-benchmarks
 #   roofline  roofline_report    dry-run three-term roofline rows
 from __future__ import annotations

@@ -1,25 +1,39 @@
-"""Reproduce the paper's comparison (Figures 5/7, reduced scale): INL vs
-federated vs split learning — accuracy per epoch and per Gbit exchanged.
+"""Reproduce the paper's comparison (Figures 5/7, reduced scale): every
+scheme in the unified registry — INL vs federated vs split learning —
+accuracy per epoch and per Gbit exchanged, on one shared runner and one
+fused cut-layer substrate.
 
     PYTHONPATH=src python examples/compare_schemes.py [--epochs 4]
 """
 import argparse
+import pathlib
+import sys
 
-from benchmarks import accuracy_curves
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from benchmarks.accuracy_curves import BATCH, CFG, _data  # noqa: E402
+from repro.core import schemes                            # noqa: E402
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--epochs", type=int, default=4)
     ap.add_argument("--experiment", type=int, default=2, choices=[1, 2])
+    ap.add_argument("--schemes", default="",
+                    help="comma list (default: every registered scheme)")
     args = ap.parse_args()
 
-    views, labels, _ = accuracy_curves._data(args.experiment)
-    results = {}
-    for scheme, runner in (("INL", accuracy_curves.run_inl),
-                           ("SL", accuracy_curves.run_sl),
-                           ("FL", accuracy_curves.run_fl)):
-        results[scheme] = runner(views, labels, args.epochs)
+    if args.schemes:
+        names = tuple(s.strip() for s in args.schemes.split(",") if s.strip())
+        unknown = set(names) - set(schemes.available())
+        if unknown:
+            ap.error(f"unknown scheme(s) {sorted(unknown)}; "
+                     f"registered: {schemes.available()}")
+    else:
+        names = schemes.available()
+    views, labels = _data(args.experiment)
+    results = schemes.runner.run_all(names, views, labels, CFG,
+                                     epochs=args.epochs, batch_size=BATCH)
 
     print(f"\nExperiment {args.experiment} "
           f"(paper fig {5 if args.experiment == 1 else 7}):")
@@ -28,14 +42,14 @@ def main():
     for i in range(args.epochs):
         row = f"{i+1:>6} | "
         row += " | ".join(
-            f"{results[s][i][1]:.3f} / {results[s][i][2]:.4f}"
+            f"{results[s][i].accuracy:.3f} / {results[s][i].gbits:.4f}"
             for s in results)
         print(row)
-    final = {s: r[-1] for s, r in results.items()}
     print("\nbandwidth-efficiency (final acc / Gbit):")
-    for s, (ep, acc, gb) in final.items():
-        print(f"  {s:4s}: {acc/max(gb, 1e-9):10.2f} acc/Gbit "
-              f"(acc {acc:.3f}, {gb:.4f} Gbit)")
+    for s, curve in results.items():
+        pt = curve[-1]
+        print(f"  {s:4s}: {schemes.runner.efficiency(curve):10.2f} acc/Gbit "
+              f"(acc {pt.accuracy:.3f}, {pt.gbits:.4f} Gbit)")
     print("\npaper's qualitative claim: INL >> SL > FL per bit; "
           "INL >= SL > FL in accuracy.")
 

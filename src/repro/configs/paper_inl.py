@@ -26,6 +26,9 @@ class PaperExperimentConfig:
     dense_units: Tuple[int, ...] = (512, 256)
     s: float = 1e-2                              # eq. (6) Lagrange multiplier
     link_bits: int = 32                          # bits per activation value
+    # Q_psi_j(u_j): standard normal (False) or learned per-node Gaussian
+    # marginals (True, trained jointly via the fused kernel's prior path)
+    learned_prior: bool = False
     # experiment 1 partitions data per scheme; experiment 2 shares it
     experiment: int = 1
     dataset_size: int = 50_000

@@ -1,6 +1,8 @@
 # The paper's primary contribution: in-network learning (INL) — distributed
 # variational-information-bottleneck inference/training over edge nodes —
 # plus its published baselines (federated + split learning) and the
-# bandwidth/link substrate they are compared on.
+# bandwidth/link substrate they are compared on.  `schemes` is the unified
+# Scheme API the three-way comparison runs behind (registry + runner).
 from repro.core import (bandwidth, bottleneck, fl, inl, inl_llm,  # noqa
                         linkmodel, losses, paper_model, sl)
+from repro.core import schemes  # noqa  (after the modules it wraps)

@@ -46,10 +46,10 @@ def sample(key, mu, logvar):
 
 
 def fused_sample_rate(key, mu, logvar, *, link_bits: int = 32,
-                      rate_estimator: str = "sample", backend: str = "auto",
-                      block_t: int = None):
-    """The cut-layer hot path in ONE fused kernel pass (standard-normal
-    prior): draws eps and returns
+                      rate_estimator: str = "sample", prior: dict = None,
+                      backend: str = "auto", block_t: int = None):
+    """The cut-layer hot path in ONE fused kernel pass: draws eps and
+    returns
 
         u    = quantize_st(mu + exp(logvar/2) * eps)   (..., d)
         rate = eq.-(6) rate term per row                (...,)  fp32
@@ -58,13 +58,28 @@ def fused_sample_rate(key, mu, logvar, *, link_bits: int = 32,
     kernels/ops.py dispatch).  The backward pass is the hand-written
     eq.-(10) split, not AD through three unfused ops.  Leading axes —
     including the J client axis — fold into the kernel row grid, so all
-    nodes share one launch.  Use the unfused `sample` + `rate_*` functions
-    only for learned (non-standard-normal) priors."""
+    nodes share one launch.
+
+    key=None runs the DETERMINISTIC cut (eps == 0 -> u == quantize(mu)):
+    split learning's non-stochastic activation exchange and the inference
+    path, still through the same kernel.  Pair it with
+    rate_estimator="none" to skip the rate entirely.
+
+    prior — a {"mu", "logvar"} dict of (d,) shared or (J, d) per-node
+    learned-Gaussian-prior params — switches the eq.-(6) rate to Q_psi and
+    stays on the fused path (the kernel also emits the prior gradients);
+    there is no fallback to the unfused 3-pass estimator any more."""
     from repro.kernels import ops
-    eps = jax.random.normal(key, mu.shape, jnp.float32)
+    if key is None:
+        eps = jnp.zeros(mu.shape, jnp.float32)
+    else:
+        eps = jax.random.normal(key, mu.shape, jnp.float32)
+    prior = prior or {}
     return ops.cutlayer(mu, logvar, eps, link_bits=link_bits,
-                        rate_estimator=rate_estimator, backend=backend,
-                        block_t=block_t)
+                        rate_estimator=rate_estimator,
+                        prior_mu=prior.get("mu"),
+                        prior_logvar=prior.get("logvar"),
+                        backend=backend, block_t=block_t)
 
 
 def gaussian_logpdf(u, mu, logvar):
@@ -73,11 +88,18 @@ def gaussian_logpdf(u, mu, logvar):
     return -0.5 * jnp.sum(lv + LOG2PI + d * d * jnp.exp(-lv), axis=-1)
 
 
-def prior_init(d_bottleneck: int, learned: bool = False):
+def prior_init(d_bottleneck: int, learned: bool = False,
+               num_nodes: int = None):
+    """Learned diagonal-Gaussian prior params; {} = standard normal.
+
+    num_nodes=J stacks one independent prior per node ((J, d) leaves) —
+    the shape the fused cut-layer kernel's per-node prior grid expects."""
     if not learned:
         return {}
-    return {"mu": jnp.zeros((d_bottleneck,), jnp.float32),
-            "logvar": jnp.zeros((d_bottleneck,), jnp.float32)}
+    shape = (d_bottleneck,) if num_nodes is None \
+        else (num_nodes, d_bottleneck)
+    return {"mu": jnp.zeros(shape, jnp.float32),
+            "logvar": jnp.zeros(shape, jnp.float32)}
 
 
 def prior_logpdf(prior, u):

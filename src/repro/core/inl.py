@@ -32,14 +32,22 @@ class INLParams(NamedTuple):
 
 
 def init(cfg, key):
-    """cfg: PaperExperimentConfig.  Returns (INLParams, state)."""
+    """cfg: PaperExperimentConfig.  Returns (INLParams, state).
+
+    cfg.learned_prior=True adds per-node trainable Gaussian-prior params
+    ((J, d) mean/logvar, init at the standard normal); the rate term then
+    runs the fused kernel's learned-prior path — same one-pass-per-direction
+    substrate, no unfused fallback."""
     J = cfg.num_clients
     ks = jax.random.split(key, 3)
     enc_keys = jax.random.split(ks[0], J)
     stacked = jax.vmap(lambda k: paper_model.encoder_init(k, cfg))(enc_keys)
     enc_params, enc_state = stacked
     dec = paper_model.decoder_init(ks[1], cfg)
-    return (INLParams(enc_params, dec, {}), {"encoders": enc_state})
+    priors = bottleneck.prior_init(
+        cfg.d_bottleneck, learned=getattr(cfg, "learned_prior", False),
+        num_nodes=J)
+    return (INLParams(enc_params, dec, priors), {"encoders": enc_state})
 
 
 def encode_and_rate(params: INLParams, state, views, *, train: bool, rng,
@@ -52,13 +60,14 @@ def encode_and_rate(params: INLParams, state, views, *, train: bool, rng,
     launch (client axis folded into the row grid, kernels/ops.cutlayer)
     yields both the quantized transmission u and the per-sample rate term
     of eq. (6); the backward pass is the paper's eq.-(10) error-vector +
-    rate-gradient split."""
+    rate-gradient split.  Learned priors (params.priors non-empty) ride the
+    same launch via the kernel's per-node prior grid."""
     (mu, logvar), new_state = jax.vmap(
         lambda p, s, v: paper_model.encoder_apply(p, s, v, train=train)
     )(params.encoders, state["encoders"], views)
     u, rate = bottleneck.fused_sample_rate(
         rng, mu, logvar, link_bits=link_bits, rate_estimator=rate_estimator,
-        backend=backend)
+        prior=params.priors, backend=backend)
     return u, mu, logvar, rate, {"encoders": new_state}
 
 
@@ -68,9 +77,10 @@ def encode(params: INLParams, state, views, *, train: bool, rng=None,
     """views: (J,B,H,W,C) -> (u (J,B,d), mu, logvar, new_state).
 
     This is everything that runs AT THE EDGE.  u is what crosses the links
-    (quantized to link_bits).  The sampling path routes through the fused
-    cut-layer kernel; the deterministic path (inference, u = mu) stays on
-    the standalone quantizer."""
+    (quantized to link_bits).  Both paths run the fused cut-layer kernel:
+    sampling draws eps, the deterministic path (inference, u = quantize(mu))
+    is the kernel's no-noise "none" mode — one measured substrate for every
+    scheme."""
     if sample_latent and rng is not None:
         u, mu, logvar, _, new_state = encode_and_rate(
             params, state, views, train=train, rng=rng, link_bits=link_bits,
@@ -79,7 +89,9 @@ def encode(params: INLParams, state, views, *, train: bool, rng=None,
     (mu, logvar), new_state = jax.vmap(
         lambda p, s, v: paper_model.encoder_apply(p, s, v, train=train)
     )(params.encoders, state["encoders"], views)
-    u_sent = linkmodel.quantize_st(mu, link_bits)
+    u_sent, _ = bottleneck.fused_sample_rate(
+        None, mu, logvar, link_bits=link_bits, rate_estimator="none",
+        backend=backend)
     return u_sent, mu, logvar, {"encoders": new_state}
 
 

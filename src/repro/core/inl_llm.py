@@ -29,6 +29,7 @@ class INLLLMParams(NamedTuple):
     encoders: dict     # stacked (J, ...): embed + encoder stack + bottleneck head
     decoder: dict      # in_proj + decoder stack + final norm + lm head
     branch_heads: dict # (J, d_b, vocab_pad) per-node decoders (at node J+1)
+    priors: dict = {}  # learned per-node Q_psi (J, d_b) mean/logvar; {} = N(0,I)
 
 
 def encoder_cfg(cfg):
@@ -81,7 +82,10 @@ def init(cfg, key):
     vpad = layers.pad_vocab(cfg.vocab_size)
     bh = (jax.random.normal(ks[4], (J, cfg.inl.d_bottleneck, vpad),
                             jnp.float32) * 0.02).astype(dtype)
-    return INLLLMParams(encoders, decoder, {"w": bh})
+    priors = bottleneck.prior_init(cfg.inl.d_bottleneck,
+                                   learned=cfg.inl.learned_prior,
+                                   num_nodes=J)
+    return INLLLMParams(encoders, decoder, {"w": bh}, priors)
 
 
 def encode(params: INLLLMParams, cfg, tokens, rng, *, train: bool = True,
@@ -117,9 +121,13 @@ def encode(params: INLLLMParams, cfg, tokens, rng, *, train: bool = True,
     if train:
         u, rate = bottleneck.fused_sample_rate(
             jax.random.fold_in(rng, 1), mu, logvar, link_bits=bits,
-            rate_estimator=rate_estimator, backend=backend)
+            rate_estimator=rate_estimator, prior=params.priors,
+            backend=backend)
     else:
-        u = linkmodel.quantize_st(mu, bits)
+        # deterministic inference cut: same kernel, no-noise mode
+        u, _ = bottleneck.fused_sample_rate(
+            None, mu, logvar, link_bits=bits, rate_estimator="none",
+            backend=backend)
         rate = None
     return u, mu, logvar, rate
 

@@ -43,8 +43,15 @@ def inl_loss(joint_logits, branch_logits: Sequence, labels,
     `rates` — optional precomputed per-row rate terms (one array per node),
     e.g. the second output of the fused cut-layer kernel
     (kernels/ops.cutlayer); when given, the rate is NOT recomputed here and
-    `rate_estimator`/`priors` are ignored for the rate term."""
+    `rate_estimator`/`priors` are ignored for the rate term.
+
+    `priors` — per-node prior params for the (unfused) fallback rate: a
+    sequence of {"mu", "logvar"} dicts, or ONE stacked dict with (J, d)
+    leaves (the layout core/inl.py keeps for the fused kernel)."""
     J = len(branch_logits)
+    if isinstance(priors, dict):               # stacked (J, d) -> per node
+        priors = [jax.tree.map(lambda x: x[j], priors) for j in range(J)] \
+            if priors else [{}] * J
     priors = priors if priors is not None else [{}] * J
     ce_joint = xent(joint_logits, labels)
     ce_branches = [xent(bl, labels) for bl in branch_logits]

@@ -182,20 +182,29 @@ def fl_model_init(key, cfg):
 
 
 def fl_model_apply(params, state, views, *, train: bool, rng=None,
-                   deterministic_latent: bool = True):
+                   deterministic_latent: bool = True, backend: str = "auto"):
     """views: (J,B,H,W,C) — all J views of the same images (FL/SL training),
-    or a broadcast single image for FL Exp-2 inference."""
-    us, new_states = [], []
+    or a broadcast single image for FL Exp-2 inference.
+
+    The branch latents cross the (here: in-model) cut through the SAME
+    fused cut-layer kernel the other schemes use — deterministic no-noise
+    mode (u == mu at full-precision link) or a reparametrised draw — so
+    the three-way comparison shares one measured substrate."""
+    mus, lvs, new_states = [], [], []
     for j, (ep, es) in enumerate(zip(params["encoders"], state["encoders"])):
         (mu, logvar), ns = encoder_apply(ep, es, views[j], train=train)
-        if deterministic_latent:
-            u = mu
-        else:
-            rng, sub = jax.random.split(rng)
-            u = bottleneck.sample(sub, mu, logvar)
-        us.append(u)
+        mus.append(mu)
+        lvs.append(logvar)
         new_states.append(ns)
-    u_cat = jnp.concatenate(us, axis=-1)
+    if deterministic_latent:
+        sub = None
+    else:
+        rng, sub = jax.random.split(rng)
+    u, _ = bottleneck.fused_sample_rate(
+        sub, jnp.stack(mus), jnp.stack(lvs), link_bits=32,
+        rate_estimator="none", backend=backend)
+    J, B = u.shape[0], u.shape[1]
+    u_cat = jnp.moveaxis(u, 0, 1).reshape(B, -1)          # == concat over J
     logits = decoder_apply(params["decoder"], u_cat, train=train, rng=rng)
     return logits, {"encoders": new_states}
 

@@ -1,0 +1,79 @@
+"""The `Scheme` interface all registered training schemes implement.
+
+A scheme's `state` is an opaque pytree (dict) bundling its parameters,
+model state (e.g. BatchNorm running stats) and optimizer state(s); only the
+scheme itself looks inside.  The runner interacts purely through the
+interface, so schemes with wildly different structure (INL's stacked
+encoders, FL's per-client model copies, SL's client/server split) drive the
+same benchmark loop.
+
+Rounds vs batches: a "round" is the scheme's natural training transaction —
+one optimizer step for INL/SL, one full FedAvg round (local steps on every
+client + server aggregation) for FL.  `batches_per_round` tells the runner
+how many (views, labels) minibatches to stack into one round call; the
+round receives them as (R, J, B, ...) / (R, B) arrays.
+
+Bandwidth: `bits_per_round` must route through the closed-form §III-C /
+Table-I accounting in `core/bandwidth.py` (tests/test_scheme_parity.py
+asserts exact agreement), so the measured curves and the published formulas
+cannot drift apart.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+
+class Scheme:
+    """Base class: override the five methods; keep `state` a pure pytree."""
+
+    name: str = ""
+
+    def batches_per_round(self, cfg) -> int:
+        """Minibatches one round consumes (the runner stacks this many)."""
+        return 1
+
+    def init(self, cfg, key, *, lr: float = 2e-3) -> Any:
+        """Build params + optimizer state for `cfg` (PaperExperimentConfig).
+
+        Must be deterministic in `key`; `lr` must match `make_round`'s."""
+        raise NotImplementedError
+
+    def make_round(self, cfg, *, lr: float = 2e-3):
+        """Return a jitted round_fn(state, views, labels, rng) ->
+        (new_state, metrics) with views (R, J, B, H, W, C), labels (R, B),
+        R == batches_per_round(cfg).  metrics must include "loss"."""
+        raise NotImplementedError
+
+    def predict(self, state, views) -> Any:
+        """views (J, B, ...) -> class probabilities (B, C); rows sum to 1.
+
+        Each scheme applies its own inference convention (INL: deterministic
+        latents; FL: central model on the average-quality view; SL: client
+        forward + server decoder)."""
+        raise NotImplementedError
+
+    def bits_per_round(self, cfg, state, batch_size: int) -> float:
+        """Bits moved by ONE round, via core/bandwidth.py closed forms."""
+        raise NotImplementedError
+
+    def epoch_overhead_bits(self, cfg, state) -> float:
+        """Bits charged once per epoch on top of the per-round cost
+        (split learning's sequential weight hand-offs).  Default 0."""
+        return 0.0
+
+    # -- conveniences shared by implementations ---------------------------
+
+    @staticmethod
+    def param_count(tree) -> int:
+        import jax
+        return sum(int(x.size) for x in jax.tree.leaves(tree))
+
+    def __repr__(self):
+        return f"<Scheme {self.name!r}>"
+
+
+def evaluate_accuracy(scheme: Scheme, state, views, labels) -> float:
+    """Shared top-1 accuracy via the scheme's own predict convention."""
+    import jax.numpy as jnp
+    probs = scheme.predict(state, views)
+    return float((jnp.argmax(probs, axis=-1) == labels).mean())

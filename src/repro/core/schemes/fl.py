@@ -1,0 +1,70 @@
+"""Federated learning (FedAvg) behind the unified Scheme API (wraps
+core/fl.py).
+
+One round == one FedAvg round: each of the J clients takes `local_steps`
+optimizer steps on its own minibatches, then the server averages weights
+and re-broadcasts — so one round consumes J * local_steps minibatches and
+moves 2 N J s bits (full weights down + up, Table I).  Per the paper's
+Exp-2 setting, client j only observes its own noise level: its view of the
+batch images is broadcast to all J branch inputs of the full Fig.-4 model.
+Inference is central: the aggregated model on the average-quality view.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.core import bandwidth, fl, paper_model
+from repro.core import schemes as _schemes
+from repro.core.schemes import base
+from repro.data import multiview
+
+
+@_schemes.register
+class FLScheme(base.Scheme):
+    name = "fl"
+    local_steps = 2
+
+    def batches_per_round(self, cfg) -> int:
+        return cfg.num_clients * self.local_steps
+
+    def init(self, cfg, key, *, lr: float = 2e-3):
+        params, state = fl.init(cfg, key)
+        opt = optim.adam(lr)
+        return {"params": params, "state": state,
+                "opt": jax.vmap(opt.init)(params)}
+
+    def make_round(self, cfg, *, lr: float = 2e-3):
+        opt = optim.adam(lr)
+        round_impl = fl.make_round(cfg, opt, self.local_steps)
+        J, ls = cfg.num_clients, self.local_steps
+
+        @jax.jit
+        def round_fn(state, views, labels, rng):
+            # views (R, J, B, ...) with R == J * local_steps: client j takes
+            # minibatches [j*ls, (j+1)*ls) and sees only ITS view of them,
+            # broadcast to the model's J branch inputs (paper Exp-2).
+            R, Jv, B = views.shape[:3]
+            v5 = views.reshape((J, ls) + views.shape[1:])
+            own = v5[jnp.arange(J)[:, None], jnp.arange(ls)[None, :],
+                     jnp.arange(J)[:, None]]               # (J, ls, B, ...)
+            packed = jnp.broadcast_to(
+                own[:, :, None], (J, ls, J) + own.shape[2:])
+            lab = labels.reshape(J, ls, B)
+            rngs = jax.random.split(rng, J)
+            params, st, opt_state, metrics = round_impl(
+                state["params"], state["state"], state["opt"],
+                packed, lab, rngs)
+            return ({"params": params, "state": st, "opt": opt_state},
+                    metrics)
+        return round_fn
+
+    def predict(self, state, views):
+        # FL inference is central: aggregated model, average-quality view
+        return fl.predict(state["params"], state["state"],
+                          multiview.average_view(views))
+
+    def bits_per_round(self, cfg, state, batch_size: int) -> float:
+        N = paper_model.fl_param_count(cfg)
+        return bandwidth.fl_round_bits(N, cfg.num_clients, cfg.link_bits)

@@ -1,0 +1,47 @@
+"""In-network learning behind the unified Scheme API (wraps core/inl.py).
+
+One round == one eq.-(6) optimizer step on a (J, B) multi-view batch; the
+cut layer (sample + link quantizer + rate, learned priors included) is the
+fused kernel.  Bandwidth per round is the paper's 2 b p s — activations
+forward, eq.-(10) error vectors backward — expressed through the Table-I
+closed form so measured and published accounting share one source.
+"""
+from __future__ import annotations
+
+from repro import optim
+from repro.core import bandwidth, inl
+from repro.core import schemes as _schemes
+from repro.core.schemes import base
+
+
+@_schemes.register
+class INLScheme(base.Scheme):
+    name = "inl"
+
+    def init(self, cfg, key, *, lr: float = 2e-3):
+        params, state = inl.init(cfg, key)
+        opt = optim.adam(lr)
+        return {"params": params, "state": state, "opt": opt.init(params)}
+
+    def make_round(self, cfg, *, lr: float = 2e-3):
+        opt = optim.adam(lr)
+        step = inl.make_train_step(cfg, opt)
+
+        def round_fn(state, views, labels, rng):
+            params, st, opt_state, metrics = step(
+                state["params"], state["state"], state["opt"],
+                views[0], labels[0], rng)
+            return ({"params": params, "state": st, "opt": opt_state},
+                    metrics)
+        return round_fn
+
+    def predict(self, state, views):
+        return inl.predict(state["params"], state["state"], views)
+
+    def bits_per_round(self, cfg, state, batch_size: int) -> float:
+        # §III-C: each of the J nodes holds q/J of the round's q = b*J
+        # node-points and sends p/J = d_bottleneck values per point, both
+        # directions -> 2 b p s with p = J * d_bottleneck.
+        p = cfg.num_clients * cfg.d_bottleneck
+        return bandwidth.inl_epoch_bits(p, batch_size * cfg.num_clients,
+                                        cfg.num_clients, cfg.link_bits)

@@ -1,0 +1,59 @@
+"""Split learning behind the unified Scheme API (wraps core/sl.py).
+
+One round == one client->server->client exchange on a minibatch: the
+client-side conv branches emit deterministic cut-layer activations through
+the fused kernel's no-noise mode, the server decoder computes the loss, and
+the custom VJP returns the cut-layer error vector.  Per §III-C the epoch
+cost is (2 p q + eta N J) s — the activation/error traffic accrues per
+round, the J sequential client->client weight hand-offs once per epoch.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro import optim
+from repro.core import bandwidth, paper_model, sl
+from repro.core import schemes as _schemes
+from repro.core.schemes import base
+
+
+@_schemes.register
+class SLScheme(base.Scheme):
+    name = "sl"
+
+    def init(self, cfg, key, *, lr: float = 2e-3):
+        (client, server), state = sl.init(cfg, key)
+        oc, osrv = optim.adam(lr), optim.adam(lr)
+        return {"client": client, "server": server, "state": state,
+                "opt_c": oc.init(client), "opt_s": osrv.init(server)}
+
+    def make_round(self, cfg, *, lr: float = 2e-3):
+        oc, osrv = optim.adam(lr), optim.adam(lr)
+        step = sl.make_train_step(oc, osrv, link_bits=cfg.link_bits)
+
+        def round_fn(state, views, labels, rng):
+            client, server, st, opt_c, opt_s, metrics = step(
+                state["client"], state["server"], state["state"],
+                state["opt_c"], state["opt_s"], views[0], labels[0], rng)
+            return ({"client": client, "server": server, "state": st,
+                     "opt_c": opt_c, "opt_s": opt_s}, metrics)
+        return round_fn
+
+    def predict(self, state, views):
+        return sl.predict(state["client"], state["server"], state["state"],
+                          views)
+
+    def bits_per_round(self, cfg, state, batch_size: int) -> float:
+        # activation/error traffic only (eta = 0 cancels the hand-off term)
+        p = cfg.num_clients * cfg.d_bottleneck
+        N = paper_model.fl_param_count(cfg)
+        return bandwidth.sl_epoch_bits(p, batch_size, N, cfg.num_clients,
+                                       0.0, cfg.link_bits)
+
+    def epoch_overhead_bits(self, cfg, state) -> float:
+        # q = 0 isolates the eta*N*J hand-off term; eta*N == client params
+        p = cfg.num_clients * cfg.d_bottleneck
+        N = paper_model.fl_param_count(cfg)
+        eta = self.param_count(state["client"]) / N
+        return bandwidth.sl_epoch_bits(p, 0, N, cfg.num_clients, eta,
+                                       cfg.link_bits)

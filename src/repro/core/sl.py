@@ -27,20 +27,33 @@ def init(cfg, key):
     return (client, server), state
 
 
-def forward_client(client, state, views, *, train: bool):
+def forward_client(client, state, views, *, train: bool,
+                   link_bits: int = 32, backend: str = "auto"):
     """Client-side cut-layer activations: concat of all J branch latents.
-    (SL sends deterministic activations — no stochastic bottleneck.)"""
-    us, new_states = [], []
+
+    SL sends DETERMINISTIC activations (no stochastic bottleneck), but the
+    exchange itself runs the same fused cut-layer kernel as INL in its
+    no-noise mode (eps == 0, rate == 0): one launch over the stacked
+    (J, B, d) latents yields u = quantize(mu), and the backward pass
+    returns the server's error vector through the straight-through
+    quantizer — the two schemes now share one measured substrate."""
+    mus, lvs, new_states = [], [], []
     for j, (ep, es) in enumerate(zip(client["encoders"], state["encoders"])):
-        (mu, _), ns = paper_model.encoder_apply(ep, es, views[j], train=train)
-        us.append(mu)
+        (mu, lv), ns = paper_model.encoder_apply(ep, es, views[j],
+                                                 train=train)
+        mus.append(mu)
+        lvs.append(lv)
         new_states.append(ns)
-    u = jnp.stack(us)                                     # (J,B,d_b)
+    u, _ = bottleneck.fused_sample_rate(
+        None, jnp.stack(mus), jnp.stack(lvs), link_bits=link_bits,
+        rate_estimator="none", backend=backend)            # (J,B,d_b)
     return u, {"encoders": new_states}
 
 
-def loss_fn(client, server, state, views, labels, rng, *, train=True):
-    u, new_state = forward_client(client, state, views, train=train)
+def loss_fn(client, server, state, views, labels, rng, *, train=True,
+            link_bits: int = 32, backend: str = "auto"):
+    u, new_state = forward_client(client, state, views, train=train,
+                                  link_bits=link_bits, backend=backend)
     J, B, d = u.shape
     u_cat = jnp.moveaxis(u, 0, 1).reshape(B, J * d)
     logits = paper_model.decoder_apply(server["decoder"], u_cat, train=train,
@@ -50,14 +63,17 @@ def loss_fn(client, server, state, views, labels, rng, *, train=True):
                    "accuracy": losses.accuracy(logits, labels)}, new_state)
 
 
-def make_train_step(optimizer_client, optimizer_server):
+def make_train_step(optimizer_client, optimizer_server, *,
+                    link_bits: int = 32, backend: str = "auto"):
     """One SL step: server computes loss, backprops the cut-layer error to
-    the active client (JAX AD produces exactly that error vector)."""
+    the active client (the fused kernel's custom VJP produces exactly that
+    error vector, straight-through through the link quantizer)."""
     @jax.jit
     def step(client, server, state, opt_c, opt_s, views, labels, rng):
         (loss, (metrics, new_state)), grads = jax.value_and_grad(
             loss_fn, argnums=(0, 1), has_aux=True)(
-            client, server, state, views, labels, rng)
+            client, server, state, views, labels, rng,
+            link_bits=link_bits, backend=backend)
         g_client, g_server = grads
         new_client, new_opt_c = optimizer_client.update(g_client, opt_c, client)
         new_server, new_opt_s = optimizer_server.update(g_server, opt_s, server)

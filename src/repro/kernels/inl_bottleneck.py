@@ -9,14 +9,26 @@ direction:
   forward   `_cut_fwd_kernel`: each (block_t, d) tile of mu/logvar/eps is
             read into VMEM once and produces BOTH the quantized transmission
             u and the per-row rate (sampled estimator of eq. 6 evaluated at
-            the quantized latent, or the analytic Gaussian KL).
+            the quantized latent, the analytic Gaussian KL, or zero for the
+            deterministic "none" mode split learning's non-stochastic cut
+            uses).
   backward  `_cut_bwd_kernel`: given the decoder cotangent chunk delta[j]
             (straight-through through the quantizer) and the rate cotangent,
             recomputes sigma/u from the saved inputs and emits
             (dmu, dlogvar, deps) in a single fused pass — the paper's
             error-vector + local-rate-gradient split, eq. (10).
 
-Both directions hang off one `jax.custom_vjp` (`cutlayer_fused`), so
+A second kernel pair (`_cut_prior_fwd_kernel` / `_cut_prior_bwd_kernel`)
+evaluates the eq.-(6) rate against LEARNED diagonal-Gaussian priors
+Q_psi_j = N(prior_mu_j, exp(prior_logvar_j)): the grid becomes
+(J, row-blocks) so each node's (d,)-vector prior is read once per block, and
+the backward additionally emits (dpmu, dplv), accumulated across each node's
+row blocks inside the kernel (the grid is sequential, so `+=` into the
+per-node output block is exact).  Learned priors therefore run the SAME
+one-pass-per-direction fused path as the standard-normal case — no fallback
+to the unfused 3-pass estimator.
+
+All directions hang off `jax.custom_vjp` wrappers (`cutlayer_fused`), so
 training never differentiates through `pallas_call` (interpret-mode AD was
 the seed's CPU bottleneck).  The J client nodes are BATCHED into one kernel
 launch: callers pass (J, ..., d) and the leading axes are folded into the
@@ -24,7 +36,8 @@ row grid — no `jax.vmap` over per-node calls.
 
 Contract:
   * arbitrary leading dims; rows padded to a block_t multiple (no assert),
-    outputs sliced back.
+    outputs sliced back.  With learned priors, priors are (d,) shared or
+    (J, d) per-node with mu shaped (J, ..., d).
   * `impl="reference"` routes the same custom VJP through the jnp oracle
     (kernels/ref.py), which XLA compiles to one fused pass on CPU — CI and
     TPU run identical code paths.
@@ -50,6 +63,8 @@ from repro.kernels import ref
 
 DEFAULT_BLOCK_T = 256
 
+MODES = ("sample", "analytic", "none")
+
 
 # ---------------------------------------------------------------------------
 # Pallas kernels
@@ -66,51 +81,57 @@ def _quantize(pre, bits: int):
 
 
 def _cut_fwd_kernel(mu_ref, lv_ref, eps_ref, u_ref, rate_ref, *,
-                    bits: int, sampled: bool):
+                    bits: int, mode: str):
     mu = mu_ref[...].astype(jnp.float32)
     lv = lv_ref[...].astype(jnp.float32)
     eps = eps_ref[...].astype(jnp.float32)
     sigma = jnp.exp(0.5 * lv)
     u = _quantize(mu + sigma * eps, bits)
     u_ref[...] = u.astype(u_ref.dtype)
-    if sampled:
+    if mode == "sample":
         rate = 0.5 * jnp.sum(u * u - (u - mu) ** 2 * jnp.exp(-lv) - lv,
                              axis=-1)
-    else:
+    elif mode == "analytic":
         rate = 0.5 * jnp.sum(jnp.exp(lv) + mu * mu - 1.0 - lv, axis=-1)
+    else:
+        rate = jnp.zeros(u.shape[:-1], jnp.float32)
     rate_ref[...] = rate.astype(rate_ref.dtype)
 
 
 def _cut_bwd_kernel(mu_ref, lv_ref, eps_ref, gu_ref, gr_ref,
-                    dmu_ref, dlv_ref, deps_ref, *, bits: int, sampled: bool):
+                    dmu_ref, dlv_ref, deps_ref, *, bits: int, mode: str):
     mu = mu_ref[...].astype(jnp.float32)
     lv = lv_ref[...].astype(jnp.float32)
     eps = eps_ref[...].astype(jnp.float32)
     gu = gu_ref[...].astype(jnp.float32)
     gr = gr_ref[...].astype(jnp.float32)[:, None]
     sigma = jnp.exp(0.5 * lv)
-    if sampled:
+    if mode == "sample":
         u = _quantize(mu + sigma * eps, bits)
         w = (u - mu) * jnp.exp(-lv)
         g_pre = gu + gr * (u - w)
         dmu = gu + gr * u
         dlv = g_pre * (0.5 * sigma * eps) + gr * 0.5 * (w * (u - mu) - 1.0)
         deps = g_pre * sigma
-    else:
+    elif mode == "analytic":
         dmu = gu + gr * mu
         dlv = gu * (0.5 * sigma * eps) + gr * 0.5 * (jnp.exp(lv) - 1.0)
+        deps = gu * sigma
+    else:
+        dmu = gu
+        dlv = gu * (0.5 * sigma * eps)
         deps = gu * sigma
     dmu_ref[...] = dmu.astype(dmu_ref.dtype)
     dlv_ref[...] = dlv.astype(dlv_ref.dtype)
     deps_ref[...] = deps.astype(deps_ref.dtype)
 
 
-def _fwd_pallas(mu, logvar, eps, bits, sampled, block_t, interpret):
+def _fwd_pallas(mu, logvar, eps, bits, mode, block_t, interpret):
     R, d = mu.shape
     grid = (R // block_t,)
     spec = pl.BlockSpec((block_t, d), lambda i: (i, 0))
     return pl.pallas_call(
-        functools.partial(_cut_fwd_kernel, bits=bits, sampled=sampled),
+        functools.partial(_cut_fwd_kernel, bits=bits, mode=mode),
         grid=grid,
         in_specs=[spec, spec, spec],
         out_specs=[spec, pl.BlockSpec((block_t,), lambda i: (i,))],
@@ -120,14 +141,14 @@ def _fwd_pallas(mu, logvar, eps, bits, sampled, block_t, interpret):
     )(mu, logvar, eps)
 
 
-def _bwd_pallas(mu, logvar, eps, gu, grate, bits, sampled, block_t,
+def _bwd_pallas(mu, logvar, eps, gu, grate, bits, mode, block_t,
                 interpret):
     R, d = mu.shape
     grid = (R // block_t,)
     spec = pl.BlockSpec((block_t, d), lambda i: (i, 0))
     spec1 = pl.BlockSpec((block_t,), lambda i: (i,))
     return pl.pallas_call(
-        functools.partial(_cut_bwd_kernel, bits=bits, sampled=sampled),
+        functools.partial(_cut_bwd_kernel, bits=bits, mode=mode),
         grid=grid,
         in_specs=[spec, spec, spec, spec, spec1],
         out_specs=[spec, spec, spec],
@@ -139,31 +160,171 @@ def _bwd_pallas(mu, logvar, eps, gu, grate, bits, sampled, block_t,
 
 
 # ---------------------------------------------------------------------------
-# Shared custom VJP (pallas and reference impls run the same wrapper)
+# Learned-prior kernels: grid (J, row-blocks), per-node (d,) prior vectors
+# ---------------------------------------------------------------------------
+
+def _cut_prior_fwd_kernel(mu_ref, lv_ref, eps_ref, pmu_ref, plv_ref,
+                          u_ref, rate_ref, *, bits: int, mode: str):
+    mu = mu_ref[0].astype(jnp.float32)           # (block_t, d)
+    lv = lv_ref[0].astype(jnp.float32)
+    eps = eps_ref[0].astype(jnp.float32)
+    pmu = pmu_ref[...].astype(jnp.float32)       # (1, d) broadcasts over rows
+    plv = plv_ref[...].astype(jnp.float32)
+    sigma = jnp.exp(0.5 * lv)
+    u = _quantize(mu + sigma * eps, bits)
+    u_ref[0] = u.astype(u_ref.dtype)
+    if mode == "sample":
+        rate = 0.5 * jnp.sum((u - pmu) ** 2 * jnp.exp(-plv) + plv
+                             - (u - mu) ** 2 * jnp.exp(-lv) - lv, axis=-1)
+    else:                                        # "analytic"
+        rate = 0.5 * jnp.sum(plv - lv + (jnp.exp(lv) + (mu - pmu) ** 2)
+                             * jnp.exp(-plv) - 1.0, axis=-1)
+    rate_ref[0] = rate.astype(rate_ref.dtype)
+
+
+def _cut_prior_bwd_kernel(mu_ref, lv_ref, eps_ref, pmu_ref, plv_ref,
+                          u_ref, gu_ref, gr_ref, dmu_ref, dlv_ref,
+                          deps_ref, dpmu_ref, dplv_ref, *, bits: int,
+                          mode: str):
+    mu = mu_ref[0].astype(jnp.float32)
+    lv = lv_ref[0].astype(jnp.float32)
+    eps = eps_ref[0].astype(jnp.float32)
+    pmu = pmu_ref[...].astype(jnp.float32)       # (1, d)
+    plv = plv_ref[...].astype(jnp.float32)
+    gu = gu_ref[0].astype(jnp.float32)
+    gr = gr_ref[0].astype(jnp.float32)[:, None]
+    sigma = jnp.exp(0.5 * lv)
+    if mode == "sample":
+        u = u_ref[0].astype(jnp.float32)         # saved forward output
+        w = (u - mu) * jnp.exp(-lv)
+        wq = (u - pmu) * jnp.exp(-plv)
+        g_pre = gu + gr * (wq - w)
+        dmu = g_pre + gr * w
+        dlv = g_pre * (0.5 * sigma * eps) + gr * 0.5 * (w * (u - mu) - 1.0)
+        deps = g_pre * sigma
+        dpmu = jnp.sum(-gr * wq, axis=0, keepdims=True)
+        dplv = jnp.sum(gr * 0.5 * (1.0 - wq * (u - pmu)), axis=0,
+                       keepdims=True)
+    else:                                        # "analytic"
+        dm = (mu - pmu) * jnp.exp(-plv)
+        dmu = gu + gr * dm
+        dlv = gu * (0.5 * sigma * eps) + gr * 0.5 * (jnp.exp(lv - plv) - 1.0)
+        deps = gu * sigma
+        dpmu = jnp.sum(-gr * dm, axis=0, keepdims=True)
+        dplv = jnp.sum(gr * 0.5 * (1.0 - (jnp.exp(lv) + (mu - pmu) ** 2)
+                                   * jnp.exp(-plv)), axis=0, keepdims=True)
+    dmu_ref[0] = dmu.astype(dmu_ref.dtype)
+    dlv_ref[0] = dlv.astype(dlv_ref.dtype)
+    deps_ref[0] = deps.astype(deps_ref.dtype)
+    # per-node prior grads: accumulate across this node's row blocks (the
+    # grid is sequential with the row dimension innermost, so the first
+    # block initialises and the rest add)
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        dpmu_ref[...] = jnp.zeros(dpmu_ref.shape, dpmu_ref.dtype)
+        dplv_ref[...] = jnp.zeros(dplv_ref.shape, dplv_ref.dtype)
+    dpmu_ref[...] += dpmu.astype(dpmu_ref.dtype)
+    dplv_ref[...] += dplv.astype(dplv_ref.dtype)
+
+
+def _prior_fwd_pallas(mu, logvar, eps, pmu, plv, bits, mode, block_t,
+                      interpret):
+    J, T, d = mu.shape
+    grid = (J, T // block_t)
+    row = pl.BlockSpec((1, block_t, d), lambda j, i: (j, i, 0))
+    prior = pl.BlockSpec((1, d), lambda j, i: (j, 0))
+    return pl.pallas_call(
+        functools.partial(_cut_prior_fwd_kernel, bits=bits, mode=mode),
+        grid=grid,
+        in_specs=[row, row, row, prior, prior],
+        out_specs=[row, pl.BlockSpec((1, block_t), lambda j, i: (j, i))],
+        out_shape=[jax.ShapeDtypeStruct((J, T, d), mu.dtype),
+                   jax.ShapeDtypeStruct((J, T), jnp.float32)],
+        interpret=interpret,
+    )(mu, logvar, eps, pmu, plv)
+
+
+def _prior_bwd_pallas(mu, logvar, eps, pmu, plv, u, gu, grate, bits, mode,
+                      block_t, interpret):
+    J, T, d = mu.shape
+    grid = (J, T // block_t)
+    row = pl.BlockSpec((1, block_t, d), lambda j, i: (j, i, 0))
+    prior = pl.BlockSpec((1, d), lambda j, i: (j, 0))
+    rate = pl.BlockSpec((1, block_t), lambda j, i: (j, i))
+    return pl.pallas_call(
+        functools.partial(_cut_prior_bwd_kernel, bits=bits, mode=mode),
+        grid=grid,
+        in_specs=[row, row, row, prior, prior, row, row, rate],
+        out_specs=[row, row, row, prior, prior],
+        out_shape=[jax.ShapeDtypeStruct((J, T, d), mu.dtype),
+                   jax.ShapeDtypeStruct((J, T, d), logvar.dtype),
+                   jax.ShapeDtypeStruct((J, T, d), eps.dtype),
+                   jax.ShapeDtypeStruct((J, d), pmu.dtype),
+                   jax.ShapeDtypeStruct((J, d), plv.dtype)],
+        interpret=interpret,
+    )(mu, logvar, eps, pmu, plv, u, gu, grate)
+
+
+# ---------------------------------------------------------------------------
+# Shared custom VJPs (pallas and reference impls run the same wrappers)
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
-def _cutlayer(mu, logvar, eps, bits, sampled, impl, block_t, interpret):
+def _cutlayer(mu, logvar, eps, bits, mode, impl, block_t, interpret):
     if impl == "pallas":
-        return _fwd_pallas(mu, logvar, eps, bits, sampled, block_t, interpret)
-    return ref.cutlayer_fwd_ref(mu, logvar, eps, bits, sampled)
+        return _fwd_pallas(mu, logvar, eps, bits, mode, block_t, interpret)
+    return ref.cutlayer_fwd_ref(mu, logvar, eps, bits, mode)
 
 
-def _cutlayer_fwd(mu, logvar, eps, bits, sampled, impl, block_t, interpret):
-    out = _cutlayer(mu, logvar, eps, bits, sampled, impl, block_t, interpret)
+def _cutlayer_fwd(mu, logvar, eps, bits, mode, impl, block_t, interpret):
+    out = _cutlayer(mu, logvar, eps, bits, mode, impl, block_t, interpret)
     return out, (mu, logvar, eps)
 
 
-def _cutlayer_bwd(bits, sampled, impl, block_t, interpret, res, cts):
+def _cutlayer_bwd(bits, mode, impl, block_t, interpret, res, cts):
     mu, logvar, eps = res
     gu, grate = cts
     if impl == "pallas":
-        return _bwd_pallas(mu, logvar, eps, gu, grate, bits, sampled,
+        return _bwd_pallas(mu, logvar, eps, gu, grate, bits, mode,
                            block_t, interpret)
-    return ref.cutlayer_bwd_ref(mu, logvar, eps, gu, grate, bits, sampled)
+    return ref.cutlayer_bwd_ref(mu, logvar, eps, gu, grate, bits, mode)
 
 
 _cutlayer.defvjp(_cutlayer_fwd, _cutlayer_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9))
+def _cutlayer_prior(mu, logvar, eps, pmu, plv, bits, mode, impl, block_t,
+                    interpret):
+    if impl == "pallas":
+        return _prior_fwd_pallas(mu, logvar, eps, pmu, plv, bits, mode,
+                                 block_t, interpret)
+    return ref.cutlayer_prior_fwd_ref(mu, logvar, eps, pmu, plv, bits, mode)
+
+
+def _cutlayer_prior_fwd(mu, logvar, eps, pmu, plv, bits, mode, impl,
+                        block_t, interpret):
+    out = _cutlayer_prior(mu, logvar, eps, pmu, plv, bits, mode, impl,
+                          block_t, interpret)
+    # u (out[0]) rides along as a residual: it is a live output buffer
+    # anyway, and the backward reading it (instead of recomputing the
+    # exp/quantize chain) keeps the prior-grad reductions' dependency cone
+    # minimal — without this, XLA's reduction fusions re-derive u and the
+    # learned-prior backward regresses ~1.4x vs standard-normal on CPU.
+    return out, (mu, logvar, eps, pmu, plv, out[0])
+
+
+def _cutlayer_prior_bwd(bits, mode, impl, block_t, interpret, res, cts):
+    mu, logvar, eps, pmu, plv, u = res
+    gu, grate = cts
+    if impl == "pallas":
+        return _prior_bwd_pallas(mu, logvar, eps, pmu, plv, u, gu, grate,
+                                 bits, mode, block_t, interpret)
+    return ref.cutlayer_prior_bwd_ref(mu, logvar, eps, pmu, plv, u, gu,
+                                      grate, bits, mode)
+
+
+_cutlayer_prior.defvjp(_cutlayer_prior_fwd, _cutlayer_prior_bwd)
 
 
 # ---------------------------------------------------------------------------
@@ -195,15 +356,50 @@ def _cutlayer_call(mu, logvar, eps, link_bits, rate_estimator, impl,
         mu2 = jnp.pad(mu2, ((0, pad), (0, 0)))
         lv2 = jnp.pad(lv2, ((0, pad), (0, 0)))
         eps2 = jnp.pad(eps2, ((0, pad), (0, 0)))
-    u, rate = _cutlayer(mu2, lv2, eps2, link_bits,
-                        rate_estimator == "sample", impl, bt, interpret)
+    u, rate = _cutlayer(mu2, lv2, eps2, link_bits, rate_estimator, impl,
+                        bt, interpret)
     if pad:
         u, rate = u[:R], rate[:R]
     return u.reshape(shape), rate.reshape(shape[:-1])
 
 
+@functools.partial(jax.jit, static_argnames=("link_bits", "rate_estimator",
+                                             "impl", "block_t", "interpret"))
+def _cutlayer_prior_call(mu, logvar, eps, pmu, plv, link_bits,
+                         rate_estimator, impl, block_t, interpret):
+    shape = mu.shape
+    d = shape[-1]
+    if pmu.ndim == 1:                       # shared prior: one node group
+        J, lead = 1, shape[:-1]
+        pmu2, plv2 = pmu[None], plv[None]
+    else:                                   # per-node (J, d) priors
+        J, lead = pmu.shape[0], shape[1:-1]
+        if shape[0] != J:
+            raise ValueError(f"per-node prior J={J} vs mu leading axis "
+                             f"{shape[0]}")
+        pmu2, plv2 = pmu, plv
+    T = 1
+    for s in lead:
+        T *= s
+    mu3 = mu.reshape(J, T, d)
+    lv3 = logvar.reshape(J, T, d)
+    eps3 = eps.reshape(J, T, d)
+    bt = min(block_t or DEFAULT_BLOCK_T, T)
+    pad = (-T) % bt
+    if pad:
+        mu3 = jnp.pad(mu3, ((0, 0), (0, pad), (0, 0)))
+        lv3 = jnp.pad(lv3, ((0, 0), (0, pad), (0, 0)))
+        eps3 = jnp.pad(eps3, ((0, 0), (0, pad), (0, 0)))
+    u, rate = _cutlayer_prior(mu3, lv3, eps3, pmu2, plv2, link_bits,
+                              rate_estimator, impl, bt, interpret)
+    if pad:
+        u, rate = u[:, :T], rate[:, :T]
+    return u.reshape(shape), rate.reshape(shape[:-1])
+
+
 def cutlayer_fused(mu, logvar, eps, *, link_bits: int = 32,
                    rate_estimator: str = "analytic", impl: str = "pallas",
+                   prior_mu=None, prior_logvar=None,
                    block_t: int = None, interpret: bool = None):
     """One fused pass over the cut layer, all J nodes in one launch.
 
@@ -212,11 +408,25 @@ def cutlayer_fused(mu, logvar, eps, *, link_bits: int = 32,
     (u (..., d) in mu.dtype, rate (...,) fp32).
 
     link_bits >= 32 disables the quantizer; rate_estimator selects the
-    paper's sampled eq.-(6) estimator (evaluated at the quantized latent)
-    or the analytic Gaussian KL.  Gradients flow through the hand-written
+    paper's sampled eq.-(6) estimator (evaluated at the quantized latent),
+    the analytic Gaussian KL, or "none" (rate == 0, the deterministic cut
+    split learning uses with eps == 0).  prior_mu/prior_logvar — (d,)
+    shared or (J, d) per-node with mu shaped (J, ..., d) — switch the rate
+    to a learned Gaussian prior Q_psi; the fused backward then also yields
+    the prior gradients.  Gradients always flow through the hand-written
     fused backward (eq. 10), never through AD of the kernel body."""
-    return _cutlayer_call(mu, logvar, eps, link_bits, rate_estimator, impl,
-                          block_t, _resolve_interpret(interpret))
+    if rate_estimator not in MODES:
+        raise ValueError(f"unknown rate_estimator {rate_estimator!r}")
+    interpret = _resolve_interpret(interpret)
+    if prior_mu is None:
+        return _cutlayer_call(mu, logvar, eps, link_bits, rate_estimator,
+                              impl, block_t, interpret)
+    if rate_estimator == "none":            # prior irrelevant when rate == 0
+        return _cutlayer_call(mu, logvar, eps, link_bits, rate_estimator,
+                              impl, block_t, interpret)
+    return _cutlayer_prior_call(mu, logvar, eps, prior_mu, prior_logvar,
+                                link_bits, rate_estimator, impl, block_t,
+                                interpret)
 
 
 def bottleneck_fused(mu, logvar, eps, *, block_t: int = DEFAULT_BLOCK_T,

@@ -67,14 +67,19 @@ def bottleneck(mu, logvar, eps, *, backend: str = "auto", **block_kw):
 
 
 def cutlayer(mu, logvar, eps, *, link_bits: int = 32,
-             rate_estimator: str = "sample", backend: str = "auto",
+             rate_estimator: str = "sample", prior_mu=None,
+             prior_logvar=None, backend: str = "auto",
              block_t: int = None):
     """Fused cut layer: (u_quantized, per-row rate) in one kernel pass,
     custom-VJP backward.  mu/logvar/eps: (..., d) with all leading axes
     (clients, batch, sequence) folded into the row grid — one launch for
-    all J nodes."""
+    all J nodes.  rate_estimator "none" zeroes the rate (split learning's
+    deterministic cut); prior_mu/prior_logvar — (d,) shared or (J, d)
+    per-node — evaluate the rate against a learned Gaussian prior, still
+    in one fused pass per direction (prior grads included)."""
     return _bn.cutlayer_fused(mu, logvar, eps, link_bits=link_bits,
                               rate_estimator=rate_estimator,
+                              prior_mu=prior_mu, prior_logvar=prior_logvar,
                               impl=resolve_backend(backend),
                               block_t=block_t, interpret=None)
 

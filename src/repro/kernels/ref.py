@@ -2,17 +2,28 @@
 obviously-correct; used by tests/test_kernels.py for allclose sweeps and by
 ops.py as the CPU fallback for tiny shapes.
 
-For the fused cut layer this module carries two things:
+For the fused cut layer this module carries three things:
 
-  * `cutlayer_ref` — the UNFUSED 3-pass formulation (sample, quantize,
-    rate) written with `stop_gradient` straight-through semantics so plain
-    `jax.grad` yields the ground-truth gradients the hand-written VJP in
-    `inl_bottleneck.py` must match.
+  * `cutlayer_ref` / `cutlayer_prior_ref` — the UNFUSED 3-pass formulation
+    (sample, quantize, rate) written with `stop_gradient` straight-through
+    semantics so plain `jax.grad` yields the ground-truth gradients the
+    hand-written VJP in `inl_bottleneck.py` must match.  The `_prior_`
+    variant evaluates the eq.-(6) rate against a learned diagonal-Gaussian
+    prior Q_psi = N(prior_mu, exp(prior_logvar)) instead of N(0, I).
   * `cutlayer_fwd_ref` / `cutlayer_bwd_ref` — single-expression jnp
     implementations of the fused forward and the hand-derived backward.
     `inl_bottleneck.cutlayer_fused(impl="reference")` plugs these into the
     SAME `jax.custom_vjp` wrapper the Pallas path uses, so CPU CI exercises
     the exact code path that runs on TPU.
+  * `cutlayer_prior_fwd_ref` / `cutlayer_prior_bwd_ref` — same pair for the
+    learned-prior path.  Shapes are normalised by the caller to (J, T, d)
+    latents against (J, d) per-node prior vectors; the backward also emits
+    the prior gradients (dpmu, dplv), reduced over each node's rows.
+
+All cut-layer entry points share a `mode` in {"sample", "analytic", "none"}:
+the paper's per-sample eq.-(6) estimator, the closed-form Gaussian KL, or a
+deterministic no-rate pass (rate == 0) used for split learning's
+non-stochastic cut (eps == 0 -> u == quantize(mu)).
 
 The link quantizer's value map (`quantize_value`, `QUANT_RANGE`) lives here
 as the single source of truth shared by `core/linkmodel.py` and the kernels.
@@ -92,12 +103,42 @@ def cutlayer_ref(mu, logvar, eps, *, link_bits: int = 32,
     if rate_estimator == "sample":
         rate = 0.5 * jnp.sum(u * u - (u - muf) ** 2 * jnp.exp(-lv) - lv,
                              axis=-1)
-    else:
+    elif rate_estimator == "analytic":
         rate = 0.5 * jnp.sum(jnp.exp(lv) + muf * muf - 1.0 - lv, axis=-1)
+    else:                                   # "none": deterministic cut
+        rate = jnp.zeros(u.shape[:-1], jnp.float32)
     return u.astype(mu.dtype), rate
 
 
-def cutlayer_fwd_ref(mu, logvar, eps, bits: int, sampled: bool):
+def cutlayer_prior_ref(mu, logvar, eps, prior_mu, prior_logvar, *,
+                       link_bits: int = 32, rate_estimator: str = "sample"):
+    """Unfused cut layer against a LEARNED Gaussian prior — AD ground truth
+    for the fused learned-prior kernel, including the prior gradients.
+
+    mu/logvar/eps: (..., d); prior_mu/prior_logvar: (d,) broadcast over the
+    rows (per-node priors: call per node, or shape (J, 1, ..., d)-compatible).
+    The log(2 pi) terms of log P - log Q cancel exactly as in the
+    standard-normal case."""
+    muf = mu.astype(jnp.float32)
+    lv = logvar.astype(jnp.float32)
+    pmu = prior_mu.astype(jnp.float32)
+    plv = prior_logvar.astype(jnp.float32)
+    sigma = jnp.exp(0.5 * lv)
+    pre = muf + sigma * eps.astype(jnp.float32)
+    q = quantize_value(pre, link_bits)
+    u = pre + jax.lax.stop_gradient(q - pre)
+    if rate_estimator == "sample":
+        rate = 0.5 * jnp.sum((u - pmu) ** 2 * jnp.exp(-plv) + plv
+                             - (u - muf) ** 2 * jnp.exp(-lv) - lv, axis=-1)
+    elif rate_estimator == "analytic":
+        rate = 0.5 * jnp.sum(plv - lv + (jnp.exp(lv) + (muf - pmu) ** 2)
+                             * jnp.exp(-plv) - 1.0, axis=-1)
+    else:
+        rate = jnp.zeros(u.shape[:-1], jnp.float32)
+    return u.astype(mu.dtype), rate
+
+
+def cutlayer_fwd_ref(mu, logvar, eps, bits: int, mode: str):
     """Fused forward as one jnp expression (XLA compiles it to a single
     pass on CPU).  Must match `inl_bottleneck._cut_fwd_kernel` bit-for-bit
     in fp32 arithmetic order."""
@@ -106,15 +147,17 @@ def cutlayer_fwd_ref(mu, logvar, eps, bits: int, sampled: bool):
     sigma = jnp.exp(0.5 * lv)
     pre = muf + sigma * eps.astype(jnp.float32)
     u = quantize_value(pre, bits)
-    if sampled:
+    if mode == "sample":
         rate = 0.5 * jnp.sum(u * u - (u - muf) ** 2 * jnp.exp(-lv) - lv,
                              axis=-1)
-    else:
+    elif mode == "analytic":
         rate = 0.5 * jnp.sum(jnp.exp(lv) + muf * muf - 1.0 - lv, axis=-1)
+    else:
+        rate = jnp.zeros(u.shape[:-1], jnp.float32)
     return u.astype(mu.dtype), rate
 
 
-def cutlayer_bwd_ref(mu, logvar, eps, gu, grate, bits: int, sampled: bool):
+def cutlayer_bwd_ref(mu, logvar, eps, gu, grate, bits: int, mode: str):
     """Hand-derived fused backward (the paper's eq.-10 split).
 
     Inputs: residuals (mu, logvar, eps) and cotangents gu (rows, d) — the
@@ -130,6 +173,8 @@ def cutlayer_bwd_ref(mu, logvar, eps, gu, grate, bits: int, sampled: bool):
       analytic: dmu  = gu + grate * mu
                 dlv  = gu * eps*sigma/2 + grate * (exp(lv) - 1) / 2
                 deps = gu * sigma
+      none:     dmu  = gu;  dlv = gu * eps*sigma/2;  deps = gu * sigma
+                (the rate output is identically zero, so grate is unused)
     """
     muf = mu.astype(jnp.float32)
     lv = logvar.astype(jnp.float32)
@@ -137,19 +182,111 @@ def cutlayer_bwd_ref(mu, logvar, eps, gu, grate, bits: int, sampled: bool):
     sigma = jnp.exp(0.5 * lv)
     gu = gu.astype(jnp.float32)
     gr = grate.astype(jnp.float32)[..., None]
-    if sampled:
+    if mode == "sample":
         u = quantize_value(muf + sigma * ef, bits)
         w = (u - muf) * jnp.exp(-lv)
         g_pre = gu + gr * (u - w)
         dmu = gu + gr * u
         dlv = g_pre * (0.5 * sigma * ef) + gr * 0.5 * (w * (u - muf) - 1.0)
         deps = g_pre * sigma
-    else:
+    elif mode == "analytic":
         dmu = gu + gr * muf
         dlv = gu * (0.5 * sigma * ef) + gr * 0.5 * (jnp.exp(lv) - 1.0)
         deps = gu * sigma
+    else:
+        dmu = gu
+        dlv = gu * (0.5 * sigma * ef)
+        deps = gu * sigma
     return (dmu.astype(mu.dtype), dlv.astype(logvar.dtype),
             deps.astype(eps.dtype))
+
+
+def cutlayer_prior_fwd_ref(mu, logvar, eps, pmu, plv, bits: int, mode: str):
+    """Learned-prior fused forward.  mu/logvar/eps: (J, T, d); pmu/plv:
+    (J, d) per-node prior mean / log-variance.  Returns (u (J,T,d),
+    rate (J,T) fp32).
+
+    The optimization barrier pins u to ONE materialised buffer (matching
+    the Pallas path, where u is a real kernel output): the rate reduction
+    here, the backward's error-vector pass, and its prior-gradient
+    reductions all read that buffer.  Without it XLA duplicates the
+    exp/quantize chain into every reduction fusion — a measured ~1.4x on
+    the learned-prior backward on CPU."""
+    muf = mu.astype(jnp.float32)
+    lv = logvar.astype(jnp.float32)
+    pm = pmu.astype(jnp.float32)[:, None, :]
+    pv = plv.astype(jnp.float32)[:, None, :]
+    sigma = jnp.exp(0.5 * lv)
+    pre = muf + sigma * eps.astype(jnp.float32)
+    u = jax.lax.optimization_barrier(quantize_value(pre, bits))
+    if mode == "sample":
+        rate = 0.5 * jnp.sum((u - pm) ** 2 * jnp.exp(-pv) + pv
+                             - (u - muf) ** 2 * jnp.exp(-lv) - lv, axis=-1)
+    else:                                   # "analytic"
+        rate = 0.5 * jnp.sum(pv - lv + (jnp.exp(lv) + (muf - pm) ** 2)
+                             * jnp.exp(-pv) - 1.0, axis=-1)
+    return u.astype(mu.dtype), rate
+
+
+def cutlayer_prior_bwd_ref(mu, logvar, eps, pmu, plv, u, gu, grate,
+                           bits: int, mode: str):
+    """Hand-derived learned-prior backward: the eq.-(10) split generalised
+    to Q_psi = N(pmu, exp(plv)).  With wq = (u - pmu) * exp(-plv) (the
+    prior-whitened residual) and w = (u - mu) * exp(-lv):
+
+      sample:   g_pre = gu + grate * (wq - w)
+                dmu   = g_pre + grate * w            (== gu + grate * wq)
+                dlv   = g_pre * eps*sigma/2 + grate * (w*(u-mu) - 1)/2
+                deps  = g_pre * sigma
+                dpmu  = -sum_rows grate * wq
+                dplv  =  sum_rows grate * (1 - wq*(u-pmu))/2
+      analytic: with dm = (mu - pmu) * exp(-plv):
+                dmu   = gu + grate * dm
+                dlv   = gu * eps*sigma/2 + grate * (exp(lv-plv) - 1)/2
+                deps  = gu * sigma
+                dpmu  = -sum_rows grate * dm
+                dplv  =  sum_rows grate
+                         * (1 - (exp(lv)+(mu-pmu)^2) exp(-plv))/2
+
+    The prior gradients reduce over each node's rows (axis 1).  `u` is the
+    QUANTIZED forward output, saved as a residual: it is a live buffer
+    anyway (the forward returns it), and reading it keeps the prior
+    reductions' dependency cone to {u, grate} — recomputing u here instead
+    makes XLA re-derive the whole exp/quantize chain inside each reduction
+    fusion, a measured ~1.4x backward regression on CPU."""
+    muf = mu.astype(jnp.float32)
+    lv = logvar.astype(jnp.float32)
+    ef = eps.astype(jnp.float32)
+    pm = pmu.astype(jnp.float32)[:, None, :]
+    pv = plv.astype(jnp.float32)[:, None, :]
+    u = u.astype(jnp.float32)
+    sigma = jnp.exp(0.5 * lv)
+    gu = gu.astype(jnp.float32)
+    gr = grate.astype(jnp.float32)[..., None]
+    if mode == "sample":
+        w = (u - muf) * jnp.exp(-lv)
+        wq = (u - pm) * jnp.exp(-pv)
+        g_pre = gu + gr * (wq - w)
+        dmu = g_pre + gr * w
+        dlv = g_pre * (0.5 * sigma * ef) + gr * 0.5 * (w * (u - muf) - 1.0)
+        deps = g_pre * sigma
+        c = gr * wq
+        dpmu = -jnp.sum(c, axis=1)
+        dplv = 0.5 * (jnp.sum(gr, axis=1) - jnp.sum(c * (u - pm), axis=1))
+    else:                                   # "analytic"
+        dm = (muf - pm) * jnp.exp(-pv)
+        dmu = gu + gr * dm
+        e_lp = jnp.exp(lv - pv)
+        dlv = gu * (0.5 * sigma * ef) + gr * 0.5 * (e_lp - 1.0)
+        deps = gu * sigma
+        c = gr * dm
+        dpmu = -jnp.sum(c, axis=1)
+        # (exp(lv) + (mu-pm)^2) e^{-pv} == e_lp + dm*(mu-pm)
+        dplv = 0.5 * (jnp.sum(gr, axis=1) - jnp.sum(gr * e_lp, axis=1)
+                      - jnp.sum(c * (muf - pm), axis=1))
+    return (dmu.astype(mu.dtype), dlv.astype(logvar.dtype),
+            deps.astype(eps.dtype), dpmu.astype(pmu.dtype),
+            dplv.astype(plv.dtype))
 
 
 def ssd_scan_ref(x, dt, a, bm, cm, dskip):

@@ -35,6 +35,9 @@ def main():
                     help="use the reduced config (CPU-sized)")
     ap.add_argument("--scheme", default="standard",
                     choices=["standard", "inl"])
+    ap.add_argument("--learned-prior", action="store_true",
+                    help="inl scheme: learned per-node Gaussian priors "
+                         "Q_psi_j in the eq.-(6) rate (fused kernel path)")
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
@@ -70,6 +73,9 @@ def main():
             + cfg.moe.first_dense_layers
         if cfg.num_layers < need:
             cfg = dataclasses.replace(cfg, num_layers=need)
+        if args.learned_prior:
+            cfg = dataclasses.replace(
+                cfg, inl=dataclasses.replace(cfg.inl, learned_prior=True))
         params = inl_llm.init(cfg, key)
         opt_state = optimizer.init(params)
     else:

@@ -60,6 +60,8 @@ except ImportError:                                   # deterministic fallback
             wrapper.__name__ = fn.__name__
             wrapper.__doc__ = fn.__doc__
             wrapper.__module__ = fn.__module__
+            # keep pytest marks applied below @given (e.g. `slow`)
+            wrapper.pytestmark = list(getattr(fn, "pytestmark", []))
             sig = inspect.signature(fn)
             wrapper.__signature__ = sig.replace(parameters=[
                 p for name, p in sig.parameters.items()

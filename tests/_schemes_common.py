@@ -1,0 +1,76 @@
+"""Shared fixture logic for the scheme-parity and golden-metric tests.
+
+Compiling each scheme's round function is the dominant cost of these tests
+(the FL round jits a vmap-over-clients lax.scan of the full Fig.-4 model),
+so the deterministic training trajectories are computed ONCE per process
+and shared: parity asserts qualitative properties (loss improves, predict
+is a distribution), the golden test pins the exact numbers.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_inl import PaperExperimentConfig
+from repro.core import schemes
+from repro.data import multiview
+
+# Tier-1-sized: jit-compiling each scheme's round (FL: vmap-over-clients
+# lax.scan of the full model) dominates the cost, so the fixture model is a
+# single conv layer on 16x16 views — the Scheme contract and the training
+# dynamics it pins do not need the paper-scale widths.
+CFG = PaperExperimentConfig(conv_channels=(4,), d_bottleneck=8,
+                            dense_units=(32,), image_shape=(16, 16, 3),
+                            dataset_size=128)
+BATCH = 32
+ROUNDS = 6
+
+
+@functools.lru_cache(maxsize=None)
+def fixture_data():
+    """Tiny deterministic multi-view set: (views (J,128,...), labels)."""
+    imgs, labels = multiview.make_base_dataset(
+        128, image_shape=CFG.image_shape, seed=0)
+    views = multiview.make_views(imgs, CFG.noise_stds)
+    return jnp.asarray(views), jnp.asarray(labels)
+
+
+def round_inputs(scheme, cfg, views, labels):
+    """One fixed minibatch stacked batches_per_round(cfg) times."""
+    R = scheme.batches_per_round(cfg)
+    v = jnp.broadcast_to(views[None, :, :BATCH],
+                         (R,) + views[:, :BATCH].shape)
+    lab = jnp.broadcast_to(labels[None, :BATCH], (R, BATCH))
+    return v, lab
+
+
+def trajectory(name: str, learned_prior: bool = False):
+    """ROUNDS deterministic rounds of scheme `name` on the fixed batch.
+
+    Returns {"losses": tuple, "final_accuracy": float} plus the trained
+    state under "state" (not part of the golden record).  Cached per
+    (name, learned_prior) — compiling each scheme's round dominates, so
+    the parity and golden tests share one trajectory per scheme."""
+    return _trajectory(name, bool(learned_prior))
+
+
+@functools.lru_cache(maxsize=None)
+def _trajectory(name: str, learned_prior: bool):
+    import dataclasses
+    cfg = dataclasses.replace(CFG, learned_prior=True) if learned_prior \
+        else CFG
+    views, labels = fixture_data()
+    scheme = schemes.get(name)
+    state = scheme.init(cfg, jax.random.PRNGKey(0))
+    round_fn = scheme.make_round(cfg)
+    v, lab = round_inputs(scheme, cfg, views, labels)
+    losses = []
+    for i in range(ROUNDS):
+        state, metrics = round_fn(state, v, lab, jax.random.PRNGKey(i))
+        losses.append(float(metrics["loss"]))
+    probs = scheme.predict(state, views[:, :BATCH])
+    acc = float((jnp.argmax(probs, -1) == labels[:BATCH]).mean())
+    return {"losses": tuple(losses), "final_accuracy": acc, "state": state}

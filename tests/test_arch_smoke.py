@@ -19,6 +19,7 @@ def _cfg(name):
     return dataclasses.replace(get_smoke_config(name), dtype="float32")
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("name", sorted(list_archs()))
 def test_forward_shapes_and_finite(name):
     cfg = _cfg(name)
@@ -33,6 +34,7 @@ def test_forward_shapes_and_finite(name):
     assert bool(jnp.isfinite(logits).all()), f"{name}: non-finite logits"
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("name", sorted(list_archs()))
 def test_train_step_no_nan(name):
     cfg = _cfg(name)
@@ -52,6 +54,7 @@ def test_train_step_no_nan(name):
     assert max(jax.tree.leaves(moved)) > 0.0
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("name", sorted(list_archs()))
 def test_param_count_matches_init(name):
     cfg = _cfg(name)
@@ -60,6 +63,7 @@ def test_param_count_matches_init(name):
     assert n_init == zoo.param_count(cfg)
 
 
+@pytest.mark.slow
 def test_microbatched_step_matches_full():
     """Gradient accumulation must be arithmetically equivalent (CE is a mean
     over tokens, all microbatches have equal token counts here)."""

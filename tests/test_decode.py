@@ -52,20 +52,24 @@ def _check(cfg, tol=1e-3):
     assert err < tol, f"{cfg.name}: decode mismatch {err}"
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("name", sorted(list_archs()))
 def test_prefill_decode_consistency(name):
     _check(_cfg(name))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("window", [8, 16, 33])
 def test_sliding_window_ring_buffer(window):
     _check(_cfg("llama3.2-1b", sliding_window=window))
 
 
+@pytest.mark.slow
 def test_mla_sliding_window():
     _check(_cfg("deepseek-v2-236b", sliding_window=8))
 
 
+@pytest.mark.slow
 def test_multi_step_decode_matches_teacher_forcing():
     """Decode 4 tokens sequentially; logits must match the full forward at
     each position."""

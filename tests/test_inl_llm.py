@@ -22,6 +22,7 @@ def _cfg(name):
 
 @pytest.mark.parametrize("name", ["llama3.2-1b", "zamba2-2.7b",
                                   "deepseek-v2-236b"])
+@pytest.mark.slow
 def test_inl_llm_loss_finite(name):
     cfg = _cfg(name)
     params = inl_llm.init(cfg, jax.random.PRNGKey(0))
@@ -36,6 +37,7 @@ def test_inl_llm_loss_finite(name):
         * cfg.inl.d_bottleneck * cfg.inl.link_bits
 
 
+@pytest.mark.slow
 def test_inl_llm_eq5_decoder_width():
     cfg = _cfg("llama3.2-1b")
     params = inl_llm.init(cfg, jax.random.PRNGKey(0))
@@ -43,6 +45,7 @@ def test_inl_llm_eq5_decoder_width():
     assert w.shape[0] == cfg.inl.num_nodes * cfg.inl.d_bottleneck
 
 
+@pytest.mark.slow
 def test_inl_llm_train_step_updates():
     cfg = _cfg("llama3.2-1b")
     params = inl_llm.init(cfg, jax.random.PRNGKey(0))

@@ -24,6 +24,7 @@ def _setup(seed=0, B=8):
     return params, state, views, labels
 
 
+@pytest.mark.slow
 def test_loss_decomposition():
     """loss == ce_joint + s * (sum branch CE + sum rates)."""
     params, state, views, labels = _setup()
@@ -35,6 +36,7 @@ def test_loss_decomposition():
     np.testing.assert_allclose(float(loss), float(recon), rtol=1e-5)
 
 
+@pytest.mark.slow
 def test_s_zero_reduces_to_joint_ce():
     import dataclasses
     cfg0 = dataclasses.replace(CFG, s=0.0)

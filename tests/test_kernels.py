@@ -107,6 +107,7 @@ def test_bottleneck_property(t_blocks, d, seed):
     (2, 256, 4, 64, 64, 128),
     (1, 192, 2, 16, 8, 64),            # S a non-power-of-two multiple
 ])
+@pytest.mark.slow
 def test_ssd_scan_sweep(B, S, H, P, N, chunk, dtype):
     ks = jax.random.split(jax.random.PRNGKey(4), 5)
     x = jax.random.normal(ks[0], (B, S, H, P), dtype)
@@ -123,6 +124,7 @@ def test_ssd_scan_sweep(B, S, H, P, N, chunk, dtype):
     assert err < (2e-2 if dtype == jnp.bfloat16 else 2e-5), err
 
 
+@pytest.mark.slow
 @settings(max_examples=10, deadline=None)
 @given(seed=st.integers(0, 2 ** 16), chunk=st.sampled_from([16, 32, 64]))
 def test_ssd_chunk_invariance(seed, chunk):

@@ -21,6 +21,7 @@ def _moe_params(cfg, seed=0):
     return moe.moe_init(jax.random.PRNGKey(seed), cfg, jnp.float32)
 
 
+@pytest.mark.slow
 def test_capacity_paths_match_when_droppless():
     """With capacity >= E/k * k (no drops possible) the buffer dispatch must
     equal the dense-gather decode path exactly."""
@@ -32,6 +33,7 @@ def test_capacity_paths_match_when_droppless():
     np.testing.assert_allclose(y1, y2, atol=1e-5, rtol=1e-5)
 
 
+@pytest.mark.slow
 def test_dropping_is_order_preserving():
     """Dropping a LATER token never changes an EARLIER token's output
     (slot ranks are causal in token order)."""
@@ -58,6 +60,7 @@ def test_load_balance_loss_bounds():
                                atol=1e-5)
 
 
+@pytest.mark.slow
 @settings(max_examples=10, deadline=None)
 @given(seed=st.integers(0, 2 ** 10), k=st.sampled_from([1, 2, 3]))
 def test_topk_weights_normalised(seed, k):
@@ -70,6 +73,7 @@ def test_topk_weights_normalised(seed, k):
     assert bool(jnp.isfinite(y).all())
 
 
+@pytest.mark.slow
 def test_shared_experts_always_active():
     """DeepSeek-style shared experts contribute even when routed experts
     drop everything (capacity ~ 0)."""
@@ -85,6 +89,7 @@ def test_active_param_count_less_than_total():
     assert zoo.param_count(cfg, active_only=True) < zoo.param_count(cfg)
 
 
+@pytest.mark.slow
 def test_ep_falls_back_without_mesh():
     """moe_apply_ep on a mesh-less CPU must equal moe_apply exactly."""
     cfg = _cfg(cf=8.0, name="deepseek-v2-236b")

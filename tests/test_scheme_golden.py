@@ -1,0 +1,73 @@
+"""Golden-metric regression: the exact loss/accuracy trajectories of every
+registered scheme on the tiny deterministic fixture, pinned to checked-in
+JSON (rtol 1e-4) — so a scheme/kernel refactor cannot silently change
+training dynamics while the qualitative tests still pass.
+
+Regenerate after an INTENDED change with
+
+    REGEN_GOLDEN=1 PYTHONPATH=src python -m pytest tests/test_scheme_golden.py
+
+and commit the updated tests/golden/scheme_metrics.json alongside the
+change that explains it.  Trajectories are shared with the parity tests
+via tests/_schemes_common.py (one compile per scheme per process).
+"""
+import json
+import os
+import pathlib
+
+import numpy as np
+import pytest
+from _schemes_common import ROUNDS, trajectory
+
+from repro.core import schemes
+
+GOLDEN_PATH = pathlib.Path(__file__).parent / "golden" / "scheme_metrics.json"
+RTOL = 1e-4
+
+CASES = [("inl", False), ("fl", False), ("sl", False), ("inl", True)]
+
+
+def _key(name, learned_prior):
+    return f"{name}+learned_prior" if learned_prior else name
+
+
+def _record(name, learned_prior):
+    rec = trajectory(name, learned_prior=learned_prior)
+    return {"losses": list(rec["losses"]),
+            "final_accuracy": rec["final_accuracy"]}
+
+
+def _regen():
+    data = {_key(n, lp): _record(n, lp) for n, lp in CASES}
+    GOLDEN_PATH.parent.mkdir(parents=True, exist_ok=True)
+    GOLDEN_PATH.write_text(json.dumps(data, indent=2) + "\n")
+    return data
+
+
+@pytest.fixture(scope="module")
+def golden():
+    if os.environ.get("REGEN_GOLDEN"):
+        return _regen()
+    assert GOLDEN_PATH.exists(), \
+        f"{GOLDEN_PATH} missing — run with REGEN_GOLDEN=1 to create it"
+    return json.loads(GOLDEN_PATH.read_text())
+
+
+@pytest.mark.parametrize("name,learned_prior", CASES,
+                         ids=[_key(n, lp) for n, lp in CASES])
+def test_trajectory_matches_golden(name, learned_prior, golden):
+    want = golden[_key(name, learned_prior)]
+    got = _record(name, learned_prior)
+    assert len(got["losses"]) == ROUNDS
+    np.testing.assert_allclose(got["losses"], want["losses"], rtol=RTOL,
+                               err_msg=f"{name} loss trajectory drifted "
+                                       "(REGEN_GOLDEN=1 if intended)")
+    np.testing.assert_allclose(got["final_accuracy"],
+                               want["final_accuracy"], rtol=RTOL, atol=1e-6)
+
+
+def test_golden_covers_every_registered_scheme(golden):
+    """A newly registered scheme must add itself to the golden record."""
+    plain = {k for k in golden if "+" not in k}
+    assert set(schemes.available()) <= plain, \
+        "register the new scheme in CASES and regenerate the golden file"

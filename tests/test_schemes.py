@@ -61,6 +61,7 @@ def test_sl_trains(data):
     assert last < first
 
 
+@pytest.mark.slow
 def test_fl_round_averages_weights(data):
     views, labels = data
     params, state = fl.init(CFG, jax.random.PRNGKey(0))
@@ -95,6 +96,7 @@ def test_scheme_bandwidth_ordering():
     assert t["in_network"] < t["split"] < t["federated"]
 
 
+@pytest.mark.slow
 def test_measured_inl_bits_match_formula(data):
     views, labels = data
     params, state = inl.init(CFG, jax.random.PRNGKey(0))

@@ -18,6 +18,7 @@ from repro.roofline import analysis as roofline
 # optim
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_adamw_converges_quadratic():
     opt = optim.adamw(0.1, clip_norm=None)
     params = {"w": jnp.asarray([5.0, -3.0])}
