@@ -5,6 +5,9 @@
 #   fig5/7    accuracy_curves    accuracy-vs-epoch / accuracy-vs-bandwidth for
 #                                every scheme in the unified registry
 #   kernels   kernel_bench       hot-spot micro-benchmarks
+#   throughput throughput_bench  end-to-end runner throughput: per-round
+#                                dispatch vs whole-epoch scan+prefetch vs
+#                                shard_map (forced 2-device subprocess)
 #   roofline  roofline_report    dry-run three-term roofline rows
 from __future__ import annotations
 
@@ -16,7 +19,8 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
-                    help="comma list: table1,curves,kernels,roofline")
+                    help="comma list: table1,curves,kernels,throughput,"
+                         "roofline")
     ap.add_argument("--epochs", type=int, default=3,
                     help="epochs for the accuracy curves (CPU-sized)")
     args = ap.parse_args()
@@ -37,6 +41,12 @@ def main() -> None:
     if want("curves"):
         from benchmarks import accuracy_curves
         accuracy_curves.main(experiment=2, epochs=args.epochs)
+        sys.stdout.flush()
+    if want("throughput"):
+        # runs in its own subprocess: the forced multi-device XLA flag must
+        # be set before jax initialises, which has already happened here
+        from benchmarks import throughput_bench
+        throughput_bench.main([])
         sys.stdout.flush()
     if want("roofline"):
         from benchmarks import roofline_report

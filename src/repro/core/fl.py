@@ -46,10 +46,11 @@ def make_local_step(optimizer):
     return local_step
 
 
-def make_round(cfg, optimizer, local_steps: int):
-    """One FedAvg round, jitted: local_steps on all J clients in parallel,
-    then weight averaging.  client_data: (J, local_steps, B, J, H*W*C-shaped
-    views...) — see examples/compare_schemes.py for the packing helper."""
+def make_one_client(optimizer):
+    """One client's FedAvg contribution: a lax.scan of local_steps minibatch
+    updates, returning (params, state, opt_state, step-mean metrics).  Shared
+    by the vmapped single-device round and the shard_map client-parallel
+    round (core/sharded.py), so both paths train the same client program."""
     local_step = make_local_step(optimizer)
 
     def one_client(params, state, opt_state, views_seq, labels_seq, rng):
@@ -62,6 +63,14 @@ def make_round(cfg, optimizer, local_steps: int):
         (p, s, o, _), ms = jax.lax.scan(
             body, (params, state, opt_state, rng), (views_seq, labels_seq))
         return p, s, o, jax.tree.map(jnp.mean, ms)
+    return one_client
+
+
+def make_round(cfg, optimizer, local_steps: int):
+    """One FedAvg round, jitted: local_steps on all J clients in parallel,
+    then weight averaging.  client_data: (J, local_steps, B, J, H*W*C-shaped
+    views...) — see examples/compare_schemes.py for the packing helper."""
+    one_client = make_one_client(optimizer)
 
     @jax.jit
     def round_fn(stacked_params, stacked_state, stacked_opt, views, labels,

@@ -48,10 +48,21 @@ def bn_init(c: int):
              "var": jnp.ones((c,), jnp.float32)})
 
 
-def bn_apply(p, st, x, *, train: bool):
+def bn_apply(p, st, x, *, train: bool, axis_name=None):
+    """axis_name — a mesh axis the batch dim is sharded over (shard_map
+    bodies): batch statistics become GLOBAL via pmean, so data-parallel
+    training normalises exactly like the single-device run.  The variance
+    uses the two-pass form around the global mean (matching jnp.var's
+    numerics) rather than E[x^2]-m^2, which would lose ~3 digits to
+    cancellation and drift the golden trajectories."""
     if train:
         mean = x.mean(axis=(0, 1, 2))
-        var = x.var(axis=(0, 1, 2))
+        if axis_name is not None:
+            mean = jax.lax.pmean(mean, axis_name)
+            var = jax.lax.pmean(
+                jnp.square(x - mean).mean(axis=(0, 1, 2)), axis_name)
+        else:
+            var = x.var(axis=(0, 1, 2))
         new_st = {"mean": BN_MOMENTUM * st["mean"] + (1 - BN_MOMENTUM) * mean,
                   "var": BN_MOMENTUM * st["var"] + (1 - BN_MOMENTUM) * var}
     else:
@@ -98,13 +109,14 @@ def encoder_feat_dim(cfg) -> int:
     return h * h * cfg.conv_channels[-1]
 
 
-def encoder_apply(params, state, x, *, train: bool):
-    """x: (B,H,W,C) -> ((mu, logvar), new_state)."""
+def encoder_apply(params, state, x, *, train: bool, axis_name=None):
+    """x: (B,H,W,C) -> ((mu, logvar), new_state).  axis_name: mesh axis the
+    batch is sharded over (collective BatchNorm stats, see bn_apply)."""
     new_bns = []
     h = x
     for cp, bp, bs in zip(params["convs"], params["bns"], state["bns"]):
         h = conv(cp, h)
-        h, nbs = bn_apply(bp, bs, h, train=train)
+        h, nbs = bn_apply(bp, bs, h, train=train, axis_name=axis_name)
         h = jax.nn.relu(h)
         h = maxpool2(h)
         new_bns.append(nbs)
@@ -142,15 +154,37 @@ def decoder_init(key, cfg):
     return p
 
 
-def decoder_apply(p, u_cat, *, train: bool, rng=None, drop: float = 0.3):
-    """u_cat: (B, J*d_bottleneck) -> logits (B, classes)."""
+def decoder_apply(p, u_cat, *, train: bool, rng=None, drop: float = 0.3,
+                  drop_masks=None):
+    """u_cat: (B, J*d_bottleneck) -> logits (B, classes).
+
+    drop_masks — pre-drawn keep masks, one (B, units) bool array per hidden
+    layer (see decoder_dropout_masks).  Sharded execution pre-draws them at
+    GLOBAL batch shape outside the shard_map body so every shard applies the
+    same slice the single-device run would — drawing per-shard would change
+    the random stream and break golden-trajectory parity."""
     h = u_cat
     for i, dp in enumerate(p["dense"][:-1]):
         h = jax.nn.relu(layers.dense(dp, h))
-        if train and rng is not None:
+        if train and drop_masks is not None:
+            h = jnp.where(drop_masks[i], h / (1.0 - drop), 0.0)
+        elif train and rng is not None:
             rng, sub = jax.random.split(rng)
             h = dropout(sub, h, drop, train=train)
     return layers.dense(p["dense"][-1], h)
+
+
+def decoder_dropout_masks(rng, dense_units, batch: int, drop: float = 0.3):
+    """The exact keep masks decoder_apply(rng=...) would draw, pre-computed.
+
+    Replays decoder_apply's split chain (one split per hidden layer, in
+    order) so `decoder_apply(..., drop_masks=masks)` is bitwise identical to
+    `decoder_apply(..., rng=rng)` for the same key."""
+    masks = []
+    for units in dense_units:
+        rng, sub = jax.random.split(rng)
+        masks.append(jax.random.bernoulli(sub, 1.0 - drop, (batch, units)))
+    return masks
 
 
 def branch_heads_apply(p, us):

@@ -44,6 +44,48 @@ class Scheme:
         R == batches_per_round(cfg).  metrics must include "loss"."""
         raise NotImplementedError
 
+    def make_sharded_round(self, cfg, mesh, *, lr: float = 2e-3):
+        """Round with the same signature/semantics as make_round's, executed
+        across a ('client', 'data') mesh via shard_map (core/sharded.py):
+        the J client branches on 'client', the batch on 'data'.  Must match
+        the single-device round's trajectory at rtol 1e-4."""
+        raise NotImplementedError(f"scheme {self.name!r} has no sharded "
+                                  "round")
+
+    def make_epoch(self, cfg, *, lr: float = 2e-3, mesh=None, donate=None):
+        """K rounds in ONE jitted lax.scan — the whole-epoch dispatch unit.
+
+        Returns epoch_fn(state, views, labels, rngs) -> (state, metrics)
+        with views (K, R, J, B, ...), labels (K, R, B), rngs (K,) PRNG keys
+        (one per round, the same chain the per-round path splits), and
+        metrics stacked (K,) leaves.  mesh switches the body to the
+        shard_map round.  donate=None donates (params/opt buffers reused
+        in-place) on accelerators only — CPU XLA cannot alias and would
+        warn."""
+        import jax
+        round_fn = (self.make_sharded_round(cfg, mesh, lr=lr)
+                    if mesh is not None else self.make_round(cfg, lr=lr))
+
+        def epoch_fn(state, views, labels, rngs):
+            def body(st, xs):
+                v, lab, r = xs
+                st, metrics = round_fn(st, v, lab, r)
+                return st, metrics
+            return jax.lax.scan(body, state, (views, labels, rngs))
+
+        if donate is None:
+            donate = jax.default_backend() != "cpu"
+        return jax.jit(epoch_fn, donate_argnums=(0,) if donate else ())
+
+    def state_shardings(self, cfg, state, mesh):
+        """NamedSharding layout for this scheme's state on `mesh` (leading-J
+        leaves on 'client' where the sharded round expects them).  Default:
+        fully replicated."""
+        from jax.sharding import NamedSharding, PartitionSpec
+        import jax
+        rep = NamedSharding(mesh, PartitionSpec())
+        return jax.tree.map(lambda _: rep, state)
+
     def predict(self, state, views) -> Any:
         """views (J, B, ...) -> class probabilities (B, C); rows sum to 1.
 
@@ -73,7 +115,15 @@ class Scheme:
 
 
 def evaluate_accuracy(scheme: Scheme, state, views, labels) -> float:
-    """Shared top-1 accuracy via the scheme's own predict convention."""
+    """Shared top-1 accuracy via the scheme's own predict convention.
+
+    The predict forward is jitted once per scheme (cached on the registry
+    singleton) — the per-epoch eval in the runner would otherwise run the
+    whole encoder/decoder stack op-by-op."""
+    import jax
     import jax.numpy as jnp
-    probs = scheme.predict(state, views)
+    jitted = scheme.__dict__.get("_predict_jit")
+    if jitted is None:
+        jitted = scheme._predict_jit = jax.jit(scheme.predict)
+    probs = jitted(state, views)
     return float((jnp.argmax(probs, axis=-1) == labels).mean())

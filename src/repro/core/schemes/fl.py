@@ -60,6 +60,19 @@ class FLScheme(base.Scheme):
                     metrics)
         return round_fn
 
+    def make_sharded_round(self, cfg, mesh, *, lr: float = 2e-3):
+        from repro.core import sharded
+        return sharded.make_fl_sharded_round(cfg, mesh, optim.adam(lr),
+                                             self.local_steps)
+
+    def state_shardings(self, cfg, state, mesh):
+        # every FL state leaf is a stacked per-client replica (leading J):
+        # params, model state, and the vmapped optimizer state all shard
+        # over 'client'
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        cl = NamedSharding(mesh, P("client"))
+        return jax.tree.map(lambda _: cl, state)
+
     def predict(self, state, views):
         # FL inference is central: aggregated model, average-quality view
         return fl.predict(state["params"], state["state"],

@@ -35,6 +35,31 @@ class INLScheme(base.Scheme):
                     metrics)
         return round_fn
 
+    def make_sharded_round(self, cfg, mesh, *, lr: float = 2e-3):
+        from repro.core import sharded
+        return sharded.make_inl_sharded_round(cfg, mesh, optim.adam(lr))
+
+    def state_shardings(self, cfg, state, mesh):
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        cl = NamedSharding(mesh, P("client"))
+        rep = NamedSharding(mesh, P())
+
+        def param_sh(params):
+            return inl.INLParams(
+                jax.tree.map(lambda _: cl, params.encoders),
+                {"dense": jax.tree.map(lambda _: rep,
+                                       params.decoder["dense"]),
+                 "branch_heads": jax.tree.map(
+                     lambda _: cl, params.decoder["branch_heads"])},
+                jax.tree.map(lambda _: cl, params.priors))
+
+        p_sh = param_sh(state["params"])
+        return {"params": p_sh,
+                "state": jax.tree.map(lambda _: cl, state["state"]),
+                "opt": {k: (rep if k == "step" else p_sh)
+                        for k in state["opt"]}}
+
     def predict(self, state, views):
         return inl.predict(state["params"], state["state"], views)
 

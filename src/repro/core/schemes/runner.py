@@ -1,13 +1,30 @@
 """Registry-driven training/benchmark runner — ONE loop for every scheme.
 
-Replaces the three ad-hoc per-scheme runners the benchmarks used to carry:
-the scheme supplies init / round / predict / bandwidth through the Scheme
-interface, this module supplies the epoch loop, minibatch grouping, the
+The scheme supplies init / round / predict / bandwidth through the Scheme
+interface; this module supplies the epoch pipeline, minibatch grouping, the
 BandwidthMeter, and the accuracy-vs-epoch / accuracy-vs-Gbit curve — so a
 newly registered scheme benchmarks itself with zero extra glue.
+
+Dispatch strategies (the perf ladder tests/benchmarks compare):
+
+    "per_round"  the seed-style loop: one host->device transfer + one jitted
+                 dispatch per round (kept as the benchmark baseline);
+    "scan"       the default: the whole epoch's rounds are stacked host-side
+                 into ONE (K, R, ...) superbatch, moved through the
+                 double-buffered prefetcher (data/prefetch.py), and executed
+                 as ONE jitted lax.scan (Scheme.make_epoch) — K rounds per
+                 dispatch instead of K dispatches.
+
+`mesh` (a ('client', 'data') mesh from launch.mesh.make_inl_host_mesh /
+make_inl_mesh) switches the scan body to the scheme's shard_map round
+(core/sharded.py): J node branches in parallel over 'client', batch over
+'data', state placed once via Scheme.state_shardings and batches device_put
+pre-sharded by the prefetcher.  Trajectories match the single-device run at
+rtol 1e-4 (tests/test_sharded_parity.py).
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import List, NamedTuple, Sequence
 
 import jax
@@ -16,7 +33,7 @@ import numpy as np
 
 from repro.core import bandwidth
 from repro.core.schemes import base
-from repro.data import multiview
+from repro.data import multiview, prefetch
 
 
 class CurvePoint(NamedTuple):
@@ -25,9 +42,20 @@ class CurvePoint(NamedTuple):
     gbits: float                 # cumulative bits exchanged, in Gbit
 
 
+@partial(jax.jit, static_argnums=1)
+def _split_chain(key, n: int):
+    """n sequential (key, sub) splits in one dispatch — the exact chain the
+    per-round loop produces with repeated jax.random.split(rng)."""
+    def body(k, _):
+        k, sub = jax.random.split(k)
+        return k, sub
+    return jax.lax.scan(body, key, None, length=n)
+
+
 def run_scheme(name: str, views, labels, cfg, *, epochs: int,
                batch_size: int = 64, lr: float = 2e-3, seed: int = 0,
-               eval_n: int = 512) -> List[CurvePoint]:
+               eval_n: int = 512, dispatch: str = "scan", mesh=None,
+               prefetch_size: int = 2) -> List[CurvePoint]:
     """Train scheme `name` for `epochs` over the (J, n, ...) multi-view set
     and return its accuracy/bandwidth curve (paper Figs. 5/7 rows).
 
@@ -35,9 +63,78 @@ def run_scheme(name: str, views, labels, cfg, *, epochs: int,
     calls; a trailing partial group is dropped (same rounding the paper's
     per-epoch accounting uses).  Bandwidth accrues per round plus the
     scheme's once-per-epoch overhead, all through the §III-C closed forms.
+
+    dispatch="scan" (default) runs each epoch as one jitted lax.scan fed by
+    the device prefetcher; dispatch="per_round" keeps the seed-style loop
+    (one dispatch per round).  `mesh` enables shard_map execution (scan
+    dispatch only).
     """
     from repro.core import schemes
     scheme = schemes.get(name)
+    if dispatch == "per_round":
+        if mesh is not None:
+            raise ValueError("mesh execution needs dispatch='scan'")
+        return _run_per_round(scheme, views, labels, cfg, epochs=epochs,
+                              batch_size=batch_size, lr=lr, seed=seed,
+                              eval_n=eval_n)
+    if dispatch != "scan":
+        raise ValueError(f"unknown dispatch {dispatch!r}")
+
+    state = scheme.init(cfg, jax.random.PRNGKey(seed), lr=lr)
+    epoch_fn = scheme.make_epoch(cfg, lr=lr, mesh=mesh)
+    bpr = scheme.batches_per_round(cfg)
+    views_np, labels_np = np.asarray(views), np.asarray(labels)
+    n = labels_np.shape[0]
+    rounds = (n // batch_size) // bpr          # K rounds per epoch
+
+    xs_shardings = None
+    if mesh is not None:
+        from repro.launch import sharding as sharding_lib
+        state = jax.device_put(state,
+                               scheme.state_shardings(cfg, state, mesh))
+        xs_shardings = sharding_lib.scheme_batch_shardings(
+            mesh, cfg.num_clients, batch_size)
+
+    def epoch_items():
+        """(views (K,R,J,b,...), labels (K,R,b), rngs (K,2)) per epoch —
+        the whole-epoch scan xs, assembled host-side (ONE gather over the
+        epoch's index matrix, not per-batch stacking) so the prefetcher can
+        overlap assembly + transfer with the previous epoch's compute."""
+        rng = jax.random.PRNGKey(seed + 1)
+        for ep in range(epochs):
+            idx = np.stack(list(multiview.batch_indices(
+                n, batch_size, seed=ep)))
+            idx = idx[:rounds * bpr].reshape(rounds, bpr, batch_size)
+            rng, subs = _split_chain(rng, rounds)
+            yield (np.moveaxis(views_np[:, idx], 0, 2), labels_np[idx],
+                   subs)
+
+    meter = bandwidth.BandwidthMeter()
+    n_eval = min(eval_n, n)
+    ev = jnp.asarray(views_np[:, :n_eval])
+    el = jnp.asarray(labels_np[:n_eval])
+
+    curve: List[CurvePoint] = []
+    items = prefetch.prefetch_to_device(
+        epoch_items() if rounds else iter(()), size=prefetch_size,
+        shardings=xs_shardings)
+    for ep in range(epochs):
+        if rounds:
+            ep_views, ep_labels, ep_rngs = next(items)
+            state, _ = epoch_fn(state, ep_views, ep_labels, ep_rngs)
+            meter.add(rounds * scheme.bits_per_round(cfg, state, batch_size))
+        meter.add(scheme.epoch_overhead_bits(cfg, state))
+        eval_state = jax.device_get(state) if mesh is not None else state
+        acc = base.evaluate_accuracy(scheme, eval_state, ev, el)
+        curve.append(CurvePoint(ep + 1, acc, meter.gbits))
+    return curve
+
+
+def _run_per_round(scheme, views, labels, cfg, *, epochs, batch_size, lr,
+                   seed, eval_n):
+    """The seed-style path: one transfer + one jitted dispatch per round.
+    Kept verbatim as the throughput baseline (benchmarks/throughput_bench)
+    and the semantics reference the scan path is tested against."""
     state = scheme.init(cfg, jax.random.PRNGKey(seed), lr=lr)
     round_fn = scheme.make_round(cfg, lr=lr)
     bpr = scheme.batches_per_round(cfg)

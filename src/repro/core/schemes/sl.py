@@ -39,6 +39,13 @@ class SLScheme(base.Scheme):
                      "opt_c": opt_c, "opt_s": opt_s}, metrics)
         return round_fn
 
+    def make_sharded_round(self, cfg, mesh, *, lr: float = 2e-3):
+        # SL is sequential client/server by construction; the batch shards
+        # over 'data' (params replicated — the base state_shardings default)
+        from repro.core import sharded
+        return sharded.make_sl_sharded_round(cfg, mesh, optim.adam(lr),
+                                             optim.adam(lr))
+
     def predict(self, state, views):
         return sl.predict(state["client"], state["server"], state["state"],
                           views)

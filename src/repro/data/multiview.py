@@ -91,27 +91,36 @@ def split_experiment2(views, labels, num_clients: int):
     return {"inl": (views, labels), "fl": per_client, "sl": per_client}
 
 
+def batch_indices(n: int, batch_size: int, *, seed: int = 0,
+                  epochs: int = 1) -> Iterator[np.ndarray]:
+    """Seeded, shuffled, DROP-REMAINDER minibatch index stream.
+
+    The single source of batching truth for every scheme/trainer: each epoch
+    is a fresh permutation of [0, n) cut into exactly ``n // batch_size``
+    full-size batches.  The trailing partial batch is always dropped — a
+    short batch would retrace/recompile every jitted step it reaches and
+    shape-mismatch a stacked whole-epoch `lax.scan`."""
+    rng = np.random.default_rng(seed)
+    per_epoch = (n // batch_size) * batch_size
+    for _ in range(epochs):
+        perm = rng.permutation(n)
+        for i in range(0, per_epoch, batch_size):
+            yield perm[i:i + batch_size]
+
+
 def multiview_batches(views: np.ndarray, labels: np.ndarray, batch_size: int,
                       *, seed: int = 0, epochs: int = 1
                       ) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
     """Shuffled mini-batches of ((J,b,H,W,C) views, (b,) labels)."""
-    n = labels.shape[0]
-    rng = np.random.default_rng(seed)
-    for _ in range(epochs):
-        perm = rng.permutation(n)
-        for i in range(0, n - batch_size + 1, batch_size):
-            idx = perm[i:i + batch_size]
-            yield views[:, idx], labels[idx]
+    for idx in batch_indices(labels.shape[0], batch_size, seed=seed,
+                             epochs=epochs):
+        yield views[:, idx], labels[idx]
 
 
 def image_batches(images: np.ndarray, labels: np.ndarray, batch_size: int,
                   *, seed: int = 0, epochs: int = 1
                   ) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
     """Shuffled mini-batches of ((b,H,W,C) images, (b,) labels)."""
-    n = labels.shape[0]
-    rng = np.random.default_rng(seed)
-    for _ in range(epochs):
-        perm = rng.permutation(n)
-        for i in range(0, n - batch_size + 1, batch_size):
-            idx = perm[i:i + batch_size]
-            yield images[idx], labels[idx]
+    for idx in batch_indices(labels.shape[0], batch_size, seed=seed,
+                             epochs=epochs):
+        yield images[idx], labels[idx]

@@ -1,0 +1,54 @@
+"""Host -> device input pipeline: double-buffered batch prefetch.
+
+The whole-epoch scan (`Scheme.make_epoch`, `launch/steps.make_scan_train_step`)
+turns an epoch into ONE dispatch — which moves the bottleneck to the
+host->device transfer of the epoch's stacked batches.  This module overlaps
+that transfer with the previous epoch's compute: the iterator is pulled
+``size`` items ahead and each item is `jax.device_put` immediately (async on
+accelerators), so by the time the consumer asks for epoch e+1 its buffers are
+already resident — and already laid out with the batch sharding when a mesh
+is in play (`shardings`), so the jitted epoch never re-shards its inputs.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Any, Iterable, Iterator
+
+import jax
+
+
+def prefetch_to_device(iterator: Iterable, *, size: int = 2,
+                       shardings: Any = None) -> Iterator:
+    """Yield items from `iterator`, keeping up to `size` device transfers in
+    flight ahead of the consumer (double-buffered at the default size=2).
+
+    Each item is a pytree of host arrays; it is moved with `jax.device_put`
+    before being buffered.  `shardings` is None (default device placement),
+    one `jax.sharding.Sharding` applied to every leaf, or a pytree of
+    shardings matching the item structure — the layout the jitted consumer
+    expects, so no resharding happens at dispatch.
+
+    Pulling the source iterator ahead also overlaps any host-side batch
+    assembly it performs (index/stack) with device compute of the current
+    item — the data-loading boundary the whole-epoch scan needs hidden.
+    """
+    if size < 1:
+        raise ValueError(f"prefetch size must be >= 1, got {size}")
+
+    def _put(item):
+        if shardings is None:
+            return jax.device_put(item)
+        return jax.device_put(item, shardings)
+
+    buf = collections.deque()
+    it = iter(iterator)
+    done = False
+    while True:
+        while not done and len(buf) < size:
+            try:
+                buf.append(_put(next(it)))
+            except StopIteration:
+                done = True
+        if not buf:
+            return
+        yield buf.popleft()

@@ -144,6 +144,22 @@ def batch_shardings(batch_specs, mesh):
             for k, v in batch_specs.items()}
 
 
+def scheme_batch_shardings(mesh, num_clients: int, batch_size: int):
+    """Shardings for the whole-epoch scan xs of a scheme round
+    (core/schemes/runner.py): views (K, R, J, B, ...), labels (K, R, B),
+    rngs (K, 2) — J on 'client', B on 'data', scan/round axes and keys
+    replicated.  Divisibility-guarded like every other rule here: an axis
+    that does not divide stays replicated."""
+    c = "client" if (_axis_size(mesh, "client") > 1
+                     and num_clients % _axis_size(mesh, "client") == 0) \
+        else None
+    d = "data" if (_axis_size(mesh, "data") > 1
+                   and batch_size % _axis_size(mesh, "data") == 0) else None
+    return (NamedSharding(mesh, P(None, None, c, d)),
+            NamedSharding(mesh, P(None, None, d)),
+            NamedSharding(mesh, P()))
+
+
 _CACHE_BATCH_AXIS = {"k": -4, "v": -4, "c_kv": -3, "k_rope": -3,
                      "conv": -3, "ssm": -4, "C": -4, "n": -3, "m": -2,
                      "c": -3, "h": -3}

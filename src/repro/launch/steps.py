@@ -3,11 +3,18 @@ units the launcher jits, shards, and the dry-run lowers.
 
 `make_scan_train_step` wraps K optimizer steps into one jitted
 lax.scan with donated (params, opt_state) buffers — the launcher's epoch
-unit; per-batch Python dispatch overhead amortises over K.
+unit; per-batch Python dispatch overhead amortises over K.  The scan now
+extends across the data-loading boundary: `grouped_batches` +
+`stack_batches` assemble the (K, ...) scan xs host-side and
+`data/prefetch.prefetch_to_device` keeps >= 2 stacked groups in flight, so
+the host->device transfer of group g+1 overlaps the scan executing group g
+(see launch/train.py --prefetch).
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Iterable, Iterator, List, Optional
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -15,6 +22,26 @@ import jax.numpy as jnp
 from repro import optim as optim_lib
 from repro.core import inl_llm
 from repro.models import zoo
+
+
+def grouped_batches(data: Iterable, k: int) -> Iterator[List]:
+    """Chunk a batch stream into lists of k (trailing partial group kept —
+    the scan retraces once for it at most)."""
+    group = []
+    for batch in data:
+        group.append(batch)
+        if len(group) == k:
+            yield group
+            group = []
+    if group:
+        yield group
+
+
+def stack_batches(group: List):
+    """Stack a group of batch pytrees into the scan's (K, ...) xs on the
+    HOST (numpy) — the device transfer belongs to the prefetcher, which
+    overlaps it with compute."""
+    return jax.tree.map(lambda *xs: np.stack(xs), *group)
 
 
 def make_train_step(cfg, optimizer, *, microbatches: int = 1,

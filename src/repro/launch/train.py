@@ -24,6 +24,7 @@ import numpy as np
 from repro import checkpoint, optim
 from repro.configs import get_config, get_smoke_config
 from repro.core import inl_llm
+from repro.data import prefetch
 from repro.data import tokens as token_data
 from repro.launch import steps as steps_lib
 
@@ -46,6 +47,9 @@ def main():
     ap.add_argument("--scan-steps", type=int, default=10,
                     help="optimizer steps per jitted lax.scan call (donated "
                          "params/opt_state buffers; 1 = step-per-dispatch)")
+    ap.add_argument("--prefetch", type=int, default=2,
+                    help="stacked scan groups kept in flight host->device "
+                         "(data/prefetch.py); 1 disables the overlap")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
@@ -97,21 +101,19 @@ def main():
     K = max(args.scan_steps, 1)
     step = 0
 
-    def run_group(params, opt_state, rng, group):
+    def run_group(params, opt_state, rng, batches, k):
         # one jitted scan over the group: K optimizer steps, zero
-        # per-step dispatch, donated params/opt_state
+        # per-step dispatch, donated params/opt_state; `batches` arrives
+        # stacked AND device-resident from the prefetcher
         nonlocal step
-        batches = jax.tree.map(lambda *xs: jnp.stack(xs),
-                               *[{k: jnp.asarray(v) for k, v in b.items()}
-                                 for b in group])
         if args.scheme == "inl":
             rng, sub = jax.random.split(rng)
-            rngs = jax.random.split(sub, len(group))
+            rngs = jax.random.split(sub, k)
             params, opt_state, ms = epoch_fn(params, opt_state, batches,
                                              rngs)
         else:
             params, opt_state, ms = epoch_fn(params, opt_state, batches)
-        prev_step, step = step, step + len(group)
+        prev_step, step = step, step + k
         last = jax.tree.map(lambda x: x[-1], ms)
         m = {k: float(v) for k, v in last.items() if jnp.ndim(v) == 0}
         m["step"] = step - 1
@@ -127,14 +129,16 @@ def main():
                             extra={"arch": cfg.name, "scheme": args.scheme})
         return params, opt_state, rng
 
-    group = []
-    for batch in data:                  # data stays a streaming iterator
-        group.append(batch)
-        if len(group) == K:
-            params, opt_state, rng = run_group(params, opt_state, rng, group)
-            group = []
-    if group:                           # final partial group
-        params, opt_state, rng = run_group(params, opt_state, rng, group)
+    # the scan now crosses the data-loading boundary: groups are stacked
+    # host-side and device_put by the double-buffered prefetcher, so the
+    # transfer of group g+1 overlaps the scan executing group g
+    stacked = (steps_lib.stack_batches(g)
+               for g in steps_lib.grouped_batches(data, K))
+    for batches in prefetch.prefetch_to_device(stacked,
+                                               size=max(args.prefetch, 1)):
+        k = jax.tree.leaves(batches)[0].shape[0]
+        params, opt_state, rng = run_group(params, opt_state, rng, batches,
+                                           k)
     if args.ckpt_dir:
         checkpoint.save(args.ckpt_dir, args.steps, params,
                         extra={"arch": cfg.name, "scheme": args.scheme})

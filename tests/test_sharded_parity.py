@@ -1,0 +1,217 @@
+"""Sharded-vs-single-device parity for the scheme execution layer.
+
+Three ladders, each pinned to the single-device trajectories:
+
+  1. the whole-epoch lax.scan (Scheme.make_epoch) must reproduce the
+     per-round dispatch loop — runs at any device count (tier-1 everywhere);
+  2. the shard_map rounds (core/sharded.py) under a forced 2-device host
+     (CI leg with XLA_FLAGS=--xla_force_host_platform_device_count=2) must
+     match the same trajectories at rtol 1e-4, on BOTH mesh layouts:
+     (client=2, data=1) — node-parallel, exercising the all_gather fan-in
+     and client psums — and (client=1, data=2) — batch-parallel, exercising
+     collective BatchNorm stats and data pmeans;
+  3. the registry runner's mesh path end-to-end (accuracy + bandwidth).
+
+Single-device trajectories come from tests/_schemes_common.py, the same
+fixtures the golden-metric regression pins to checked-in JSON — so sharded
+execution is transitively pinned to the golden record.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _schemes_common import BATCH, CFG, ROUNDS, fixture_data, round_inputs, \
+    trajectory
+
+from repro.core import schemes
+from repro.core.schemes import runner
+from repro.data import multiview
+from repro.launch import mesh as mesh_lib
+
+multi_device = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=2")
+
+RTOL = 1e-4
+SCHEMES = ("inl", "fl", "sl")
+
+
+def _epoch_trajectory(name, cfg, mesh=None):
+    """ROUNDS rounds through Scheme.make_epoch (one scan dispatch), same
+    fixed inputs + per-round keys as _schemes_common.trajectory."""
+    views, labels = fixture_data()
+    scheme = schemes.get(name)
+    state = scheme.init(cfg, jax.random.PRNGKey(0))
+    if mesh is not None:
+        state = jax.device_put(state,
+                               scheme.state_shardings(cfg, state, mesh))
+    epoch_fn = scheme.make_epoch(cfg, mesh=mesh)
+    v, lab = round_inputs(scheme, cfg, views, labels)
+    vs = jnp.broadcast_to(v[None], (ROUNDS,) + v.shape)
+    labs = jnp.broadcast_to(lab[None], (ROUNDS,) + lab.shape)
+    rngs = jnp.stack([jax.random.PRNGKey(i) for i in range(ROUNDS)])
+    state, metrics = epoch_fn(state, vs, labs, rngs)
+    state = jax.device_get(state)
+    probs = scheme.predict(state, views[:, :BATCH])
+    acc = float((jnp.argmax(probs, -1) == labels[:BATCH]).mean())
+    return {"losses": np.asarray(metrics["loss"]), "final_accuracy": acc}
+
+
+@pytest.mark.parametrize("name", SCHEMES)
+def test_epoch_scan_matches_per_round(name):
+    """One scan dispatch == ROUNDS per-round dispatches (any device count)."""
+    want = trajectory(name)
+    got = _epoch_trajectory(name, CFG)
+    np.testing.assert_allclose(got["losses"], want["losses"], rtol=RTOL,
+                               err_msg=f"{name}: whole-epoch scan drifted "
+                                       "from the per-round loop")
+    np.testing.assert_allclose(got["final_accuracy"],
+                               want["final_accuracy"], rtol=RTOL, atol=1e-6)
+
+
+@multi_device
+@pytest.mark.parametrize("name", SCHEMES)
+def test_data_sharded_matches_golden_trajectory(name):
+    """(client=1, data=2): batch sharded over 'data' — collective BN stats,
+    pmean'd grads; J=5 does not divide 2 devices so the host-mesh helper
+    falls back to replicated clients (with its warning)."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", UserWarning)
+        mesh = mesh_lib.make_inl_host_mesh(CFG.num_clients)
+    assert mesh.shape["client"] == 1 and mesh.shape["data"] >= 2
+    want = trajectory(name)
+    got = _epoch_trajectory(name, CFG, mesh=mesh)
+    np.testing.assert_allclose(got["losses"], want["losses"], rtol=RTOL,
+                               err_msg=f"{name}: data-sharded trajectory "
+                                       "drifted from single-device")
+    np.testing.assert_allclose(got["final_accuracy"],
+                               want["final_accuracy"], rtol=RTOL, atol=1e-6)
+
+
+# J=2 fits the client axis of a 2-device mesh exactly: node-parallel path.
+import dataclasses
+
+CFG_J2 = dataclasses.replace(CFG, num_clients=2, noise_stds=(0.4, 2.0))
+
+
+def _single_device_trajectory(name, cfg):
+    views, labels = fixture_data()
+    views = views[:cfg.num_clients]
+    scheme = schemes.get(name)
+    state = scheme.init(cfg, jax.random.PRNGKey(0))
+    round_fn = scheme.make_round(cfg)
+    v, lab = round_inputs(scheme, cfg, views, labels)
+    losses = []
+    for i in range(ROUNDS):
+        state, metrics = round_fn(state, v, lab, jax.random.PRNGKey(i))
+        losses.append(float(metrics["loss"]))
+    probs = scheme.predict(state, views[:, :BATCH])
+    acc = float((jnp.argmax(probs, -1) == labels[:BATCH]).mean())
+    return {"losses": np.asarray(losses), "final_accuracy": acc}
+
+
+def _client_sharded_trajectory(name, cfg, mesh):
+    views, labels = fixture_data()
+    views = views[:cfg.num_clients]
+    scheme = schemes.get(name)
+    state = scheme.init(cfg, jax.random.PRNGKey(0))
+    state = jax.device_put(state, scheme.state_shardings(cfg, state, mesh))
+    round_fn = scheme.make_sharded_round(cfg, mesh)
+    v, lab = round_inputs(scheme, cfg, views, labels)
+    losses = []
+    for i in range(ROUNDS):
+        state, metrics = round_fn(state, v, lab, jax.random.PRNGKey(i))
+        losses.append(float(metrics["loss"]))
+    state = jax.device_get(state)
+    probs = scheme.predict(state, views[:, :BATCH])
+    acc = float((jnp.argmax(probs, -1) == labels[:BATCH]).mean())
+    return {"losses": np.asarray(losses), "final_accuracy": acc}
+
+
+@multi_device
+@pytest.mark.parametrize("name,learned_prior", [
+    ("inl", False), ("fl", False), ("inl", True)],
+    ids=["inl", "fl", "inl+learned_prior"])
+def test_client_sharded_matches_single_device(name, learned_prior):
+    """(client=2, data=1): the J branches run node-parallel; INL's fusion
+    fan-in is the all_gather collective, FL's aggregation the psum.  The
+    per-node compute is untouched, so parity here is essentially exact.
+    The learned-prior case puts the kernel's (J, d) prior grid — and its
+    in-kernel prior gradients — on the client axis too."""
+    mesh = mesh_lib.make_inl_host_mesh(CFG_J2.num_clients)
+    assert mesh.shape["client"] == 2
+    cfg = dataclasses.replace(CFG_J2, learned_prior=True) if learned_prior \
+        else CFG_J2
+    want = _single_device_trajectory(name, cfg)
+    got = _client_sharded_trajectory(name, cfg, mesh)
+    np.testing.assert_allclose(got["losses"], want["losses"], rtol=RTOL,
+                               err_msg=f"{name}: client-sharded trajectory "
+                                       "drifted from single-device")
+    np.testing.assert_allclose(got["final_accuracy"],
+                               want["final_accuracy"], rtol=RTOL, atol=1e-6)
+
+
+@multi_device
+def test_runner_mesh_curve_matches_per_round():
+    """End-to-end: run_scheme(mesh=...) reproduces the seed-style per-round
+    dispatch curve (accuracy AND §III-C bandwidth accounting)."""
+    views, labels = fixture_data()
+    views, labels = np.asarray(views[:2, :64]), np.asarray(labels[:64])
+    cfg = CFG_J2
+    mesh = mesh_lib.make_inl_host_mesh(cfg.num_clients)
+    for name in ("inl", "sl"):
+        base_curve = runner.run_scheme(name, views, labels, cfg, epochs=2,
+                                       batch_size=16, eval_n=64,
+                                       dispatch="per_round")
+        mesh_curve = runner.run_scheme(name, views, labels, cfg, epochs=2,
+                                       batch_size=16, eval_n=64,
+                                       dispatch="scan", mesh=mesh)
+        for a, b in zip(base_curve, mesh_curve):
+            np.testing.assert_allclose(b.accuracy, a.accuracy, rtol=RTOL)
+            np.testing.assert_allclose(b.gbits, a.gbits, rtol=1e-6)
+
+
+def test_host_mesh_divisibility_fallback():
+    """J that does not divide the device count falls back to replicated
+    clients with a warning instead of erroring (satellite fix)."""
+    n = jax.device_count()
+    with pytest.warns(UserWarning, match="replicated client axis"):
+        mesh = mesh_lib.make_inl_host_mesh(n + 1)
+    assert mesh.shape["client"] == 1
+    assert mesh.shape["data"] == n
+    # the divisible case keeps the client axis (no warning)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        mesh = mesh_lib.make_inl_host_mesh(n)
+    assert mesh.shape["client"] == n
+
+
+def test_batch_indices_drop_remainder_and_seeding():
+    """The unified generator: full batches only, deterministic in seed,
+    identical stream for the multiview/image wrappers (the dedup)."""
+    idx = list(multiview.batch_indices(50, 16, seed=3))
+    assert [len(i) for i in idx] == [16, 16, 16]          # 50 % 16 dropped
+    assert sorted(np.concatenate(idx).tolist()) == sorted(
+        np.concatenate(list(multiview.batch_indices(50, 16, seed=3)))
+        .tolist())
+    views = np.arange(2 * 10 * 4).reshape(2, 10, 4).astype(np.float32)
+    labels = np.arange(10).astype(np.int32)
+    mv = list(multiview.multiview_batches(views, labels, 4, seed=7))
+    im = list(multiview.image_batches(views[0], labels, 4, seed=7))
+    assert len(mv) == len(im) == 2
+    for (v, l), (x, l2) in zip(mv, im):
+        assert v.shape == (2, 4, 4) and x.shape == (4, 4)
+        np.testing.assert_array_equal(l, l2)              # same index stream
+        np.testing.assert_array_equal(v[0], x)
+
+
+def test_prefetch_preserves_order_and_values():
+    from repro.data import prefetch
+    items = [{"a": np.full((3,), i), "b": np.int32(i)} for i in range(5)]
+    out = list(prefetch.prefetch_to_device(iter(items), size=2))
+    assert len(out) == 5
+    for i, it in enumerate(out):
+        np.testing.assert_array_equal(np.asarray(it["a"]), items[i]["a"])
+        assert int(it["b"]) == i
