@@ -254,7 +254,14 @@ def main():
     ap.add_argument("--reps", type=int, default=DEFAULT_REPS)
     ap.add_argument("--skip-generic", action="store_true",
                     help="only run the cut-layer benchmark")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes + 2 reps: the CI bench-smoke step "
+                         "(keeps this script importable/runnable between "
+                         "nightly perf runs; numbers are meaningless)")
     args = ap.parse_args()
+    if args.smoke:
+        args.T, args.d, args.reps = 128, 32, 2
+        args.skip_generic = True
 
     print("name,us_per_call,derived")
     if not args.skip_generic:

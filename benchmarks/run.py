@@ -5,6 +5,9 @@
 #   fig5/7    accuracy_curves    accuracy-vs-epoch / accuracy-vs-bandwidth for
 #                                every scheme in the unified registry
 #   kernels   kernel_bench       hot-spot micro-benchmarks
+#   wire      wire_bench         packed wire format: bytes-on-wire per round
+#                                (asserted == closed forms) + packed-vs-dense
+#                                round throughput + bf16 policy leg
 #   throughput throughput_bench  end-to-end runner throughput: per-round
 #                                dispatch vs whole-epoch scan+prefetch vs
 #                                shard_map (forced 2-device subprocess)
@@ -19,8 +22,8 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
-                    help="comma list: table1,curves,kernels,throughput,"
-                         "roofline")
+                    help="comma list: table1,curves,kernels,wire,"
+                         "throughput,roofline")
     ap.add_argument("--epochs", type=int, default=3,
                     help="epochs for the accuracy curves (CPU-sized)")
     args = ap.parse_args()
@@ -37,6 +40,10 @@ def main() -> None:
     if want("kernels"):
         from benchmarks import kernel_bench
         kernel_bench.main()
+        sys.stdout.flush()
+    if want("wire"):
+        from benchmarks import wire_bench
+        wire_bench.main([])
         sys.stdout.flush()
     if want("curves"):
         from benchmarks import accuracy_curves

@@ -1,0 +1,184 @@
+"""Benchmark — bytes-on-wire and throughput of the packed wire format.
+
+Two sections, both written to BENCH_wire.json (--json):
+
+  bytes       per-round wire bytes of every scheme's exchange under each
+              wire format at link_bits in {2, 4, 8}, from the SAME
+              `Scheme.wire_bytes_per_round` / `core/wirefmt.py` accounting
+              the runner meters (derived from the real wire ops via
+              eval_shape).  The section ASSERTS the acceptance contract:
+
+                * the INL client->server exchange shrinks by exactly
+                  32/link_bits packed vs dense fp32;
+                * measured packed bytes == core/bandwidth.py closed forms
+                  / 8 (forward == half the 2 b p s charge at s=link_bits;
+                  packed_duplex == the full symmetric charge).
+
+  throughput  wall-clock of the INL train round (value_and_grad + adam)
+              packed vs dense at each link_bits, single device, compiled
+              jnp reference backend (the TPU Pallas path is validated in
+              interpret mode by the tests; what is timed here is what runs
+              on this container).  Packing is extra elementwise work with
+              no collective to win back on one device, so the interesting
+              number is the OVERHEAD (expect ~1x; the bytes win shows up
+              on real multi-host links).  A bf16-policy leg times the
+              mixed-precision round against fp32.
+
+--smoke runs tiny shapes with 2 reps for the CI bench-smoke step: the
+assertions still execute, so the wire accounting cannot bit-rot between
+nightly runs.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import statistics
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_inl import PaperExperimentConfig
+from repro.core import bandwidth, schemes, wirefmt
+from repro.data import multiview
+
+LINK_BITS = (2, 4, 8)
+EPS = 1e-6
+
+
+def bytes_section(batch: int = 64):
+    """Per-round wire bytes, asserted against the closed forms."""
+    rows, record = [], {}
+    for bits in LINK_BITS:
+        cfg = PaperExperimentConfig(link_bits=bits)
+        J, d_b = cfg.num_clients, cfg.d_bottleneck
+        p = J * d_b
+        closed_bits = bandwidth.inl_epoch_bits(p, batch * J, J, bits)
+        rec = {}
+        for wire in ("dense", "packed", "packed_duplex"):
+            wb = wirefmt.round_wire_bytes(J * batch, d_b, link_bits=bits,
+                                          wire=wire)
+            rec[wire] = wb
+            rows.append((f"inl_round_bytes[{bits}b,{wire}]", wb["total"],
+                         f"fwd={wb['fwd']} bwd={wb['bwd']}"))
+        # acceptance: client->server bytes shrink by >= 32/bits / (1+eps)
+        reduction = rec["dense"]["fwd"] / rec["packed"]["fwd"]
+        want = 32 / bits
+        assert reduction >= want / (1 + EPS), (bits, reduction, want)
+        # measured == closed form: fwd half of 2 b p s at s=bits; the
+        # duplex round == the full symmetric charge
+        assert rec["packed"]["fwd"] * 8 == closed_bits / 2, \
+            (bits, rec["packed"]["fwd"] * 8, closed_bits / 2)
+        assert rec["packed_duplex"]["total"] * 8 == closed_bits, \
+            (bits, rec["packed_duplex"]["total"] * 8, closed_bits)
+        rec["reduction_fwd_vs_dense"] = reduction
+        rec["closed_form_bits"] = closed_bits
+        record[str(bits)] = rec
+        rows.append((f"inl_fwd_reduction[{bits}b]", reduction,
+                     f"want>={want:.1f}x OK"))
+    return rows, record
+
+
+def _time_round(round_fn, state, v, lab, reps: int):
+    rng = jax.random.PRNGKey(0)
+    out = round_fn(state, v, lab, rng)                  # compile + warmup
+    jax.block_until_ready(out)
+    ts = []
+    for i in range(reps):
+        t0 = time.perf_counter()
+        out = round_fn(state, v, lab, jax.random.PRNGKey(i))
+        jax.block_until_ready(out)
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return statistics.median(ts)
+
+
+def throughput_section(batch: int, reps: int, smoke: bool):
+    """INL round wall-clock packed vs dense, plus the bf16 policy leg."""
+    base = PaperExperimentConfig(
+        conv_channels=(8, 16) if smoke else (16, 32),
+        d_bottleneck=16 if smoke else 64,
+        dense_units=(64,) if smoke else (256,),
+        image_shape=(16, 16, 3) if smoke else (32, 32, 3),
+        dataset_size=batch * 2)
+    imgs, labels = multiview.make_base_dataset(
+        batch, image_shape=base.image_shape, seed=0)
+    views = jnp.asarray(multiview.make_views(imgs, base.noise_stds))
+    labels = jnp.asarray(labels)
+    scheme = schemes.get("inl")
+
+    rows, record = [], {}
+    for bits in LINK_BITS:
+        cfg = dataclasses.replace(base, link_bits=bits)
+        state = scheme.init(cfg, jax.random.PRNGKey(0))
+        v = views[None, :, :batch]
+        lab = labels[None, :batch]
+        med = {}
+        for wire in ("dense", "packed"):
+            med[wire] = _time_round(scheme.make_round(cfg, wire=wire),
+                                    state, v, lab, reps)
+        ratio = med["packed"] / med["dense"]
+        rows.append((f"inl_round_us[{bits}b,dense]", med["dense"], ""))
+        rows.append((f"inl_round_us[{bits}b,packed]", med["packed"],
+                     f"overhead_vs_dense={ratio:.2f}x"))
+        record[str(bits)] = {"dense_us": round(med["dense"], 1),
+                             "packed_us": round(med["packed"], 1),
+                             "packed_overhead": round(ratio, 3)}
+
+    # bf16 compute policy at the widest packed link
+    cfg32 = dataclasses.replace(base, link_bits=8)
+    cfg16 = dataclasses.replace(cfg32, compute_dtype="bf16")
+    state = scheme.init(cfg32, jax.random.PRNGKey(0))
+    v, lab = views[None, :, :batch], labels[None, :batch]
+    t32 = _time_round(scheme.make_round(cfg32, wire="packed"), state, v,
+                      lab, reps)
+    t16 = _time_round(scheme.make_round(cfg16, wire="packed"), state, v,
+                      lab, reps)
+    rows.append(("inl_round_us[8b,packed,bf16]", t16,
+                 f"vs_fp32={t16/t32:.2f}x"))
+    record["bf16_policy"] = {"fp32_us": round(t32, 1),
+                             "bf16_us": round(t16, 1),
+                             "bf16_vs_fp32": round(t16 / t32, 3)}
+    return rows, record
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_wire.json",
+                    help="machine-readable results ('' disables)")
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--reps", type=int, default=10)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes + 2 reps (CI bench-smoke step); the "
+                         "bytes assertions still run")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.batch, args.reps = 32, 2
+
+    print("name,value,derived")
+    b_rows, b_rec = bytes_section(args.batch)
+    for name, val, derived in b_rows:
+        print(f"{name},{val:.1f},{derived}" if isinstance(val, float)
+              else f"{name},{val},{derived}")
+    t_rows, t_rec = throughput_section(args.batch, args.reps, args.smoke)
+    for name, val, derived in t_rows:
+        print(f"{name},{val:.1f},{derived}")
+
+    record = {
+        "bench": "wire",
+        "backend": jax.default_backend(),
+        "smoke": bool(args.smoke),
+        "batch": args.batch,
+        "link_bits": list(LINK_BITS),
+        "bytes": b_rec,
+        "throughput": t_rec,
+    }
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(record, f, indent=2)
+        print(f"# wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

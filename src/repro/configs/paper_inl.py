@@ -25,6 +25,11 @@ class PaperExperimentConfig:
     # node (J+1): two dense layers (Fig. 4)
     dense_units: Tuple[int, ...] = (512, 256)
     s: float = 1e-2                              # eq. (6) Lagrange multiplier
+    # mixed-precision policy: "fp32" (default) or "bf16" — encoder/decoder
+    # convs and denses run at this dtype; master params, optimizer state,
+    # BatchNorm stats and the kernels' rate/KL accumulation stay fp32
+    # (core/paper_model.compute_dtype / cast_compute)
+    compute_dtype: str = "fp32"
     link_bits: int = 32                          # bits per activation value
     # Q_psi_j(u_j): standard normal (False) or learned per-node Gaussian
     # marginals (True, trained jointly via the fused kernel's prior path)

@@ -60,13 +60,36 @@ PAPER_TABLE1 = {
 
 @dataclass
 class BandwidthMeter:
-    """Accumulates actual bits moved during a run (measured counterpart of
-    the closed-form Table I numbers)."""
+    """Two ledgers for one run: the ACCOUNTED bits (closed-form §III-C /
+    Table-I charges, `add`) and the MEASURED bytes (`add_measured`) — the
+    `nbytes` of the buffers the execution layer actually put on the wire
+    (core/wirefmt.py derives them from the real wire ops via eval_shape).
+
+    With the packed wire format the two ledgers agree exactly
+    (measured_bits == accounted bits); the dense fp32 baseline moves
+    32/link_bits more than it accounts — the gap this meter exists to
+    expose.  tests/test_scheme_parity.py pins the agreement."""
     total_bits: float = 0.0
+    measured_bytes: float = 0.0
 
     def add(self, bits: float) -> None:
         self.total_bits += float(bits)
 
+    def add_measured(self, nbytes: float) -> None:
+        self.measured_bytes += float(nbytes)
+
     @property
     def gbits(self) -> float:
         return self.total_bits / GBIT
+
+    @property
+    def measured_bits(self) -> float:
+        return self.measured_bytes * 8.0
+
+    @property
+    def measured_gbits(self) -> float:
+        return self.measured_bits / GBIT
+
+
+# the ISSUE/roadmap name for the measured meter
+BitMeter = BandwidthMeter

@@ -40,9 +40,15 @@ def head_apply(p, h) -> Tuple[jnp.ndarray, jnp.ndarray]:
 
 
 def sample(key, mu, logvar):
-    """Reparametrised draw u = mu + sigma * eps."""
+    """Reparametrised draw u = mu + sigma * eps.
+
+    Computed in fp32, returned in mu.dtype — bf16 inputs must not silently
+    upcast the latent (the kernels' dtype-preservation contract,
+    tests/test_cutlayer_vjp.py)."""
     eps = jax.random.normal(key, mu.shape, jnp.float32)
-    return mu + jnp.exp(0.5 * logvar.astype(jnp.float32)) * eps.astype(mu.dtype)
+    u = mu.astype(jnp.float32) \
+        + jnp.exp(0.5 * logvar.astype(jnp.float32)) * eps
+    return u.astype(mu.dtype)
 
 
 def fused_sample_rate(key, mu, logvar, *, link_bits: int = 32,

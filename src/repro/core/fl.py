@@ -28,30 +28,38 @@ def init(cfg, key):
     return stack(params), stack(state)
 
 
-def client_loss(params, state, views, labels, rng, *, train=True):
-    """views: (J,B,H,W,C) — all J views of this client's images."""
-    logits, new_state = paper_model.fl_model_apply(params, state, views,
-                                                   train=train, rng=rng)
+def client_loss(params, state, views, labels, rng, *, train=True,
+                compute_dtype: str = "fp32"):
+    """views: (J,B,H,W,C) — all J views of this client's images.
+
+    compute_dtype="bf16" drops params/views to half precision INSIDE the
+    loss (mixed-precision policy): grads and the FedAvg weight exchange —
+    which stays fp32 on the wire by design — keep full precision."""
+    dt = paper_model.COMPUTE_DTYPES[compute_dtype]
+    logits, new_state = paper_model.fl_model_apply(
+        paper_model.cast_compute(params, dt), state, views.astype(dt),
+        train=train, rng=rng)
     loss = losses.xent(logits, labels)
     acc = losses.accuracy(logits, labels)
     return loss, ({"loss": loss, "accuracy": acc}, new_state)
 
 
-def make_local_step(optimizer):
+def make_local_step(optimizer, *, compute_dtype: str = "fp32"):
     def local_step(params, state, opt_state, views, labels, rng):
         (loss, (metrics, new_state)), grads = jax.value_and_grad(
-            client_loss, has_aux=True)(params, state, views, labels, rng)
+            client_loss, has_aux=True)(params, state, views, labels, rng,
+                                       compute_dtype=compute_dtype)
         new_params, new_opt = optimizer.update(grads, opt_state, params)
         return new_params, new_state, new_opt, metrics
     return local_step
 
 
-def make_one_client(optimizer):
+def make_one_client(optimizer, *, compute_dtype: str = "fp32"):
     """One client's FedAvg contribution: a lax.scan of local_steps minibatch
     updates, returning (params, state, opt_state, step-mean metrics).  Shared
     by the vmapped single-device round and the shard_map client-parallel
     round (core/sharded.py), so both paths train the same client program."""
-    local_step = make_local_step(optimizer)
+    local_step = make_local_step(optimizer, compute_dtype=compute_dtype)
 
     def one_client(params, state, opt_state, views_seq, labels_seq, rng):
         def body(carry, inp):
@@ -70,7 +78,8 @@ def make_round(cfg, optimizer, local_steps: int):
     """One FedAvg round, jitted: local_steps on all J clients in parallel,
     then weight averaging.  client_data: (J, local_steps, B, J, H*W*C-shaped
     views...) — see examples/compare_schemes.py for the packing helper."""
-    one_client = make_one_client(optimizer)
+    one_client = make_one_client(
+        optimizer, compute_dtype=getattr(cfg, "compute_dtype", "fp32"))
 
     @jax.jit
     def round_fn(stacked_params, stacked_state, stacked_opt, views, labels,

@@ -22,7 +22,7 @@ from typing import Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import bottleneck, linkmodel, losses, paper_model
+from repro.core import bottleneck, linkmodel, losses, paper_model, wirefmt
 
 
 class INLParams(NamedTuple):
@@ -50,6 +50,15 @@ def init(cfg, key):
     return (INLParams(enc_params, dec, priors), {"encoders": enc_state})
 
 
+def _encode_mu_logvar(params: INLParams, state, views, *, train: bool):
+    """All J per-node encoders under one vmap: views (J,B,H,W,C) ->
+    ((mu, logvar) (J,B,d), new encoder state).  The single definition the
+    stochastic, deterministic and wire-aware paths all share."""
+    return jax.vmap(
+        lambda p, s, v: paper_model.encoder_apply(p, s, v, train=train)
+    )(params.encoders, state["encoders"], views)
+
+
 def encode_and_rate(params: INLParams, state, views, *, train: bool, rng,
                     link_bits: int = 32, rate_estimator: str = "sample",
                     backend: str = "auto"):
@@ -62,9 +71,8 @@ def encode_and_rate(params: INLParams, state, views, *, train: bool, rng,
     of eq. (6); the backward pass is the paper's eq.-(10) error-vector +
     rate-gradient split.  Learned priors (params.priors non-empty) ride the
     same launch via the kernel's per-node prior grid."""
-    (mu, logvar), new_state = jax.vmap(
-        lambda p, s, v: paper_model.encoder_apply(p, s, v, train=train)
-    )(params.encoders, state["encoders"], views)
+    (mu, logvar), new_state = _encode_mu_logvar(params, state, views,
+                                                train=train)
     u, rate = bottleneck.fused_sample_rate(
         rng, mu, logvar, link_bits=link_bits, rate_estimator=rate_estimator,
         prior=params.priors, backend=backend)
@@ -86,19 +94,27 @@ def encode(params: INLParams, state, views, *, train: bool, rng=None,
             params, state, views, train=train, rng=rng, link_bits=link_bits,
             backend=backend)
         return u, mu, logvar, new_state
-    (mu, logvar), new_state = jax.vmap(
-        lambda p, s, v: paper_model.encoder_apply(p, s, v, train=train)
-    )(params.encoders, state["encoders"], views)
+    (mu, logvar), new_state = _encode_mu_logvar(params, state, views,
+                                                train=train)
     u_sent, _ = bottleneck.fused_sample_rate(
         None, mu, logvar, link_bits=link_bits, rate_estimator="none",
         backend=backend)
     return u_sent, mu, logvar, {"encoders": new_state}
 
 
-def decode(params: INLParams, u, *, train: bool, rng=None):
-    """Node (J+1): u (J,B,d) -> (joint_logits, branch_logits (J,B,C))."""
-    J, B, d = u.shape
-    u_cat = jnp.moveaxis(u, 0, 1).reshape(B, J * d)       # eq. (5) concat
+def decode(params: INLParams, u, *, train: bool, rng=None, u_joint=None):
+    """Node (J+1): u (J,B,d) -> (joint_logits, branch_logits (J,B,C)).
+
+    u_joint — the latents as RECEIVED over the wire (wirefmt.cut_and_ship's
+    third output; defaults to u).  The fusion decoder reads the received
+    buffer, the per-branch heads the same values — with a packed wire both
+    are bit-identical to the dense path, but the joint-decoder cotangent
+    flows back through the wire's straight-through VJP (where
+    "packed_duplex" compresses the backward link too)."""
+    if u_joint is None:
+        u_joint = u
+    J, B, d = u_joint.shape
+    u_cat = jnp.moveaxis(u_joint, 0, 1).reshape(B, J * d)  # eq. (5) concat
     joint = paper_model.decoder_apply(params.decoder, u_cat, train=train,
                                       rng=rng)
     branch = paper_model.branch_heads_apply(params.decoder, u)
@@ -107,18 +123,33 @@ def decode(params: INLParams, u, *, train: bool, rng=None):
 
 def loss_fn(params: INLParams, state, views, labels, rng, cfg, *,
             train: bool = True, rate_estimator: str = "sample",
-            backend: str = "auto"):
+            backend: str = "auto", wire: str = "dense"):
     """Full eq.-(6) loss.  Returns (loss, (metrics, new_state)).
 
     The encode side runs the fused cut-layer megakernel, which also emits
     the per-sample rate — losses.inl_loss consumes it instead of
-    recomputing the rate from (u, mu, logvar)."""
+    recomputing the rate from (u, mu, logvar).
+
+    wire selects the u_j -> node-(J+1) format (core/wirefmt.py): "dense"
+    is the pre-existing graph; "packed"/"packed_duplex" route the latents
+    through bit-packed codewords (here as an on-device round trip — the
+    sharded rounds run the same format over the real 'client' collective).
+    cfg.compute_dtype="bf16" applies the mixed-precision policy: params
+    and views drop to bf16 INSIDE this function, so gradients and the
+    optimizer's master params stay fp32."""
+    dt = paper_model.compute_dtype(cfg)
+    params_c = paper_model.cast_compute(params, dt)
+    views = views.astype(dt)
     r_enc, r_dec = jax.random.split(rng)
-    u, mu, logvar, rate, new_state = encode_and_rate(
-        params, state, views, train=train, rng=r_enc,
-        link_bits=cfg.link_bits, rate_estimator=rate_estimator,
+    (mu, logvar), new_enc = _encode_mu_logvar(params_c, state, views,
+                                              train=train)
+    u, rate, u_joint = wirefmt.cut_and_ship(
+        r_enc, mu, logvar, link_bits=cfg.link_bits,
+        rate_estimator=rate_estimator, wire=wire, prior=params_c.priors,
         backend=backend)
-    joint, branch = decode(params, u, train=train, rng=r_dec)
+    new_state = {"encoders": new_enc}
+    joint, branch = decode(params_c, u, train=train, rng=r_dec,
+                           u_joint=u_joint)
     J = u.shape[0]
     loss, metrics = losses.inl_loss(
         joint, list(branch), labels,
@@ -133,13 +164,15 @@ def loss_fn(params: INLParams, state, views, labels, rng, cfg, *,
     return loss, (metrics, new_state)
 
 
-def make_train_step(cfg, optimizer, *, rate_estimator: str = "sample"):
+def make_train_step(cfg, optimizer, *, rate_estimator: str = "sample",
+                    wire: str = "dense"):
     """jit-able train step closed over the experiment config + optimizer."""
     @jax.jit
     def step(params, state, opt_state, views, labels, rng):
         (loss, (metrics, new_state)), grads = jax.value_and_grad(
             loss_fn, has_aux=True)(params, state, views, labels, rng, cfg,
-                                   train=True, rate_estimator=rate_estimator)
+                                   train=True, rate_estimator=rate_estimator,
+                                   wire=wire)
         new_params, new_opt = optimizer.update(grads, opt_state, params)
         return new_params, new_state, new_opt, metrics
     return step

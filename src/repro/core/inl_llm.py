@@ -136,24 +136,23 @@ def decode(params: INLLLMParams, cfg, u, tokens_shape):
     """u: (J,B,S,d_b) -> (joint_logits, branch_logits).
 
     The eq.-(5) concatenation is the client->center boundary: with
-    link_bits <= 8 it runs over the int8 wire (linkmodel.wire_concat) so the
-    client-axis all-gather moves compressed latents — the paper's bandwidth
-    idea applied to the ICI."""
+    link_bits <= 8 it runs over a compressed wire so the client-axis
+    all-gather moves small buffers — the paper's bandwidth idea applied to
+    the ICI.  link_bits == 8 rides the int8 wire (linkmodel.wire_concat);
+    link_bits < 8 bit-packs sub-byte codewords into uint32 lanes
+    (linkmodel.packed_wire_concat), 32/link_bits fewer collective bytes.
+    Both pin their gathers via launch/sharding.wire_specs."""
     J, B, S, db = u.shape
     d_cfg = decoder_cfg(cfg)
     if cfg.inl.link_bits <= 8:
         from repro.launch.mesh import current_abstract_mesh
-        mesh = current_abstract_mesh()
-        if mesh is not None and "client" in mesh.axis_names:
-            dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
-            # (J,B,S,db) int8, client axis replicated = the link gather
-            gathered = jax.sharding.PartitionSpec(None, dp or None,
-                                                  None, None)
-            client = jax.sharding.PartitionSpec("client", dp or None,
-                                                None, None)
+        from repro.launch.sharding import wire_specs
+        gathered, client = wire_specs(current_abstract_mesh())
+        if cfg.inl.link_bits < 8:                    # sub-byte packed wire
+            u_cat = linkmodel.packed_wire_concat(u, cfg.inl.link_bits,
+                                                 gathered, client)
         else:
-            gathered = client = None
-        u_cat = linkmodel.wire_concat(u, gathered, client)   # int8 wire
+            u_cat = linkmodel.wire_concat(u, gathered, client)  # int8 wire
     else:
         u_cat = linkmodel.float_concat(u)                 # eq. (5)
     h = layers.dense(params.decoder["in_proj"], u_cat)

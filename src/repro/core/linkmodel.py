@@ -130,6 +130,57 @@ def float_concat(u):
     return jnp.moveaxis(u, 0, 2).reshape(B, S, J * db)
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def packed_wire_concat(u, bits, gathered_spec=None, client_spec=None):
+    """The INL node->(J+1) boundary as a SUB-BYTE packed wire.
+
+    The int8 wire (`wire_concat`) bottoms out at 8 bits per value; for
+    link_bits < 8 this variant quantizes the latents onto the shared
+    `bits`-level grid (kernels/ref.quantize_value semantics) and moves them
+    as bit-packed uint32 codeword lanes (kernels/inl_bottleneck.pack_values
+    — 32/bits values per lane), dequantizing locally after the gather.  The
+    same GSPMD pinning discipline as wire_concat applies: quantize+pack
+    locally under `client_spec`, barrier, then constrain the PACKED tensor
+    to `gathered_spec` so the collective moves lanes, not floats
+    (launch/sharding.wire_specs builds both specs).
+
+    Backward: the eq.-(8c) error-vector split with the chunks quantized at
+    the same `bits` on a dynamic per-tensor scale (the packed counterpart
+    of the int8 backward link)."""
+    from repro.kernels import inl_bottleneck as _bn
+    J, B, S, db = u.shape
+    if client_spec is not None:
+        u = jax.lax.with_sharding_constraint(u, client_spec)
+    packed = _bn.pack_values(u, link_bits=bits)          # (J, B, S, W)
+    if gathered_spec is not None:
+        packed = jax.lax.optimization_barrier(packed)
+        packed = jax.lax.with_sharding_constraint(packed, gathered_spec)
+    vals = _bn.unpack_dequant(packed, db, link_bits=bits, dtype=u.dtype)
+    return jnp.moveaxis(vals, 0, 2).reshape(B, S, J * db)
+
+
+def _packed_wire_fwd(u, bits, gathered_spec, client_spec):
+    J = u.shape[0]
+    marker = jnp.zeros((J, 0), u.dtype)       # carries J + dtype, no data
+    return packed_wire_concat(u, bits, gathered_spec, client_spec), marker
+
+
+def _packed_wire_bwd(bits, gathered_spec, client_spec, res, g):
+    from repro.core import wirefmt
+    marker = res
+    J, dtype = marker.shape[0], marker.dtype
+    B, S, jdb = g.shape
+    db = jdb // J
+    gq = wirefmt.dyn_quantize(g.astype(jnp.float32), bits, axis=None)
+    du = jnp.moveaxis(gq.reshape(B, S, J, db), 2, 0)    # the backward link
+    if client_spec is not None:
+        du = jax.lax.with_sharding_constraint(du, client_spec)
+    return (du.astype(dtype),)
+
+
+packed_wire_concat.defvjp(_packed_wire_fwd, _packed_wire_bwd)
+
+
 def activation_bits(batch: int, width: int, bits: int) -> int:
     """Bits to move `width` activation values per sample across a link."""
     return batch * width * bits

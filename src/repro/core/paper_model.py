@@ -22,6 +22,34 @@ from repro.models import layers
 
 BN_MOMENTUM = 0.9
 
+COMPUTE_DTYPES = {"fp32": jnp.float32, "bf16": jnp.bfloat16}
+
+
+def compute_dtype(cfg):
+    """The hot-path matmul/conv dtype from cfg.compute_dtype ("fp32" default,
+    "bf16" for the mixed-precision policy).  Master params, optimizer state,
+    BatchNorm statistics and the kernels' rate/KL accumulation ALWAYS stay
+    fp32 — only the activations/weights entering convs and denses drop."""
+    name = getattr(cfg, "compute_dtype", "fp32") or "fp32"
+    try:
+        return COMPUTE_DTYPES[name]
+    except KeyError:
+        raise ValueError(f"unknown compute_dtype {name!r}; "
+                         f"known: {sorted(COMPUTE_DTYPES)}") from None
+
+
+def cast_compute(tree, dtype):
+    """Cast the fp32 float leaves of a param tree to the compute dtype.
+
+    Applied INSIDE the loss function, so AD's transpose casts the gradients
+    back to fp32 and the optimizer keeps full-precision master params (the
+    classic mixed-precision split).  Identity for fp32 — the default policy
+    adds nothing to the graph and the golden trajectories are untouched."""
+    if dtype == jnp.float32:
+        return tree
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if x.dtype == jnp.float32 else x, tree)
+
 
 # ---------------------------------------------------------------------------
 # Primitives
@@ -54,22 +82,30 @@ def bn_apply(p, st, x, *, train: bool, axis_name=None):
     training normalises exactly like the single-device run.  The variance
     uses the two-pass form around the global mean (matching jnp.var's
     numerics) rather than E[x^2]-m^2, which would lose ~3 digits to
-    cancellation and drift the golden trajectories."""
+    cancellation and drift the golden trajectories.
+
+    Statistics always accumulate in fp32 (`xf`), whatever the compute dtype
+    — with the bf16 policy the conv activations come in half precision, but
+    the running mean/var state and the normalisation arithmetic stay full
+    precision; only the output drops back to x.dtype.  For fp32 inputs every
+    cast is the identity, so the default policy's numerics are unchanged."""
+    xf = x.astype(jnp.float32)
     if train:
-        mean = x.mean(axis=(0, 1, 2))
+        mean = xf.mean(axis=(0, 1, 2))
         if axis_name is not None:
             mean = jax.lax.pmean(mean, axis_name)
             var = jax.lax.pmean(
-                jnp.square(x - mean).mean(axis=(0, 1, 2)), axis_name)
+                jnp.square(xf - mean).mean(axis=(0, 1, 2)), axis_name)
         else:
-            var = x.var(axis=(0, 1, 2))
+            var = xf.var(axis=(0, 1, 2))
         new_st = {"mean": BN_MOMENTUM * st["mean"] + (1 - BN_MOMENTUM) * mean,
                   "var": BN_MOMENTUM * st["var"] + (1 - BN_MOMENTUM) * var}
     else:
         mean, var = st["mean"], st["var"]
         new_st = st
-    y = (x - mean) * jax.lax.rsqrt(var + 1e-5) * p["scale"] + p["bias"]
-    return y, new_st
+    y = (xf - mean) * jax.lax.rsqrt(var + 1e-5) \
+        * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype), new_st
 
 
 def maxpool2(x):

@@ -38,33 +38,44 @@ class Scheme:
         Must be deterministic in `key`; `lr` must match `make_round`'s."""
         raise NotImplementedError
 
-    def make_round(self, cfg, *, lr: float = 2e-3):
+    def make_round(self, cfg, *, lr: float = 2e-3, wire: str = "dense"):
         """Return a jitted round_fn(state, views, labels, rng) ->
         (new_state, metrics) with views (R, J, B, H, W, C), labels (R, B),
-        R == batches_per_round(cfg).  metrics must include "loss"."""
+        R == batches_per_round(cfg).  metrics must include "loss".
+
+        wire — the cut-layer link format (core/wirefmt.py): "dense" moves
+        quantized values at their storage dtype (the golden baseline),
+        "packed" moves bit-packed codewords (trajectory bit-identical),
+        "packed_duplex" packs the backward error vectors too.  Schemes
+        without a cut-layer exchange (FL's weight transfer) ignore it."""
         raise NotImplementedError
 
-    def make_sharded_round(self, cfg, mesh, *, lr: float = 2e-3):
+    def make_sharded_round(self, cfg, mesh, *, lr: float = 2e-3,
+                           wire: str = "dense"):
         """Round with the same signature/semantics as make_round's, executed
         across a ('client', 'data') mesh via shard_map (core/sharded.py):
         the J client branches on 'client', the batch on 'data'.  Must match
-        the single-device round's trajectory at rtol 1e-4."""
+        the single-device round's trajectory at rtol 1e-4 (bit-exact for
+        wire="packed" vs "dense" — packing is a re-encoding)."""
         raise NotImplementedError(f"scheme {self.name!r} has no sharded "
                                   "round")
 
-    def make_epoch(self, cfg, *, lr: float = 2e-3, mesh=None, donate=None):
+    def make_epoch(self, cfg, *, lr: float = 2e-3, mesh=None, donate=None,
+                   wire: str = "dense"):
         """K rounds in ONE jitted lax.scan — the whole-epoch dispatch unit.
 
         Returns epoch_fn(state, views, labels, rngs) -> (state, metrics)
         with views (K, R, J, B, ...), labels (K, R, B), rngs (K,) PRNG keys
         (one per round, the same chain the per-round path splits), and
         metrics stacked (K,) leaves.  mesh switches the body to the
-        shard_map round.  donate=None donates (params/opt buffers reused
+        shard_map round; wire selects the cut-layer link format for every
+        round in the scan.  donate=None donates (params/opt buffers reused
         in-place) on accelerators only — CPU XLA cannot alias and would
         warn."""
         import jax
-        round_fn = (self.make_sharded_round(cfg, mesh, lr=lr)
-                    if mesh is not None else self.make_round(cfg, lr=lr))
+        round_fn = (self.make_sharded_round(cfg, mesh, lr=lr, wire=wire)
+                    if mesh is not None
+                    else self.make_round(cfg, lr=lr, wire=wire))
 
         def epoch_fn(state, views, labels, rngs):
             def body(st, xs):
@@ -101,6 +112,22 @@ class Scheme:
     def epoch_overhead_bits(self, cfg, state) -> float:
         """Bits charged once per epoch on top of the per-round cost
         (split learning's sequential weight hand-offs).  Default 0."""
+        return 0.0
+
+    def wire_bytes_per_round(self, cfg, state, batch_size: int, *,
+                             wire: str = "dense") -> float:
+        """MEASURED bytes one round actually puts on the wire under `wire`
+        — the nbytes of the transmitted buffers (core/wirefmt.py derives
+        them from the real wire ops), not the closed-form accounting.
+        tests/test_scheme_parity.py asserts the two ledgers agree whenever
+        the wire carries what the formulas charge (packed links, fp32
+        weight exchanges)."""
+        raise NotImplementedError
+
+    def epoch_overhead_wire_bytes(self, cfg, state) -> float:
+        """Measured bytes of the once-per-epoch transfers (SL's weight
+        hand-offs: the actual nbytes of the client param buffers).
+        Default 0."""
         return 0.0
 
     # -- conveniences shared by implementations ---------------------------

@@ -35,7 +35,10 @@ class FLScheme(base.Scheme):
         return {"params": params, "state": state,
                 "opt": jax.vmap(opt.init)(params)}
 
-    def make_round(self, cfg, *, lr: float = 2e-3):
+    def make_round(self, cfg, *, lr: float = 2e-3, wire: str = "dense"):
+        # FL has no cut-layer exchange: the wire carries full fp32 weights
+        # (quantized FedAvg would be a different algorithm), so `wire` is
+        # accepted for interface parity and ignored.
         opt = optim.adam(lr)
         round_impl = fl.make_round(cfg, opt, self.local_steps)
         J, ls = cfg.num_clients, self.local_steps
@@ -60,7 +63,8 @@ class FLScheme(base.Scheme):
                     metrics)
         return round_fn
 
-    def make_sharded_round(self, cfg, mesh, *, lr: float = 2e-3):
+    def make_sharded_round(self, cfg, mesh, *, lr: float = 2e-3,
+                           wire: str = "dense"):
         from repro.core import sharded
         return sharded.make_fl_sharded_round(cfg, mesh, optim.adam(lr),
                                              self.local_steps)
@@ -81,3 +85,12 @@ class FLScheme(base.Scheme):
     def bits_per_round(self, cfg, state, batch_size: int) -> float:
         N = paper_model.fl_param_count(cfg)
         return bandwidth.fl_round_bits(N, cfg.num_clients, cfg.link_bits)
+
+    def wire_bytes_per_round(self, cfg, state, batch_size: int, *,
+                             wire: str = "dense") -> float:
+        # weights down + weights up for every client, at the buffers'
+        # actual (fp32 master) sizes — FL keeps a full-precision exchange
+        # regardless of the wire format
+        stacked_nbytes = sum(x.size * x.dtype.itemsize
+                             for x in jax.tree.leaves(state["params"]))
+        return float(2 * stacked_nbytes)      # leading J axis = per client

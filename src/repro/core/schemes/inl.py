@@ -9,7 +9,7 @@ closed form so measured and published accounting share one source.
 from __future__ import annotations
 
 from repro import optim
-from repro.core import bandwidth, inl
+from repro.core import bandwidth, inl, paper_model, wirefmt
 from repro.core import schemes as _schemes
 from repro.core.schemes import base
 
@@ -23,9 +23,9 @@ class INLScheme(base.Scheme):
         opt = optim.adam(lr)
         return {"params": params, "state": state, "opt": opt.init(params)}
 
-    def make_round(self, cfg, *, lr: float = 2e-3):
+    def make_round(self, cfg, *, lr: float = 2e-3, wire: str = "dense"):
         opt = optim.adam(lr)
-        step = inl.make_train_step(cfg, opt)
+        step = inl.make_train_step(cfg, opt, wire=wire)
 
         def round_fn(state, views, labels, rng):
             params, st, opt_state, metrics = step(
@@ -35,9 +35,11 @@ class INLScheme(base.Scheme):
                     metrics)
         return round_fn
 
-    def make_sharded_round(self, cfg, mesh, *, lr: float = 2e-3):
+    def make_sharded_round(self, cfg, mesh, *, lr: float = 2e-3,
+                           wire: str = "dense"):
         from repro.core import sharded
-        return sharded.make_inl_sharded_round(cfg, mesh, optim.adam(lr))
+        return sharded.make_inl_sharded_round(cfg, mesh, optim.adam(lr),
+                                              wire=wire)
 
     def state_shardings(self, cfg, state, mesh):
         import jax
@@ -70,3 +72,12 @@ class INLScheme(base.Scheme):
         p = cfg.num_clients * cfg.d_bottleneck
         return bandwidth.inl_epoch_bits(p, batch_size * cfg.num_clients,
                                         cfg.num_clients, cfg.link_bits)
+
+    def wire_bytes_per_round(self, cfg, state, batch_size: int, *,
+                             wire: str = "dense") -> float:
+        # the round's exchange is J*B latent d_b-vectors forward and their
+        # eq.-(10) error chunks back, at the sizes wirefmt actually ships
+        return wirefmt.round_wire_bytes(
+            cfg.num_clients * batch_size, cfg.d_bottleneck,
+            link_bits=cfg.link_bits, wire=wire,
+            dtype=paper_model.compute_dtype(cfg))["total"]

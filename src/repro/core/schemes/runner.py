@@ -39,7 +39,8 @@ from repro.data import multiview, prefetch
 class CurvePoint(NamedTuple):
     epoch: int
     accuracy: float
-    gbits: float                 # cumulative bits exchanged, in Gbit
+    gbits: float                 # cumulative ACCOUNTED bits (§III-C), Gbit
+    measured_gbits: float = 0.0  # cumulative MEASURED wire-buffer bits, Gbit
 
 
 @partial(jax.jit, static_argnums=1)
@@ -55,19 +56,24 @@ def _split_chain(key, n: int):
 def run_scheme(name: str, views, labels, cfg, *, epochs: int,
                batch_size: int = 64, lr: float = 2e-3, seed: int = 0,
                eval_n: int = 512, dispatch: str = "scan", mesh=None,
-               prefetch_size: int = 2) -> List[CurvePoint]:
+               prefetch_size: int = 2,
+               wire: str = "dense") -> List[CurvePoint]:
     """Train scheme `name` for `epochs` over the (J, n, ...) multi-view set
     and return its accuracy/bandwidth curve (paper Figs. 5/7 rows).
 
     Minibatches are grouped `batches_per_round(cfg)` at a time into round
     calls; a trailing partial group is dropped (same rounding the paper's
-    per-epoch accounting uses).  Bandwidth accrues per round plus the
-    scheme's once-per-epoch overhead, all through the §III-C closed forms.
+    per-epoch accounting uses).  Bandwidth accrues on TWO ledgers: the
+    §III-C closed forms (`gbits`, as published) and the MEASURED nbytes of
+    the buffers the chosen wire format actually transmits per round
+    (`measured_gbits`; Scheme.wire_bytes_per_round via core/wirefmt.py).
 
     dispatch="scan" (default) runs each epoch as one jitted lax.scan fed by
     the device prefetcher; dispatch="per_round" keeps the seed-style loop
     (one dispatch per round).  `mesh` enables shard_map execution (scan
-    dispatch only).
+    dispatch only).  wire="packed" moves the cut-layer collectives as
+    bit-packed codewords (trajectories identical to dense);
+    "packed_duplex" packs the backward error vectors too.
     """
     from repro.core import schemes
     scheme = schemes.get(name)
@@ -76,12 +82,12 @@ def run_scheme(name: str, views, labels, cfg, *, epochs: int,
             raise ValueError("mesh execution needs dispatch='scan'")
         return _run_per_round(scheme, views, labels, cfg, epochs=epochs,
                               batch_size=batch_size, lr=lr, seed=seed,
-                              eval_n=eval_n)
+                              eval_n=eval_n, wire=wire)
     if dispatch != "scan":
         raise ValueError(f"unknown dispatch {dispatch!r}")
 
     state = scheme.init(cfg, jax.random.PRNGKey(seed), lr=lr)
-    epoch_fn = scheme.make_epoch(cfg, lr=lr, mesh=mesh)
+    epoch_fn = scheme.make_epoch(cfg, lr=lr, mesh=mesh, wire=wire)
     bpr = scheme.batches_per_round(cfg)
     views_np, labels_np = np.asarray(views), np.asarray(labels)
     n = labels_np.shape[0]
@@ -123,20 +129,24 @@ def run_scheme(name: str, views, labels, cfg, *, epochs: int,
             ep_views, ep_labels, ep_rngs = next(items)
             state, _ = epoch_fn(state, ep_views, ep_labels, ep_rngs)
             meter.add(rounds * scheme.bits_per_round(cfg, state, batch_size))
+            meter.add_measured(rounds * scheme.wire_bytes_per_round(
+                cfg, state, batch_size, wire=wire))
         meter.add(scheme.epoch_overhead_bits(cfg, state))
+        meter.add_measured(scheme.epoch_overhead_wire_bytes(cfg, state))
         eval_state = jax.device_get(state) if mesh is not None else state
         acc = base.evaluate_accuracy(scheme, eval_state, ev, el)
-        curve.append(CurvePoint(ep + 1, acc, meter.gbits))
+        curve.append(CurvePoint(ep + 1, acc, meter.gbits,
+                                meter.measured_gbits))
     return curve
 
 
 def _run_per_round(scheme, views, labels, cfg, *, epochs, batch_size, lr,
-                   seed, eval_n):
+                   seed, eval_n, wire="dense"):
     """The seed-style path: one transfer + one jitted dispatch per round.
     Kept verbatim as the throughput baseline (benchmarks/throughput_bench)
     and the semantics reference the scan path is tested against."""
     state = scheme.init(cfg, jax.random.PRNGKey(seed), lr=lr)
-    round_fn = scheme.make_round(cfg, lr=lr)
+    round_fn = scheme.make_round(cfg, lr=lr, wire=wire)
     bpr = scheme.batches_per_round(cfg)
 
     meter = bandwidth.BandwidthMeter()
@@ -159,10 +169,14 @@ def _run_per_round(scheme, views, labels, cfg, *, epochs, batch_size, lr,
                 state, jnp.asarray(np.stack(group_v)),
                 jnp.asarray(np.stack(group_l)), sub)
             meter.add(scheme.bits_per_round(cfg, state, batch_size))
+            meter.add_measured(scheme.wire_bytes_per_round(
+                cfg, state, batch_size, wire=wire))
             group_v, group_l = [], []
         meter.add(scheme.epoch_overhead_bits(cfg, state))
+        meter.add_measured(scheme.epoch_overhead_wire_bytes(cfg, state))
         acc = base.evaluate_accuracy(scheme, state, ev, el)
-        curve.append(CurvePoint(ep + 1, acc, meter.gbits))
+        curve.append(CurvePoint(ep + 1, acc, meter.gbits,
+                                meter.measured_gbits))
     return curve
 
 

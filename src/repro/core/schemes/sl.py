@@ -12,7 +12,7 @@ from __future__ import annotations
 import jax
 
 from repro import optim
-from repro.core import bandwidth, paper_model, sl
+from repro.core import bandwidth, paper_model, sl, wirefmt
 from repro.core import schemes as _schemes
 from repro.core.schemes import base
 
@@ -27,9 +27,11 @@ class SLScheme(base.Scheme):
         return {"client": client, "server": server, "state": state,
                 "opt_c": oc.init(client), "opt_s": osrv.init(server)}
 
-    def make_round(self, cfg, *, lr: float = 2e-3):
+    def make_round(self, cfg, *, lr: float = 2e-3, wire: str = "dense"):
         oc, osrv = optim.adam(lr), optim.adam(lr)
-        step = sl.make_train_step(oc, osrv, link_bits=cfg.link_bits)
+        step = sl.make_train_step(
+            oc, osrv, link_bits=cfg.link_bits, wire=wire,
+            compute_dtype=getattr(cfg, "compute_dtype", "fp32"))
 
         def round_fn(state, views, labels, rng):
             client, server, st, opt_c, opt_s, metrics = step(
@@ -39,12 +41,13 @@ class SLScheme(base.Scheme):
                      "opt_c": opt_c, "opt_s": opt_s}, metrics)
         return round_fn
 
-    def make_sharded_round(self, cfg, mesh, *, lr: float = 2e-3):
+    def make_sharded_round(self, cfg, mesh, *, lr: float = 2e-3,
+                           wire: str = "dense"):
         # SL is sequential client/server by construction; the batch shards
         # over 'data' (params replicated — the base state_shardings default)
         from repro.core import sharded
         return sharded.make_sl_sharded_round(cfg, mesh, optim.adam(lr),
-                                             optim.adam(lr))
+                                             optim.adam(lr), wire=wire)
 
     def predict(self, state, views):
         return sl.predict(state["client"], state["server"], state["state"],
@@ -64,3 +67,21 @@ class SLScheme(base.Scheme):
         eta = self.param_count(state["client"]) / N
         return bandwidth.sl_epoch_bits(p, 0, N, cfg.num_clients, eta,
                                        cfg.link_bits)
+
+    def wire_bytes_per_round(self, cfg, state, batch_size: int, *,
+                             wire: str = "dense") -> float:
+        # J*B deterministic cut d_b-vectors to the server, error vectors
+        # back — same per-vector wire encoding as INL's exchange
+        return wirefmt.round_wire_bytes(
+            cfg.num_clients * batch_size, cfg.d_bottleneck,
+            link_bits=cfg.link_bits, wire=wire,
+            dtype=paper_model.compute_dtype(cfg))["total"]
+
+    def epoch_overhead_wire_bytes(self, cfg, state) -> float:
+        # the J sequential client->client hand-offs each move the actual
+        # client-side param buffers (fp32 master weights — the wire format
+        # does not quantize weight transfers)
+        import jax
+        client_nbytes = sum(x.size * x.dtype.itemsize
+                            for x in jax.tree.leaves(state["client"]))
+        return float(client_nbytes * cfg.num_clients)

@@ -18,6 +18,22 @@ latent block, and the ONLY collectives are the fusion-center fan-in
 transfer), the decoder/aggregation reductions (`psum` over 'client'), and
 batch-mean reductions (`pmean` over 'data').
 
+The fan-in's WIRE FORMAT is selectable (`wire=`, core/wirefmt.py): "dense"
+all-gathers the quantized latents at their storage dtype (the baseline the
+goldens pin); "packed" runs the pack-emitting cut-layer kernel and gathers
+`link_bits`-bit codewords in uint32 lanes — 32/link_bits fewer collective
+bytes, values and trajectories bit-identical; "packed_duplex" additionally
+quantizes the eq.-(10) error chunks on the way back, making measured bytes
+equal the paper's symmetric 2 b p s accounting (lossy: each node receives
+exactly the q-bit-coded error chunk the modeled link delivers — execution
+sums the replicated decoder's partial cotangents with a dense psum_scatter
+first and quantizes after, a shard_map artifact the meter does not charge;
+see core/wirefmt.py).  FL's weight exchange stays fp32 — quantized
+FedAvg is a different algorithm, not a wire format.  `cfg.compute_dtype`
+applies the mixed-precision policy inside every round body (params/views
+drop to bf16 before local AD; grads, optimizer state and collective
+reductions stay fp32).
+
 Single-device semantics are preserved exactly (golden-trajectory parity,
 tests/test_sharded_parity.py):
 
@@ -43,7 +59,7 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
-from repro.core import linkmodel, losses, paper_model
+from repro.core import linkmodel, losses, paper_model, wirefmt
 from repro.core.inl import INLParams
 from repro.kernels import ops
 
@@ -86,27 +102,29 @@ def _psum(tree, axis: str):
 # INL: encoders sharded over 'client', batch over 'data', all_gather fan-in
 # ---------------------------------------------------------------------------
 
-def make_inl_sharded_round(cfg, mesh, optimizer):
+def make_inl_sharded_round(cfg, mesh, optimizer, *, wire: str = "dense"):
     """(state, views (1,J,B,H,W,C), labels (1,B), rng) -> (state, metrics),
     numerically matching core/inl.make_train_step on one device."""
     check_mesh(mesh, cfg.num_clients)
+    wirefmt.resolve_wire(wire, cfg.link_bits)        # fail at build time
     J, s = cfg.num_clients, cfg.s
     n_c, n_d = axis_size(mesh, "client"), axis_size(mesh, "data")
     d_ax = "data"
+    dt = paper_model.compute_dtype(cfg)
 
     def local_grads(params, enc_state, views, labels, eps, masks):
         def obj_fn(p):
+            p = paper_model.cast_compute(p, dt)
             (mu, logvar), new_st = jax.vmap(
                 lambda pp, ss, v: paper_model.encoder_apply(
                     pp, ss, v, train=True, axis_name=d_ax)
-            )(p.encoders, enc_state, views)
-            prior = p.priors or {}
-            u, rate = ops.cutlayer(
-                mu, logvar, eps, link_bits=cfg.link_bits,
-                rate_estimator="sample", prior_mu=prior.get("mu"),
-                prior_logvar=prior.get("logvar"))
-            # fusion-center fan-in: eq. (5)'s concat as a wire transfer
-            u_all = jax.lax.all_gather(u, "client", axis=0, tiled=True)
+            )(p.encoders, enc_state, views.astype(dt))
+            # fusion-center fan-in: eq. (5)'s concat as a wire transfer —
+            # dense values or packed codewords over the 'client' collective
+            u, rate, u_all = wirefmt.cut_and_ship(
+                None, mu, logvar, eps=eps, link_bits=cfg.link_bits,
+                rate_estimator="sample", wire=wire, axis_name="client",
+                prior=p.priors or {})
             b_l = u.shape[1]
             u_cat = jnp.moveaxis(u_all, 0, 1).reshape(b_l, J * u.shape[-1])
             joint = paper_model.decoder_apply(p.decoder, u_cat, train=True,
@@ -178,11 +196,15 @@ def make_inl_sharded_round(cfg, mesh, optimizer):
 
 def make_fl_sharded_round(cfg, mesh, optimizer, local_steps: int):
     """FedAvg round with the per-client local-step scans running in parallel
-    across the 'client' axis; server aggregation is one psum."""
+    across the 'client' axis; server aggregation is one psum.  The weight
+    exchange stays fp32 whatever the wire format (quantizing FedAvg updates
+    changes the algorithm); cfg.compute_dtype still applies inside each
+    client's local steps."""
     from repro.core import fl
     check_mesh(mesh, cfg.num_clients)
     J = cfg.num_clients
-    one_client = fl.make_one_client(optimizer)
+    one_client = fl.make_one_client(
+        optimizer, compute_dtype=getattr(cfg, "compute_dtype", "fp32"))
 
     def local_round(params, mstate, opt_state, views, labels, rngs):
         p, st, opt, m = jax.vmap(one_client)(params, mstate, opt_state,
@@ -225,22 +247,29 @@ def make_fl_sharded_round(cfg, mesh, optimizer, local_steps: int):
 # SL: client/server split is sequential by construction; the batch shards
 # ---------------------------------------------------------------------------
 
-def make_sl_sharded_round(cfg, mesh, opt_client, opt_server):
+def make_sl_sharded_round(cfg, mesh, opt_client, opt_server, *,
+                          wire: str = "dense"):
     """One SL client->server->client exchange with the minibatch sharded
     over 'data' (the J conv branches all live client-side, so 'client' only
-    replicates); grads are pmean'ed back to the exact global-batch values."""
+    replicates); grads are pmean'ed back to the exact global-batch values.
+    The cut crossing honours `wire` (packed codewords are a per-row
+    re-encoding, so any batch sharding sees identical values)."""
     check_mesh(mesh, cfg.num_clients)
+    wirefmt.resolve_wire(wire, cfg.link_bits)
     n_d = axis_size(mesh, "data")
     d_ax = "data"
+    dt = paper_model.compute_dtype(cfg)
 
     def local_grads(client, server, mstate, views, labels, masks):
         def obj_fn(cs):
             cl, srv = cs
+            cl = paper_model.cast_compute(cl, dt)
+            srv = paper_model.cast_compute(srv, dt)
             mus, lvs, new_states = [], [], []
             for j, (ep, es) in enumerate(zip(cl["encoders"],
                                              mstate["encoders"])):
                 (mu, lv), ns = paper_model.encoder_apply(
-                    ep, es, views[j], train=True, axis_name=d_ax)
+                    ep, es, views[j].astype(dt), train=True, axis_name=d_ax)
                 mus.append(mu)
                 lvs.append(lv)
                 new_states.append(ns)
@@ -249,8 +278,9 @@ def make_sl_sharded_round(cfg, mesh, opt_client, opt_server):
                                           jnp.float32),
                                 link_bits=cfg.link_bits,
                                 rate_estimator="none")
-            j, b_l, d = u.shape
-            u_cat = jnp.moveaxis(u, 0, 1).reshape(b_l, j * d)
+            u_w = wirefmt.ship(u, link_bits=cfg.link_bits, wire=wire)
+            j, b_l, d = u_w.shape
+            u_cat = jnp.moveaxis(u_w, 0, 1).reshape(b_l, j * d)
             logits = paper_model.decoder_apply(srv["decoder"], u_cat,
                                                train=True, drop_masks=masks)
             loss = losses.xent(logits, labels)

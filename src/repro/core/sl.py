@@ -15,7 +15,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import bottleneck, losses, paper_model
+from repro.core import bottleneck, losses, paper_model, wirefmt
 
 
 def init(cfg, key):
@@ -28,7 +28,8 @@ def init(cfg, key):
 
 
 def forward_client(client, state, views, *, train: bool,
-                   link_bits: int = 32, backend: str = "auto"):
+                   link_bits: int = 32, backend: str = "auto",
+                   compute_dtype: str = "fp32"):
     """Client-side cut-layer activations: concat of all J branch latents.
 
     SL sends DETERMINISTIC activations (no stochastic bottleneck), but the
@@ -36,7 +37,13 @@ def forward_client(client, state, views, *, train: bool,
     no-noise mode (eps == 0, rate == 0): one launch over the stacked
     (J, B, d) latents yields u = quantize(mu), and the backward pass
     returns the server's error vector through the straight-through
-    quantizer — the two schemes now share one measured substrate."""
+    quantizer — the two schemes now share one measured substrate.
+
+    compute_dtype="bf16" runs the conv trunks in half precision (the
+    mixed-precision policy; grads/master params stay fp32 at the caller)."""
+    dt = paper_model.COMPUTE_DTYPES[compute_dtype]
+    client = paper_model.cast_compute(client, dt)
+    views = views.astype(dt)
     mus, lvs, new_states = [], [], []
     for j, (ep, es) in enumerate(zip(client["encoders"], state["encoders"])):
         (mu, lv), ns = paper_model.encoder_apply(ep, es, views[j],
@@ -51,11 +58,18 @@ def forward_client(client, state, views, *, train: bool,
 
 
 def loss_fn(client, server, state, views, labels, rng, *, train=True,
-            link_bits: int = 32, backend: str = "auto"):
+            link_bits: int = 32, backend: str = "auto", wire: str = "dense",
+            compute_dtype: str = "fp32"):
     u, new_state = forward_client(client, state, views, train=train,
-                                  link_bits=link_bits, backend=backend)
-    J, B, d = u.shape
-    u_cat = jnp.moveaxis(u, 0, 1).reshape(B, J * d)
+                                  link_bits=link_bits, backend=backend,
+                                  compute_dtype=compute_dtype)
+    # the client->server link: dense values or bit-packed codewords
+    # (wirefmt; dense is the identity, so the baseline graph is untouched)
+    u_w = wirefmt.ship(u, link_bits=link_bits, wire=wire, backend=backend)
+    J, B, d = u_w.shape
+    u_cat = jnp.moveaxis(u_w, 0, 1).reshape(B, J * d)
+    server = paper_model.cast_compute(
+        server, paper_model.COMPUTE_DTYPES[compute_dtype])
     logits = paper_model.decoder_apply(server["decoder"], u_cat, train=train,
                                        rng=rng)
     loss = losses.xent(logits, labels)
@@ -64,7 +78,8 @@ def loss_fn(client, server, state, views, labels, rng, *, train=True,
 
 
 def make_train_step(optimizer_client, optimizer_server, *,
-                    link_bits: int = 32, backend: str = "auto"):
+                    link_bits: int = 32, backend: str = "auto",
+                    wire: str = "dense", compute_dtype: str = "fp32"):
     """One SL step: server computes loss, backprops the cut-layer error to
     the active client (the fused kernel's custom VJP produces exactly that
     error vector, straight-through through the link quantizer)."""
@@ -73,7 +88,8 @@ def make_train_step(optimizer_client, optimizer_server, *,
         (loss, (metrics, new_state)), grads = jax.value_and_grad(
             loss_fn, argnums=(0, 1), has_aux=True)(
             client, server, state, views, labels, rng,
-            link_bits=link_bits, backend=backend)
+            link_bits=link_bits, backend=backend, wire=wire,
+            compute_dtype=compute_dtype)
         g_client, g_server = grads
         new_client, new_opt_c = optimizer_client.update(g_client, opt_c, client)
         new_server, new_opt_s = optimizer_server.update(g_server, opt_s, server)

@@ -1,0 +1,285 @@
+"""Packed wire format — quantized cut-layer latents travel bit-packed.
+
+`core/bandwidth.py` charges the links `link_bits` per latent value (Table I),
+but the execution layer used to move the DEQUANTIZED latents: fp32 (or bf16)
+buffers over the 'client' all_gather, 4-16x the accounted bytes.  This module
+closes that gap: a quantized latent is a `link_bits`-bit codeword index, and
+the wire carries those indices packed into uint32 lanes
+(`kernels/inl_bottleneck.pack_values` / `unpack_dequant`, jnp oracles in
+`kernels/ref.py`), so collective traffic shrinks by `32 / link_bits` against
+fp32.  Packing is a pure re-encoding — `unpack(pack(u)) == u` bit-for-bit on
+quantizer-grid values — so the packed forward cannot change a trajectory.
+
+Wire formats (the `wire=` option threaded through `Scheme.make_round` /
+`make_epoch`, `schemes/runner.py` and `launch/sharding.py`):
+
+    "dense"          the unpacked baseline: quantized VALUES move at their
+                     storage dtype (fp32/bf16).  Exactly the pre-existing
+                     graph — goldens are pinned to it.
+    "packed"         client->server latents travel as packed codewords; the
+                     server->client error vectors (eq. 10) stay dense.
+                     Trajectories are BIT-IDENTICAL to "dense".
+    "packed_duplex"  both directions packed at link_bits: the backward link
+                     quantizes each error vector with a per-row dynamic
+                     scale (straight-through, the same compression
+                     `linkmodel.wire_concat` applies to the LLM cut at
+                     int8).  Measured bytes == the paper's symmetric
+                     2 b p s closed form exactly; trajectories track the
+                     dense path only approximately (the backward link is
+                     genuinely lossy — ~1e-4 relative loss drift at 8 bits
+                     on the fixture, growing as bits shrink).
+
+Both packed modes require a packable width (1 <= link_bits <= 16).
+
+The differentiable units here are `custom_vjp` wrappers spanning
+pack -> collective -> unpack, so gradients never try to flow through integer
+codewords: `cut_and_ship` runs the pack-EMITTING fused cut-layer kernel (the
+packed buffer is a free third output of the one forward pass) and hands the
+cotangent sum to the same fused eq.-(10) backward the dense path uses;
+`ship` packs an existing quantized latent (the learned-prior and split-
+learning paths).  With `axis_name` the collective is a real `all_gather`
+over the packed buffer inside `shard_map` (core/sharded.py); without it the
+pack/unpack round trip simulates the wire on one device — same values, same
+measured bytes.
+
+Measured bytes come from `jax.eval_shape` over the real wire ops
+(`shipped_nbytes` / `round_wire_bytes`).  What is literal vs modeled: the
+FORWARD packed buffer is literally the collective payload (`all_gather`
+moves the uint32 lanes).  The duplex BACKWARD link is modeled: the paper's
+server holds the full error vector and returns q-bit codes to each node,
+but in `shard_map` the replicated decoder's partial cotangents must be
+summed first, so execution runs `psum_scatter` (dense) THEN quantizes
+locally — the values each node receives are exactly the modeled q-bit
+link's, and the meter charges that link's packed size, not the simulation
+artifact's.  (Without a mesh, forward and backward alike are on-device
+round trips simulating the link — same values, same accounting.)  Per-row
+fp32 scales of the duplex backward ride the control channel and are
+excluded, like packet headers are in the paper's accounting.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import inl_bottleneck as _bn
+from repro.kernels import ops, ref
+
+WIRE_FORMATS = ("dense", "packed", "packed_duplex")
+
+
+def resolve_wire(wire: str, link_bits: int):
+    """Validate the wire format against the link width.
+
+    Returns (wire, bwd_bits): bwd_bits is the backward-link code width
+    (None = dense fp-valued error vectors)."""
+    if wire not in WIRE_FORMATS:
+        raise ValueError(f"unknown wire format {wire!r}; "
+                         f"known: {WIRE_FORMATS}")
+    if wire != "dense" and not 1 <= link_bits <= 16:
+        raise ValueError(f"wire={wire!r} needs a packable link width "
+                         f"(1 <= link_bits <= 16), got link_bits="
+                         f"{link_bits}; use wire='dense' for full-precision "
+                         "links")
+    return wire, (link_bits if wire == "packed_duplex" else None)
+
+
+def dyn_quantize(g, bits: int, axis=-1):
+    """Dynamic-scale uniform quantizer (value map) for the backward link:
+    error vectors are coded on a (2^bits - 1)-level grid over
+    [-max|g|, max|g|], the maximum taken over `axis` (default: per row,
+    which makes the result identical under any batch/client sharding;
+    axis=None gives the per-tensor scale `linkmodel.packed_wire_concat`
+    uses).  The single source of truth for the q-bit backward link."""
+    gf = g.astype(jnp.float32)
+    m = jnp.max(jnp.abs(gf)) if axis is None \
+        else jnp.max(jnp.abs(gf), axis=axis, keepdims=True)
+    levels = (1 << bits) - 1
+    scale = levels / (2.0 * jnp.maximum(m, 1e-12))
+    q = jnp.round((jnp.clip(gf, -m, m) + m) * scale) / scale - m
+    return q.astype(g.dtype)
+
+
+def _gather(x, axis_name):
+    return jax.lax.all_gather(x, axis_name, axis=0, tiled=True) \
+        if axis_name else x
+
+
+def _scatter(g, axis_name):
+    """Transpose of `_gather` — exactly what AD of the dense all_gather
+    produces (psum_scatter: each client receives its own summed chunk)."""
+    return jax.lax.psum_scatter(g, axis_name, scatter_dimension=0,
+                                tiled=True) if axis_name else g
+
+
+# ---------------------------------------------------------------------------
+# ship: an existing quantized latent crosses the wire packed
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5))
+def _ship(u, bits, axis_name, bwd_bits, impl, block_t):
+    packed = _bn.pack_values(u, link_bits=bits, impl=impl, block_t=block_t)
+    packed = _gather(packed, axis_name)
+    return _bn.unpack_dequant(packed, u.shape[-1], link_bits=bits,
+                              dtype=u.dtype, impl=impl, block_t=block_t)
+
+
+def _ship_fwd(u, bits, axis_name, bwd_bits, impl, block_t):
+    return _ship(u, bits, axis_name, bwd_bits, impl, block_t), None
+
+
+def _ship_bwd(bits, axis_name, bwd_bits, impl, block_t, res, g):
+    delta = _scatter(g, axis_name)
+    if bwd_bits is not None:
+        delta = dyn_quantize(delta, bwd_bits)
+    return (delta,)
+
+
+_ship.defvjp(_ship_fwd, _ship_bwd)
+
+
+def ship(u, *, link_bits: int, wire: str = "dense", axis_name=None,
+         backend: str = "auto", block_t: int = None):
+    """Move a quantized latent u (..., d) across the client->server wire.
+
+    dense: the plain (tiled) all_gather over `axis_name`, or the identity
+    without one — the pre-existing graph, bit for bit.  packed: the buffer
+    on the wire is uint32 codeword lanes; values are unchanged.  The
+    backward returns each client its eq.-(10) error chunk (straight-through;
+    packed_duplex additionally quantizes it at link_bits)."""
+    wire, bwd_bits = resolve_wire(wire, link_bits)
+    if wire == "dense":
+        return _gather(u, axis_name)
+    return _ship(u, link_bits, axis_name, bwd_bits,
+                 ops.resolve_backend(backend), block_t)
+
+
+# ---------------------------------------------------------------------------
+# cut_and_ship: the fused cut layer with the wire folded into the kernel
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _cut_ship(mu, logvar, eps, bits, mode, axis_name, bwd_bits, impl,
+              block_t):
+    u, packed, rate = _bn.cutlayer_pack_forward(
+        mu, logvar, eps, link_bits=bits, rate_estimator=mode, impl=impl,
+        block_t=block_t)
+    packed = _gather(packed, axis_name)
+    u_shipped = _bn.unpack_dequant(packed, mu.shape[-1], link_bits=bits,
+                                   dtype=u.dtype, impl=impl, block_t=block_t)
+    return u, rate, u_shipped
+
+
+def _cut_ship_fwd(mu, logvar, eps, bits, mode, axis_name, bwd_bits, impl,
+                  block_t):
+    out = _cut_ship(mu, logvar, eps, bits, mode, axis_name, bwd_bits, impl,
+                    block_t)
+    return out, (mu, logvar, eps)
+
+
+def _cut_ship_bwd(bits, mode, axis_name, bwd_bits, impl, block_t, res, cts):
+    mu, logvar, eps = res
+    gu, grate, g_shipped = cts
+    delta = _scatter(g_shipped, axis_name)
+    if bwd_bits is not None:
+        delta = dyn_quantize(delta, bwd_bits)
+    return _bn.cutlayer_backward(mu, logvar, eps, gu + delta.astype(gu.dtype),
+                                 grate, link_bits=bits, rate_estimator=mode,
+                                 impl=impl, block_t=block_t)
+
+
+_cut_ship.defvjp(_cut_ship_fwd, _cut_ship_bwd)
+
+
+def cut_and_ship(key, mu, logvar, *, link_bits: int,
+                 rate_estimator: str = "sample", wire: str = "dense",
+                 axis_name=None, prior: dict = None, eps=None,
+                 backend: str = "auto", block_t: int = None):
+    """The full cut-layer transaction: sample + quantize + rate + WIRE.
+
+    Returns (u, rate, u_shipped): u (..., d) is the node-local quantized
+    latent (branch heads read it in place), rate (...,) the eq.-(6) term,
+    and u_shipped what the fusion center receives — all_gathered over
+    `axis_name` when given, identical values either way.  wire="dense"
+    reproduces `bottleneck.fused_sample_rate` + `all_gather` exactly;
+    "packed"/"packed_duplex" run the pack-emitting kernel so the collective
+    moves uint32 codeword lanes.  The backward is the same fused eq.-(10)
+    split in every mode (duplex additionally quantizes the error chunk).
+
+    key=None is the deterministic cut (eps == 0); sharded callers that
+    pre-draw randomness at global shape pass their slice via `eps` instead
+    of a key.  `prior` selects the learned-Gaussian-prior rate (that kernel
+    pair keeps its own custom VJP, so its wire is the standalone `ship`)."""
+    wire, bwd_bits = resolve_wire(wire, link_bits)
+    if eps is None:
+        eps = (jnp.zeros(mu.shape, jnp.float32) if key is None
+               else jax.random.normal(key, mu.shape, jnp.float32))
+    elif key is not None:
+        raise ValueError("pass either key or eps, not both")
+    prior = prior or {}
+    if wire == "dense" or prior:
+        u, rate = ops.cutlayer(mu, logvar, eps, link_bits=link_bits,
+                               rate_estimator=rate_estimator,
+                               prior_mu=prior.get("mu"),
+                               prior_logvar=prior.get("logvar"),
+                               backend=backend, block_t=block_t)
+        u_shipped = ship(u, link_bits=link_bits, wire=wire,
+                         axis_name=axis_name, backend=backend,
+                         block_t=block_t)
+        return u, rate, u_shipped
+    u, rate, u_shipped = _cut_ship(mu, logvar, eps, link_bits,
+                                   rate_estimator, axis_name, bwd_bits,
+                                   ops.resolve_backend(backend), block_t)
+    return u, rate, u_shipped
+
+
+# ---------------------------------------------------------------------------
+# Measured bytes: what the wire buffers actually occupy
+# ---------------------------------------------------------------------------
+
+def _nbytes(sds) -> int:
+    return math.prod(sds.shape) * jnp.dtype(sds.dtype).itemsize
+
+
+def shipped_nbytes(n_vectors: int, d: int, *, link_bits: int,
+                   wire: str = "dense", dtype=jnp.float32) -> int:
+    """Bytes ONE direction of the wire moves for `n_vectors` d-vectors,
+    derived with jax.eval_shape from the op that actually runs (the packed
+    buffer from `pack_values`, the dense buffer at its storage dtype)."""
+    wire, _ = resolve_wire(wire, link_bits)
+    if wire == "dense":
+        return _nbytes(jax.ShapeDtypeStruct((n_vectors, d),
+                                            jnp.dtype(dtype)))
+    # codeword lanes are dtype-independent, so size them at fp32 — the
+    # training path packs from the kernel's fp32 internals anyway (a bf16
+    # STORED latent only restricts the standalone pack_values re-encode)
+    packed = jax.eval_shape(
+        lambda x: _bn.pack_values(x, link_bits=link_bits, impl="reference"),
+        jax.ShapeDtypeStruct((n_vectors, d), jnp.float32))
+    return _nbytes(packed)
+
+
+def round_wire_bytes(n_vectors: int, d: int, *, link_bits: int,
+                     wire: str = "dense", dtype=jnp.float32) -> dict:
+    """Measured bytes of one training round's cut-layer exchange:
+    activations forward + error vectors backward (§III-C's two directions),
+    each at the size its buffer occupies on the MODELED link under `wire`.
+
+    dense: both directions at the storage dtype.  packed: forward codeword
+    lanes, backward dense (the error vectors stay full precision).
+    packed_duplex: both directions as codeword lanes — the backward size is
+    what the q-bit error chunks occupy; see the module docstring for where
+    the shard_map execution's dense psum_scatter (a simulation artifact of
+    the replicated decoder) diverges from the modeled link."""
+    wire, bwd_bits = resolve_wire(wire, link_bits)
+    fwd = shipped_nbytes(n_vectors, d, link_bits=link_bits, wire=wire,
+                         dtype=dtype)
+    if bwd_bits is not None:
+        bwd = shipped_nbytes(n_vectors, d, link_bits=bwd_bits, wire="packed",
+                             dtype=dtype)
+    else:
+        bwd = shipped_nbytes(n_vectors, d, link_bits=link_bits, wire="dense",
+                             dtype=dtype)
+    return {"fwd": fwd, "bwd": bwd, "total": fwd + bwd}

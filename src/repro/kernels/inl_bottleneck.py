@@ -98,6 +98,74 @@ def _cut_fwd_kernel(mu_ref, lv_ref, eps_ref, u_ref, rate_ref, *,
     rate_ref[...] = rate.astype(rate_ref.dtype)
 
 
+def _pack_lanes(idx, W: int, bits: int):
+    """(rows, d) uint32 codewords -> (rows, W) uint32 lanes, in-kernel.
+
+    Same little-endian lane layout as ref.pack_indices; the iota is
+    broadcasted (TPU disallows 1-D iota inside kernels)."""
+    vpw = 32 // bits
+    rows, d = idx.shape
+    pad = W * vpw - d
+    if pad:
+        idx = jnp.pad(idx, ((0, 0), (0, pad)))
+    grouped = idx.reshape(rows, W, vpw)
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, vpw), 2) \
+        * jnp.uint32(bits)
+    return jnp.sum(grouped << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def _cut_fwd_pack_kernel(mu_ref, lv_ref, eps_ref, u_ref, pk_ref, rate_ref, *,
+                         bits: int, mode: str):
+    """Pack-emitting fused forward: the codeword index is the shared
+    intermediate, so u, the packed lanes and the rate all come out of ONE
+    read of (mu, logvar, eps) — the wire buffer costs no extra pass."""
+    mu = mu_ref[...].astype(jnp.float32)
+    lv = lv_ref[...].astype(jnp.float32)
+    eps = eps_ref[...].astype(jnp.float32)
+    sigma = jnp.exp(0.5 * lv)
+    pre = mu + sigma * eps
+    r = ref.QUANT_RANGE
+    scale = ((1 << bits) - 1) / (2.0 * r)
+    idx = jnp.round((jnp.clip(pre, -r, r) + r) * scale).astype(jnp.uint32)
+    u = idx.astype(jnp.float32) / scale - r
+    u_ref[...] = u.astype(u_ref.dtype)
+    pk_ref[...] = _pack_lanes(idx, pk_ref.shape[-1], bits)
+    if mode == "sample":
+        rate = 0.5 * jnp.sum(u * u - (u - mu) ** 2 * jnp.exp(-lv) - lv,
+                             axis=-1)
+    elif mode == "analytic":
+        rate = 0.5 * jnp.sum(jnp.exp(lv) + mu * mu - 1.0 - lv, axis=-1)
+    else:
+        rate = jnp.zeros(u.shape[:-1], jnp.float32)
+    rate_ref[...] = rate.astype(rate_ref.dtype)
+
+
+def _pack_kernel(u_ref, pk_ref, *, bits: int):
+    """Standalone pack: quantized values -> codeword lanes (used for paths
+    whose forward kernel does not emit packed output, e.g. learned priors)."""
+    u = u_ref[...].astype(jnp.float32)
+    r = ref.QUANT_RANGE
+    scale = ((1 << bits) - 1) / (2.0 * r)
+    idx = jnp.round((jnp.clip(u, -r, r) + r) * scale).astype(jnp.uint32)
+    pk_ref[...] = _pack_lanes(idx, pk_ref.shape[-1], bits)
+
+
+def _unpack_dequant_kernel(pk_ref, u_ref, *, bits: int):
+    """Fusion-center side: packed lanes -> dense quantized values."""
+    packed = pk_ref[...]
+    rows, W = packed.shape
+    d = u_ref.shape[-1]
+    vpw = 32 // bits
+    mask = jnp.uint32((1 << bits) - 1)
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, vpw), 2) \
+        * jnp.uint32(bits)
+    ext = (packed[..., None] >> shifts) & mask
+    idx = ext.reshape(rows, W * vpw)[:, :d]
+    r = ref.QUANT_RANGE
+    scale = ((1 << bits) - 1) / (2.0 * r)
+    u_ref[...] = (idx.astype(jnp.float32) / scale - r).astype(u_ref.dtype)
+
+
 def _cut_bwd_kernel(mu_ref, lv_ref, eps_ref, gu_ref, gr_ref,
                     dmu_ref, dlv_ref, deps_ref, *, bits: int, mode: str):
     mu = mu_ref[...].astype(jnp.float32)
@@ -157,6 +225,51 @@ def _bwd_pallas(mu, logvar, eps, gu, grate, bits, mode, block_t,
                    jax.ShapeDtypeStruct((R, d), eps.dtype)],
         interpret=interpret,
     )(mu, logvar, eps, gu, grate)
+
+
+def _fwd_pack_pallas(mu, logvar, eps, bits, mode, block_t, interpret):
+    R, d = mu.shape
+    W = ref.packed_width(d, bits)
+    grid = (R // block_t,)
+    spec = pl.BlockSpec((block_t, d), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_cut_fwd_pack_kernel, bits=bits, mode=mode),
+        grid=grid,
+        in_specs=[spec, spec, spec],
+        out_specs=[spec, pl.BlockSpec((block_t, W), lambda i: (i, 0)),
+                   pl.BlockSpec((block_t,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((R, d), mu.dtype),
+                   jax.ShapeDtypeStruct((R, W), jnp.uint32),
+                   jax.ShapeDtypeStruct((R,), jnp.float32)],
+        interpret=interpret,
+    )(mu, logvar, eps)
+
+
+def _pack_pallas(u, bits, block_t, interpret):
+    R, d = u.shape
+    W = ref.packed_width(d, bits)
+    grid = (R // block_t,)
+    return pl.pallas_call(
+        functools.partial(_pack_kernel, bits=bits),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_t, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_t, W), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, W), jnp.uint32),
+        interpret=interpret,
+    )(u)
+
+
+def _unpack_pallas(packed, d, bits, dtype, block_t, interpret):
+    R, W = packed.shape
+    grid = (R // block_t,)
+    return pl.pallas_call(
+        functools.partial(_unpack_dequant_kernel, bits=bits),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_t, W), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_t, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, d), dtype),
+        interpret=interpret,
+    )(packed)
 
 
 # ---------------------------------------------------------------------------
@@ -427,6 +540,164 @@ def cutlayer_fused(mu, logvar, eps, *, link_bits: int = 32,
     return _cutlayer_prior_call(mu, logvar, eps, prior_mu, prior_logvar,
                                 link_bits, rate_estimator, impl, block_t,
                                 interpret)
+
+
+# ---------------------------------------------------------------------------
+# Packed wire format: non-VJP building blocks (core/wirefmt.py owns the
+# straight-through custom_vjp that spans pack -> collective -> unpack)
+# ---------------------------------------------------------------------------
+
+def _rows(x):
+    R = 1
+    for s in x.shape[:-1]:
+        R *= s
+    return R
+
+
+@functools.partial(jax.jit, static_argnames=("link_bits", "rate_estimator",
+                                             "impl", "block_t", "interpret"))
+def _pack_fwd_call(mu, logvar, eps, link_bits, rate_estimator, impl, block_t,
+                   interpret):
+    shape = mu.shape
+    d = shape[-1]
+    R = _rows(mu)
+    W = ref.packed_width(d, link_bits)
+    mu2, lv2, eps2 = (x.reshape(R, d) for x in (mu, logvar, eps))
+    bt = min(block_t or DEFAULT_BLOCK_T, R)
+    pad = (-R) % bt
+    if pad:
+        mu2, lv2, eps2 = (jnp.pad(x, ((0, pad), (0, 0)))
+                          for x in (mu2, lv2, eps2))
+    if impl == "pallas":
+        u, packed, rate = _fwd_pack_pallas(mu2, lv2, eps2, link_bits,
+                                           rate_estimator, bt, interpret)
+    else:
+        u, packed, rate = ref.cutlayer_pack_fwd_ref(mu2, lv2, eps2,
+                                                    link_bits, rate_estimator)
+    if pad:
+        u, packed, rate = u[:R], packed[:R], rate[:R]
+    return (u.reshape(shape), packed.reshape(shape[:-1] + (W,)),
+            rate.reshape(shape[:-1]))
+
+
+def cutlayer_pack_forward(mu, logvar, eps, *, link_bits: int,
+                          rate_estimator: str = "sample",
+                          impl: str = "pallas", block_t: int = None,
+                          interpret: bool = None):
+    """Pack-emitting fused forward: (u (..., d), packed (..., W) uint32,
+    rate (...,) fp32) in one kernel pass.  NO gradient rule — callers wrap
+    it in their own custom_vjp (core/wirefmt.py) whose backward is
+    `cutlayer_backward`.  Bit-identical to `cutlayer_fused` on (u, rate)."""
+    if rate_estimator not in MODES:
+        raise ValueError(f"unknown rate_estimator {rate_estimator!r}")
+    return _pack_fwd_call(mu, logvar, eps, link_bits, rate_estimator, impl,
+                          block_t, _resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("link_bits", "rate_estimator",
+                                             "impl", "block_t", "interpret"))
+def _bwd_call(mu, logvar, eps, gu, grate, link_bits, rate_estimator, impl,
+              block_t, interpret):
+    shape = mu.shape
+    d = shape[-1]
+    R = _rows(mu)
+    mu2, lv2, eps2, gu2 = (x.reshape(R, d) for x in (mu, logvar, eps, gu))
+    gr2 = grate.reshape(R)
+    bt = min(block_t or DEFAULT_BLOCK_T, R)
+    pad = (-R) % bt
+    if pad:
+        mu2, lv2, eps2, gu2 = (jnp.pad(x, ((0, pad), (0, 0)))
+                               for x in (mu2, lv2, eps2, gu2))
+        gr2 = jnp.pad(gr2, (0, pad))
+    if impl == "pallas":
+        dmu, dlv, deps = _bwd_pallas(mu2, lv2, eps2, gu2, gr2, link_bits,
+                                     rate_estimator, bt, interpret)
+    else:
+        dmu, dlv, deps = ref.cutlayer_bwd_ref(mu2, lv2, eps2, gu2, gr2,
+                                              link_bits, rate_estimator)
+    if pad:
+        dmu, dlv, deps = dmu[:R], dlv[:R], deps[:R]
+    return tuple(x.reshape(shape) for x in (dmu, dlv, deps))
+
+
+def cutlayer_backward(mu, logvar, eps, gu, grate, *, link_bits: int,
+                      rate_estimator: str = "sample", impl: str = "pallas",
+                      block_t: int = None, interpret: bool = None):
+    """The fused eq.-(10) backward as a plain dispatch (same kernels the
+    `cutlayer_fused` custom VJP runs), for wrappers that own their VJP."""
+    return _bwd_call(mu, logvar, eps, gu, grate, link_bits, rate_estimator,
+                     impl, block_t, _resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("link_bits", "impl", "block_t",
+                                             "interpret"))
+def _pack_call(u, link_bits, impl, block_t, interpret):
+    shape = u.shape
+    d = shape[-1]
+    R = _rows(u)
+    W = ref.packed_width(d, link_bits)
+    u2 = u.reshape(R, d)
+    bt = min(block_t or DEFAULT_BLOCK_T, R)
+    pad = (-R) % bt
+    if pad:
+        u2 = jnp.pad(u2, ((0, pad), (0, 0)))
+    if impl == "pallas":
+        packed = _pack_pallas(u2, link_bits, bt, interpret)
+    else:
+        packed = ref.pack_values_ref(u2, link_bits)
+    if pad:
+        packed = packed[:R]
+    return packed.reshape(shape[:-1] + (W,))
+
+
+def pack_values(u, *, link_bits: int, impl: str = "pallas",
+                block_t: int = None, interpret: bool = None):
+    """Quantized values -> packed codeword lanes ((..., d) -> (..., W)
+    uint32).  Lossless on values already on the link_bits quantizer grid.
+
+    bf16 storage can only address grids up to 8 bits exactly (coarser than
+    the bf16 mantissa); wider codes would decode to different values, so
+    they are rejected rather than silently corrupted."""
+    if jnp.dtype(u.dtype).itemsize < 4 and link_bits > 8:
+        raise ValueError(f"cannot re-encode {u.dtype} values at "
+                         f"{link_bits}-bit codes (> 8 bits exceeds the "
+                         "half-precision mantissa); pack from the kernel's "
+                         "fp32 internals via cutlayer_pack_forward instead")
+    return _pack_call(u, link_bits, impl, block_t,
+                      _resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("d", "link_bits", "dtype",
+                                             "impl", "block_t", "interpret"))
+def _unpack_call(packed, d, link_bits, dtype, impl, block_t, interpret):
+    shape = packed.shape
+    W = shape[-1]
+    R = _rows(packed)
+    pk2 = packed.reshape(R, W)
+    bt = min(block_t or DEFAULT_BLOCK_T, R)
+    pad = (-R) % bt
+    if pad:
+        pk2 = jnp.pad(pk2, ((0, pad), (0, 0)))
+    if impl == "pallas":
+        u = _unpack_pallas(pk2, d, link_bits, dtype, bt, interpret)
+    else:
+        u = ref.unpack_dequant_ref(pk2, d, link_bits, dtype=dtype)
+    if pad:
+        u = u[:R]
+    return u.reshape(shape[:-1] + (d,))
+
+
+def unpack_dequant(packed, d: int, *, link_bits: int, dtype=jnp.float32,
+                   impl: str = "pallas", block_t: int = None,
+                   interpret: bool = None):
+    """Fusion-center unpack: (..., W) uint32 lanes -> (..., d) quantized
+    values, one fused extract+dequantize pass."""
+    if packed.shape[-1] != ref.packed_width(d, link_bits):
+        raise ValueError(f"packed width {packed.shape[-1]} does not match "
+                         f"d={d} at {link_bits} bits "
+                         f"(want {ref.packed_width(d, link_bits)})")
+    return _unpack_call(packed, d, link_bits, jnp.dtype(dtype), impl,
+                        block_t, _resolve_interpret(interpret))
 
 
 def bottleneck_fused(mu, logvar, eps, *, block_t: int = DEFAULT_BLOCK_T,

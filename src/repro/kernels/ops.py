@@ -76,12 +76,25 @@ def cutlayer(mu, logvar, eps, *, link_bits: int = 32,
     all J nodes.  rate_estimator "none" zeroes the rate (split learning's
     deterministic cut); prior_mu/prior_logvar — (d,) shared or (J, d)
     per-node — evaluate the rate against a learned Gaussian prior, still
-    in one fused pass per direction (prior grads included)."""
-    return _bn.cutlayer_fused(mu, logvar, eps, link_bits=link_bits,
-                              rate_estimator=rate_estimator,
-                              prior_mu=prior_mu, prior_logvar=prior_logvar,
-                              impl=resolve_backend(backend),
-                              block_t=block_t, interpret=None)
+    in one fused pass per direction (prior grads included).
+
+    Dtype contract (the mixed-precision policy depends on it): u comes back
+    in mu.dtype — a bf16 latent stays bf16 end to end, with only the
+    kernels' INTERNAL arithmetic and the rate accumulation in fp32.  The
+    dispatch enforces it here so a kernel regression cannot silently widen
+    the hot path back to fp32."""
+    u, rate = _bn.cutlayer_fused(mu, logvar, eps, link_bits=link_bits,
+                                 rate_estimator=rate_estimator,
+                                 prior_mu=prior_mu, prior_logvar=prior_logvar,
+                                 impl=resolve_backend(backend),
+                                 block_t=block_t, interpret=None)
+    if u.dtype != mu.dtype:
+        raise TypeError(f"cutlayer kernel changed the latent dtype: "
+                        f"{mu.dtype} in, {u.dtype} out")
+    if rate.dtype != jax.numpy.float32:
+        raise TypeError(f"cutlayer rate must accumulate in fp32, got "
+                        f"{rate.dtype}")
+    return u, rate
 
 
 def ssd_scan(x, dt, a, bm, cm, dskip, *, backend: str = "auto", **block_kw):

@@ -27,6 +27,17 @@ non-stochastic cut (eps == 0 -> u == quantize(mu)).
 
 The link quantizer's value map (`quantize_value`, `QUANT_RANGE`) lives here
 as the single source of truth shared by `core/linkmodel.py` and the kernels.
+
+The PACKED WIRE FORMAT also lives here as jnp oracles: a quantized latent is
+an integer codeword index in [0, 2^bits), and `pack_indices` /
+`unpack_indices` move those `bits`-bit codewords in and out of uint32 lanes
+(little-endian within each lane, `32 // bits` codewords per word, zero-padded
+tail for odd d).  `dequantize_index(quantize_index(u))` equals
+`quantize_value(u)` bit-for-bit — the packed wire is a pure re-encoding of
+the dense quantized latent, so routing a collective over the packed buffer
+cannot change a trajectory.  `cutlayer_pack_fwd_ref` is the oracle of the
+pack-emitting fused forward kernel (u + packed codewords + rate in one
+expression); `unpack_dequant_ref` is the fusion-center side.
 """
 from __future__ import annotations
 
@@ -47,6 +58,106 @@ def quantize_value(u, bits: int, *, u_range: float = QUANT_RANGE):
     scale = levels / (2.0 * u_range)
     clipped = jnp.clip(u, -u_range, u_range)
     return jnp.round((clipped + u_range) * scale) / scale - u_range
+
+
+# ---------------------------------------------------------------------------
+# Packed wire format: bits-bit codeword indices in uint32 lanes
+# ---------------------------------------------------------------------------
+
+def vals_per_word(bits: int) -> int:
+    """Codewords per uint32 lane (e.g. 16 at 2 bits, 4 at 8 bits; 10 at the
+    odd 3-bit width — 2 lane bits are then padding)."""
+    if not 1 <= bits <= 16:
+        raise ValueError(f"packable link_bits must be in [1, 16], got {bits}")
+    return 32 // bits
+
+
+def packed_width(d: int, bits: int) -> int:
+    """uint32 lanes per d-vector: ceil(d / vals_per_word)."""
+    return -(-d // vals_per_word(bits))
+
+
+def quantize_index(u, bits: int, *, u_range: float = QUANT_RANGE):
+    """Codeword index of the uniform link quantizer: uint32 in [0, 2^bits).
+
+    `dequantize_index(quantize_index(u, bits), bits)` reproduces
+    `quantize_value(u, bits)` bit-for-bit (same fp32 expression order)."""
+    levels = (1 << bits) - 1
+    scale = levels / (2.0 * u_range)
+    clipped = jnp.clip(u.astype(jnp.float32), -u_range, u_range)
+    return jnp.round((clipped + u_range) * scale).astype(jnp.uint32)
+
+
+def dequantize_index(idx, bits: int, *, dtype=jnp.float32,
+                     u_range: float = QUANT_RANGE):
+    """Value of a codeword index — the fusion-center side of the link."""
+    levels = (1 << bits) - 1
+    scale = levels / (2.0 * u_range)
+    return (idx.astype(jnp.float32) / scale - u_range).astype(dtype)
+
+
+def pack_indices(idx, bits: int):
+    """(..., d) uint32 codewords -> (..., W) uint32 lanes.
+
+    Little-endian within the lane (codeword k at bit offset k*bits); a tail
+    that does not fill the last lane is zero-padded."""
+    vpw = vals_per_word(bits)
+    d = idx.shape[-1]
+    W = packed_width(d, bits)
+    pad = W * vpw - d
+    if pad:
+        idx = jnp.pad(idx, [(0, 0)] * (idx.ndim - 1) + [(0, pad)])
+    grouped = idx.astype(jnp.uint32).reshape(idx.shape[:-1] + (W, vpw))
+    shifts = (jnp.arange(vpw, dtype=jnp.uint32) * jnp.uint32(bits))
+    return jnp.sum(grouped << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_indices(packed, d: int, bits: int):
+    """Inverse of pack_indices: (..., W) uint32 lanes -> (..., d) codewords."""
+    vpw = vals_per_word(bits)
+    mask = jnp.uint32((1 << bits) - 1)
+    shifts = (jnp.arange(vpw, dtype=jnp.uint32) * jnp.uint32(bits))
+    ext = (packed[..., None] >> shifts) & mask        # (..., W, vpw)
+    return ext.reshape(packed.shape[:-1] + (-1,))[..., :d]
+
+
+def pack_values_ref(u, bits: int):
+    """Quantized values -> packed codeword lanes (one fused expression).
+
+    For u already on the `bits`-bit quantizer grid (any cut-layer output
+    with link_bits == bits) this is a lossless re-encoding."""
+    return pack_indices(quantize_index(u, bits), bits)
+
+
+def unpack_dequant_ref(packed, d: int, bits: int, *, dtype=jnp.float32):
+    """Packed codeword lanes -> dense quantized values (fusion-center side)."""
+    return dequantize_index(unpack_indices(packed, d, bits), bits,
+                            dtype=dtype)
+
+
+def cutlayer_pack_fwd_ref(mu, logvar, eps, bits: int, mode: str):
+    """Pack-emitting fused forward: one expression yielding the dense
+    quantized latent u, its bit-packed codewords, AND the per-row rate.
+
+    Bit-identical to `cutlayer_fwd_ref` on (u, rate): the codeword index is
+    the shared intermediate (u == dequantize_index(idx)), so the packed
+    lanes are a free extra output of the same pass, not a second quantizer.
+    Requires bits <= 16 (a packable width)."""
+    muf = mu.astype(jnp.float32)
+    lv = logvar.astype(jnp.float32)
+    sigma = jnp.exp(0.5 * lv)
+    pre = muf + sigma * eps.astype(jnp.float32)
+    idx = quantize_index(pre, bits)
+    u = dequantize_index(idx, bits)
+    packed = pack_indices(idx, bits)
+    if mode == "sample":
+        rate = 0.5 * jnp.sum(u * u - (u - muf) ** 2 * jnp.exp(-lv) - lv,
+                             axis=-1)
+    elif mode == "analytic":
+        rate = 0.5 * jnp.sum(jnp.exp(lv) + muf * muf - 1.0 - lv, axis=-1)
+    else:
+        rate = jnp.zeros(u.shape[:-1], jnp.float32)
+    return u.astype(mu.dtype), packed, rate
 
 
 def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,

@@ -144,6 +144,29 @@ def batch_shardings(batch_specs, mesh):
             for k, v in batch_specs.items()}
 
 
+def wire_specs(mesh):
+    """PartitionSpecs pinning the INL cut-layer wire tensors in GSPMD (jit)
+    paths — (J, B, S, d_b) latents or their (J, B, S, W) packed codeword
+    lanes; the same specs serve both since the last axis is unsharded:
+
+        client_spec    'client' on the leading J axis — the tensor BEFORE
+                       the link (each node holds its own chunk);
+        gathered_spec  client axis replicated — constraining the quantized/
+                       packed tensor to this spec IS the link gather, and
+                       pinning it there keeps GSPMD from gathering the wide
+                       float tensor instead (linkmodel.wire_concat /
+                       packed_wire_concat).
+
+    Returns (gathered_spec, client_spec), both None when the mesh has no
+    'client' axis (single-host runs)."""
+    if mesh is None or "client" not in mesh.axis_names:
+        return None, None
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    gathered = P(None, dp or None, None, None)
+    client = P("client", dp or None, None, None)
+    return gathered, client
+
+
 def scheme_batch_shardings(mesh, num_clients: int, batch_size: int):
     """Shardings for the whole-epoch scan xs of a scheme round
     (core/schemes/runner.py): views (K, R, J, B, ...), labels (K, R, B),

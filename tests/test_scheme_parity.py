@@ -76,6 +76,86 @@ def test_bits_per_round_match_table1_closed_forms():
         bandwidth.sl_epoch_bits(p, BATCH, N, J, eta, CFG.link_bits)
 
 
+def test_measured_wire_bytes_match_closed_forms():
+    """The MEASURED ledger (actual wire-buffer nbytes, Scheme.
+    wire_bytes_per_round via core/wirefmt.py) == the §III-C closed forms
+    whenever the wire carries exactly what the formulas charge:
+
+      * dense fp32 links at link_bits=32 (every scheme);
+      * packed_duplex links at link_bits=q (INL/SL cut traffic: both
+        directions as q-bit codewords — the paper's symmetric 2 b p s);
+      * weight transfers always fp32 (FL rounds, SL hand-offs at s=32).
+    """
+    import dataclasses
+    J = CFG.num_clients
+    p = CFG.num_clients * CFG.d_bottleneck
+    N = paper_model.fl_param_count(CFG)
+
+    # dense @ 32-bit links: measured == accounted for all three schemes
+    s_inl = schemes.get("inl")
+    st = trajectory("inl")["state"]
+    assert s_inl.wire_bytes_per_round(CFG, st, BATCH) * 8 == \
+        s_inl.bits_per_round(CFG, st, BATCH)
+    s_fl = schemes.get("fl")
+    st_fl = trajectory("fl")["state"]
+    assert s_fl.wire_bytes_per_round(CFG, st_fl, BATCH) * 8 == \
+        bandwidth.fl_round_bits(N, J, 32)
+    s_sl = schemes.get("sl")
+    st_sl = trajectory("sl")["state"]
+    assert s_sl.wire_bytes_per_round(CFG, st_sl, BATCH) * 8 == \
+        bandwidth.sl_epoch_bits(p, BATCH, N, J, 0.0, 32)
+    eta = s_sl.param_count(st_sl["client"]) / N
+    assert s_sl.epoch_overhead_wire_bytes(CFG, st_sl) * 8 == \
+        bandwidth.sl_epoch_bits(p, 0, N, J, eta, 32)
+
+    # packed_duplex @ q-bit links: measured == the symmetric Table-I charge
+    # whenever the codewords fill the uint32 lanes exactly; a d_bottleneck
+    # too narrow for the lane (d*q < 32, e.g. 8 values at 2 bits) pays real
+    # lane padding, and the measured ledger must report THAT, not the ideal
+    from repro.kernels import ref as kref
+    for bits in (2, 4, 8):
+        cfg_q = dataclasses.replace(CFG, link_bits=bits)
+        measured = s_inl.wire_bytes_per_round(cfg_q, st, BATCH,
+                                              wire="packed_duplex") * 8
+        lanes = kref.packed_width(CFG.d_bottleneck, bits)
+        assert measured == 2 * BATCH * J * lanes * 32          # real lanes
+        if (CFG.d_bottleneck * bits) % 32 == 0:                # lanes full
+            assert measured == bandwidth.inl_epoch_bits(p, BATCH * J, J,
+                                                        bits)
+            assert s_sl.wire_bytes_per_round(
+                cfg_q, st_sl, BATCH, wire="packed_duplex") * 8 == \
+                bandwidth.sl_epoch_bits(p, BATCH, N, J, 0.0, bits)
+    # forward-only packing: the client->server half shrinks by 32/q, the
+    # dense backward half stays — the measured ledger reports the truth
+    cfg8 = dataclasses.replace(CFG, link_bits=8)
+    packed = s_inl.wire_bytes_per_round(cfg8, st, BATCH, wire="packed")
+    dense = s_inl.wire_bytes_per_round(cfg8, st, BATCH, wire="dense")
+    assert packed == dense / 2 * (1 + 8 / 32)
+
+
+def test_runner_meters_measured_bytes():
+    """schemes/runner.run_scheme accrues the measured ledger per round:
+    with dense 32-bit links the curve's measured_gbits == its accounted
+    gbits exactly (the satellite's 'today accounting is purely analytical'
+    gap, closed)."""
+    from repro.core.schemes import runner
+    views, labels = fixture_data()
+    views, labels = np.asarray(views[:, :64]), np.asarray(labels[:64])
+    curve = runner.run_scheme("inl", views, labels, CFG, epochs=2,
+                              batch_size=16, eval_n=32)
+    assert curve[-1].measured_gbits > 0
+    assert curve[-1].measured_gbits == curve[-1].gbits
+    # a packed_duplex run at 8-bit links matches its (much smaller)
+    # accounted charge exactly too
+    import dataclasses
+    cfg8 = dataclasses.replace(CFG, link_bits=8)
+    curve8 = runner.run_scheme("inl", views, labels, cfg8, epochs=2,
+                               batch_size=16, eval_n=32,
+                               wire="packed_duplex")
+    assert curve8[-1].measured_gbits == curve8[-1].gbits
+    assert curve8[-1].gbits == curve[-1].gbits / 4     # 8 vs 32-bit links
+
+
 def test_inl_metered_bits_equal_scheme_accounting():
     """The bits the INL train step itself reports == the registry's
     closed-form accounting (measured and published cannot drift)."""

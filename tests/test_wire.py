@@ -54,6 +54,44 @@ def test_wire_concat_quantizes_backward_link():
     assert len(vals) <= 255 * 2
 
 
+@pytest.mark.parametrize("bits", [2, 4])
+def test_packed_wire_concat_matches_float_within_grid(bits):
+    """The sub-byte packed wire: quantization error bounded by half a step
+    of the bits-level grid inside the clip range, layout identical to the
+    float concat (the int8 wire's contract at sub-byte widths)."""
+    u = jax.random.normal(jax.random.PRNGKey(4), (3, 2, 5, 8)) * 1.5
+    catp = linkmodel.packed_wire_concat(u, bits)
+    catf = linkmodel.float_concat(u)
+    assert catp.shape == catf.shape
+    step = 2 * 4.0 / ((1 << bits) - 1)
+    err = jnp.abs(catp - catf)
+    in_range = jnp.abs(catf) <= 4.0 - step
+    assert float(jnp.max(jnp.where(in_range, err, 0.0))) <= step / 2 + 1e-6
+    # and it really is the shared quantizer grid (kernels/ref semantics;
+    # atol covers the 1-ulp jit-vs-eager constant-folding drift of x/scale)
+    from repro.kernels import ref
+    want = linkmodel.float_concat(ref.quantize_value(u, bits))
+    np.testing.assert_allclose(np.asarray(catp), np.asarray(want),
+                               atol=1e-6)
+
+
+def test_packed_wire_concat_backward_is_quantized_error_split():
+    """VJP routes chunk j of the cotangent to node j, quantized on a
+    dynamic (2^bits - 1)-level grid — the packed backward link."""
+    J, B, S, db, bits = 3, 2, 4, 8, 4
+    u = jax.random.normal(jax.random.PRNGKey(5), (J, B, S, db))
+    w = jax.random.normal(jax.random.PRNGKey(6), (J * db,))
+
+    du = jax.grad(lambda u_: (linkmodel.packed_wire_concat(u_, bits)
+                              * w).sum())(u)
+    du_ref = jax.grad(lambda u_: (linkmodel.float_concat(u_) * w).sum())(u)
+    gmax = float(jnp.max(jnp.abs(du_ref)))
+    step = 2 * gmax / ((1 << bits) - 1)
+    assert float(jnp.max(jnp.abs(du - du_ref))) <= step / 2 + 1e-6
+    vals = np.unique(np.round(np.asarray(du), 10))
+    assert len(vals) <= (1 << bits)                 # on the coarse grid
+
+
 def test_chunked_remat_scan_matches_plain():
     from repro.models.ssm import _scan_chunked_remat
 

@@ -1,0 +1,385 @@
+"""The packed wire format (core/wirefmt.py + the pack/unpack kernels) and
+the mixed-precision compute policy.
+
+Contracts pinned here:
+
+  * pack -> unpack is the IDENTITY against ref.quantize_value for every
+    packable width (bits in {1,2,3,4,8,16}), including odd-d tail padding —
+    property-tested via tests/_hyp.py;
+  * the wire wrappers (`ship`, `cut_and_ship`) leave values AND gradients
+    bit-identical to the dense path for wire="packed" (packing is a
+    re-encoding, not a second quantizer), while "packed_duplex" compresses
+    only the backward link;
+  * scheme trajectories: packed == dense exactly, duplex within a loose
+    bound (its backward link is genuinely lossy);
+  * measured bytes come from the real buffers (the eval_shape-derived
+    accounting equals the `.nbytes` of what the ops produce);
+  * cfg.compute_dtype="bf16": the hot path runs bf16 (latents bf16), while
+    grads, optimizer/master params, BatchNorm stats and the rate stay fp32.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp import given, settings, st  # hypothesis, or deterministic fallback
+
+from repro.configs.paper_inl import PaperExperimentConfig
+from repro.core import schemes, wirefmt
+from repro.kernels import inl_bottleneck as bn
+from repro.kernels import ref
+
+# Tiny-but-real fixture (J=2 so the wire crosses a genuine client axis)
+CFG = PaperExperimentConfig(conv_channels=(4,), d_bottleneck=8,
+                            dense_units=(32,), image_shape=(16, 16, 3),
+                            num_clients=2, noise_stds=(0.4, 2.0),
+                            dataset_size=64, link_bits=8)
+BATCH = 16
+ROUNDS = 4
+
+
+# ---------------------------------------------------------------------------
+# pack/unpack identity (satellite: property tests incl. odd-d tails)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), d=st.sampled_from([1, 7, 8, 13, 64]),
+       bits=st.sampled_from([1, 2, 3, 4, 8]))
+def test_pack_unpack_identity_property(seed, d, bits):
+    """unpack(pack(quantize(x))) == quantize(x) bit-for-bit, any width/d."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (33, d)) * 3.0
+    u = ref.quantize_value(x, bits)
+    packed = ref.pack_values_ref(u, bits)
+    assert packed.dtype == jnp.uint32
+    assert packed.shape == (33, ref.packed_width(d, bits))
+    np.testing.assert_array_equal(
+        np.asarray(ref.unpack_dequant_ref(packed, d, bits)), np.asarray(u))
+
+
+def test_packed_width_counts_lane_capacity():
+    assert ref.vals_per_word(2) == 16 and ref.vals_per_word(8) == 4
+    assert ref.vals_per_word(3) == 10                  # 2 padding bits/lane
+    assert ref.packed_width(64, 2) == 4                # 16 bytes == 64*2/8
+    assert ref.packed_width(13, 4) == 2                # tail padded
+    with pytest.raises(ValueError):
+        ref.vals_per_word(32)
+
+
+def test_dequantize_index_matches_quantize_value():
+    x = jax.random.normal(jax.random.PRNGKey(0), (50, 9)) * 5.0   # clips too
+    for bits in (1, 3, 8, 16):
+        np.testing.assert_array_equal(
+            np.asarray(ref.dequantize_index(ref.quantize_index(x, bits),
+                                            bits)),
+            np.asarray(ref.quantize_value(x, bits)))
+
+
+@pytest.mark.kernel_interpret
+@pytest.mark.parametrize("bits", [2, 3, 8])
+def test_pallas_pack_kernels_match_ref(bits):
+    """Interpret-mode Pallas pack / unpack / pack-emitting-forward kernels
+    == the jnp oracles bitwise (odd rows exercise the padding)."""
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    mu = jax.random.normal(ks[0], (97, 16))
+    lv = jax.random.normal(ks[1], (97, 16)) * 0.3
+    eps = jax.random.normal(ks[2], (97, 16))
+    u_r, pk_r, rate_r = bn.cutlayer_pack_forward(
+        mu, lv, eps, link_bits=bits, rate_estimator="sample",
+        impl="reference")
+    u_p, pk_p, rate_p = bn.cutlayer_pack_forward(
+        mu, lv, eps, link_bits=bits, rate_estimator="sample", impl="pallas",
+        block_t=64)
+    np.testing.assert_array_equal(np.asarray(u_r), np.asarray(u_p))
+    np.testing.assert_array_equal(np.asarray(pk_r), np.asarray(pk_p))
+    np.testing.assert_allclose(np.asarray(rate_r), np.asarray(rate_p),
+                               rtol=1e-6)
+    np.testing.assert_array_equal(
+        np.asarray(bn.pack_values(u_r, link_bits=bits, impl="pallas",
+                                  block_t=64)),
+        np.asarray(pk_r))
+    np.testing.assert_array_equal(
+        np.asarray(bn.unpack_dequant(pk_p, 16, link_bits=bits,
+                                     impl="pallas", block_t=64)),
+        np.asarray(u_r))
+
+
+def test_pack_emitting_forward_matches_dense_kernel():
+    """(u, rate) of the pack-emitting forward == the plain fused kernel
+    bitwise — the packed lanes are a free extra output, not a new path."""
+    from repro.kernels import ops
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    mu = jax.random.normal(ks[0], (130, 24))
+    lv = jax.random.normal(ks[1], (130, 24)) * 0.4
+    eps = jax.random.normal(ks[2], (130, 24))
+    for mode in ("sample", "analytic", "none"):
+        u1, pk, r1 = bn.cutlayer_pack_forward(mu, lv, eps, link_bits=4,
+                                              rate_estimator=mode,
+                                              impl="reference")
+        u2, r2 = ops.cutlayer(mu, lv, eps, link_bits=4, rate_estimator=mode,
+                              backend="reference")
+        np.testing.assert_array_equal(np.asarray(u1), np.asarray(u2))
+        np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
+        np.testing.assert_array_equal(
+            np.asarray(bn.unpack_dequant(pk, 24, link_bits=4,
+                                         impl="reference")),
+            np.asarray(u1))
+
+
+# ---------------------------------------------------------------------------
+# wire wrappers: values and gradients
+# ---------------------------------------------------------------------------
+
+def _wire_loss(wire, cu, cr, cs):
+    def f(mu, lv):
+        u, rate, us = wirefmt.cut_and_ship(
+            jax.random.PRNGKey(7), mu, lv, link_bits=4, wire=wire,
+            backend="reference")
+        return ((u * cu).sum() + (rate * cr).sum()
+                + (us * cs).sum())
+    return f
+
+
+def test_packed_wire_is_bit_identical_to_dense():
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    mu = jax.random.normal(ks[0], (2, 40, 16))
+    lv = jax.random.normal(ks[1], (2, 40, 16)) * 0.3
+    cu, cs = (jax.random.normal(k, (2, 40, 16)) for k in ks[2:4])
+    cr = jax.random.normal(ks[4], (2, 40))
+    vd, gd = jax.value_and_grad(_wire_loss("dense", cu, cr, cs),
+                                argnums=(0, 1))(mu, lv)
+    vp, gp = jax.value_and_grad(_wire_loss("packed", cu, cr, cs),
+                                argnums=(0, 1))(mu, lv)
+    assert float(vd) == float(vp)
+    for a, b in zip(gd, gp):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_duplex_wire_quantizes_only_the_backward_link():
+    ks = jax.random.split(jax.random.PRNGKey(4), 5)
+    mu = jax.random.normal(ks[0], (2, 40, 16))
+    lv = jax.random.normal(ks[1], (2, 40, 16)) * 0.3
+    cu, cs = (jax.random.normal(k, (2, 40, 16)) for k in ks[2:4])
+    cr = jax.random.normal(ks[4], (2, 40))
+    vd = _wire_loss("dense", cu, cr, cs)(mu, lv)
+    vq = _wire_loss("packed_duplex", cu, cr, cs)(mu, lv)
+    assert float(vd) == float(vq)                  # forward identical
+    gd = jax.grad(_wire_loss("dense", cu, cr, cs), argnums=(0, 1))(mu, lv)
+    gq = jax.grad(_wire_loss("packed_duplex", cu, cr, cs),
+                  argnums=(0, 1))(mu, lv)
+    diff = float(jnp.max(jnp.abs(gd[0] - gq[0])))
+    assert 0.0 < diff < 0.5                        # lossy but bounded
+
+
+def test_resolve_wire_rejects_unpackable_widths():
+    with pytest.raises(ValueError):
+        wirefmt.resolve_wire("packed", 32)
+    with pytest.raises(ValueError):
+        wirefmt.resolve_wire("zip", 8)
+    assert wirefmt.resolve_wire("dense", 32) == ("dense", None)
+    assert wirefmt.resolve_wire("packed_duplex", 4) == ("packed_duplex", 4)
+
+
+def test_measured_bytes_survive_bf16_at_wide_codes():
+    """Metering a packed wire at 9..16-bit codes under the bf16 policy must
+    not trip pack_values' bf16 re-encode guard: the training path packs
+    from the kernel's fp32 internals, and lane sizes are dtype-independent
+    (regression: the ledger used to crash after training had succeeded)."""
+    wb = wirefmt.round_wire_bytes(10, 64, link_bits=12, wire="packed",
+                                  dtype=jnp.bfloat16)
+    assert wb["fwd"] == 10 * ref.packed_width(64, 12) * 4
+    assert wb["bwd"] == 10 * 64 * 2                    # dense bf16 backward
+
+
+def test_measured_bytes_equal_real_buffer_nbytes():
+    """The eval_shape-derived accounting == the .nbytes of the buffers the
+    ops actually produce (the meter measures, it does not re-derive)."""
+    u = ref.quantize_value(
+        jax.random.normal(jax.random.PRNGKey(5), (10, 13)), 4)
+    packed = bn.pack_values(u, link_bits=4, impl="reference")
+    assert wirefmt.shipped_nbytes(10, 13, link_bits=4, wire="packed") == \
+        packed.nbytes
+    assert wirefmt.shipped_nbytes(10, 13, link_bits=4, wire="dense") == \
+        np.asarray(u).nbytes
+    wb = wirefmt.round_wire_bytes(10, 13, link_bits=4, wire="packed_duplex")
+    assert wb["fwd"] == wb["bwd"] == packed.nbytes
+    assert wb["total"] == 2 * packed.nbytes
+
+
+# ---------------------------------------------------------------------------
+# scheme trajectories under each wire format
+# ---------------------------------------------------------------------------
+
+import functools
+
+
+@functools.lru_cache(maxsize=None)
+def _fixture():
+    from repro.data import multiview
+    imgs, labels = multiview.make_base_dataset(
+        64, image_shape=CFG.image_shape, seed=0)
+    views = multiview.make_views(imgs, CFG.noise_stds)
+    return jnp.asarray(views), jnp.asarray(labels)
+
+
+@functools.lru_cache(maxsize=None)
+def _trajectory(name, cfg, wire):
+    views, labels = _fixture()
+    scheme = schemes.get(name)
+    state = scheme.init(cfg, jax.random.PRNGKey(0))
+    round_fn = scheme.make_round(cfg, wire=wire)
+    R = scheme.batches_per_round(cfg)
+    v = jnp.broadcast_to(views[None, :, :BATCH],
+                         (R,) + views[:, :BATCH].shape)
+    lab = jnp.broadcast_to(labels[None, :BATCH], (R, BATCH))
+    losses = []
+    for i in range(ROUNDS):
+        state, metrics = round_fn(state, v, lab, jax.random.PRNGKey(i))
+        losses.append(float(metrics["loss"]))
+    return np.asarray(losses), state
+
+
+@pytest.mark.parametrize("name", ["inl", "sl"])
+def test_packed_trajectory_is_exact(name):
+    """wire="packed" == "dense" round for round, bit for bit: the collective
+    payload changed representation, nothing else."""
+    dense, _ = _trajectory(name, CFG, "dense")
+    packed, _ = _trajectory(name, CFG, "packed")
+    np.testing.assert_array_equal(packed, dense)
+
+
+def test_duplex_trajectory_tracks_dense_loosely():
+    """The duplex backward link is lossy at 8 bits — the trajectory must
+    stay close (it carries real training signal) but need not match."""
+    dense, _ = _trajectory("inl", CFG, "dense")
+    duplex, _ = _trajectory("inl", CFG, "packed_duplex")
+    np.testing.assert_allclose(duplex, dense, rtol=0.05)
+    assert duplex[-1] < duplex[0]                  # still trains
+
+
+def test_learned_prior_rides_the_packed_wire():
+    """cfg.learned_prior routes through the prior kernel + standalone ship:
+    packed must still match dense exactly."""
+    cfg = dataclasses.replace(CFG, learned_prior=True)
+    dense, st_d = _trajectory("inl", cfg, "dense")
+    packed, st_p = _trajectory("inl", cfg, "packed")
+    np.testing.assert_array_equal(packed, dense)
+    for a, b in zip(jax.tree.leaves(st_d["params"].priors),
+                    jax.tree.leaves(st_p["params"].priors)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.skipif(jax.device_count() < 2,
+                    reason="needs XLA_FLAGS=--xla_force_host_platform_"
+                           "device_count=2")
+def test_sharded_packed_collective_matches_single_device():
+    """The 'client'-axis all_gather rides the packed buffer: the sharded
+    packed round == the single-device dense round at rtol 1e-4 (same bound
+    the dense sharded parity is held to)."""
+    from repro.launch import mesh as mesh_lib
+    mesh = mesh_lib.make_inl_host_mesh(CFG.num_clients)
+    assert mesh.shape["client"] == 2
+    views, labels = _fixture()
+    scheme = schemes.get("inl")
+    want, _ = _trajectory("inl", CFG, "dense")
+    state = scheme.init(CFG, jax.random.PRNGKey(0))
+    state = jax.device_put(state, scheme.state_shardings(CFG, state, mesh))
+    round_fn = scheme.make_sharded_round(CFG, mesh, wire="packed")
+    v = views[None, :, :BATCH]
+    lab = labels[None, :BATCH]
+    losses = []
+    for i in range(ROUNDS):
+        state, metrics = round_fn(state, v, lab, jax.random.PRNGKey(i))
+        losses.append(float(metrics["loss"]))
+    np.testing.assert_allclose(np.asarray(losses), want, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# mixed-precision compute policy
+# ---------------------------------------------------------------------------
+
+BF16_CFG = dataclasses.replace(CFG, compute_dtype="bf16")
+
+
+def test_bf16_policy_runs_hot_path_in_bf16_with_fp32_masters():
+    """The policy contract: latents bf16 on the wire, rate fp32, gradients
+    and updated params fp32 (mixed-precision master copies)."""
+    from repro.core import inl
+    views, labels = _fixture()
+    params, state = inl.init(BF16_CFG, jax.random.PRNGKey(0))
+
+    def probe(params):
+        loss, (metrics, _) = inl.loss_fn(
+            params, state, views[:, :BATCH], labels[:BATCH],
+            jax.random.PRNGKey(1), BF16_CFG)
+        return loss, metrics
+    (loss, metrics), grads = jax.value_and_grad(probe, has_aux=True)(params)
+    assert np.isfinite(float(loss))
+    for g in jax.tree.leaves(grads):
+        assert g.dtype == jnp.float32              # master-grad precision
+    # the latent that crosses the wire is bf16 under the policy
+    from repro.core import paper_model
+    dt = jax.eval_shape(
+        lambda p, v: inl.encode_and_rate(
+            p, state, v, train=True, rng=jax.random.PRNGKey(2))[0],
+        paper_model.cast_compute(params, jnp.bfloat16),
+        views[:, :BATCH].astype(jnp.bfloat16)).dtype
+    assert dt == jnp.bfloat16
+
+
+@pytest.mark.parametrize("name", [
+    "inl", "sl",
+    pytest.param("fl", marks=pytest.mark.slow),   # FL round compile is heavy
+])
+def test_bf16_policy_trains_every_scheme(name):
+    losses, state = _trajectory(name, BF16_CFG, "dense")
+    assert np.all(np.isfinite(losses))
+    assert losses[-1] < losses[0], losses
+    if name == "inl":
+        # BatchNorm statistics stayed fp32 under the policy
+        for leaf in jax.tree.leaves(state["state"]):
+            assert leaf.dtype == jnp.float32
+
+
+def test_bf16_policy_tracks_fp32_loosely():
+    fp32, _ = _trajectory("inl", CFG, "dense")
+    bf16, _ = _trajectory("inl", BF16_CFG, "dense")
+    np.testing.assert_allclose(bf16, fp32, rtol=0.1)
+
+
+def test_bf16_packed_wire_re_encodes_exactly():
+    """bf16 latents at link_bits <= 8: the packed wire is still an exact
+    re-encoding (the 8-bit grid is coarser than the bf16 mantissa)."""
+    fp = ref.quantize_value(
+        jax.random.normal(jax.random.PRNGKey(6), (40, 16)) * 2, 8)
+    u = fp.astype(jnp.bfloat16)
+    back = bn.unpack_dequant(bn.pack_values(u, link_bits=8,
+                                            impl="reference"),
+                             16, link_bits=8, dtype=jnp.bfloat16,
+                             impl="reference")
+    np.testing.assert_array_equal(np.asarray(back, np.float32),
+                                  np.asarray(u, np.float32))
+    with pytest.raises(ValueError):                # >8-bit codes rejected
+        bn.pack_values(u, link_bits=16, impl="reference")
+
+
+@pytest.mark.skipif(jax.device_count() < 2,
+                    reason="needs XLA_FLAGS=--xla_force_host_platform_"
+                           "device_count=2")
+def test_bf16_packed_sharded_round_runs():
+    """The CI bf16-policy leg: mixed precision + packed collectives over a
+    real 2-device ('client', 'data') mesh in one round body."""
+    from repro.launch import mesh as mesh_lib
+    mesh = mesh_lib.make_inl_host_mesh(BF16_CFG.num_clients)
+    views, labels = _fixture()
+    scheme = schemes.get("inl")
+    state = scheme.init(BF16_CFG, jax.random.PRNGKey(0))
+    state = jax.device_put(state,
+                           scheme.state_shardings(BF16_CFG, state, mesh))
+    round_fn = scheme.make_sharded_round(BF16_CFG, mesh, wire="packed")
+    losses = []
+    for i in range(ROUNDS):
+        state, metrics = round_fn(state, views[None, :, :BATCH],
+                                  labels[None, :BATCH], jax.random.PRNGKey(i))
+        losses.append(float(metrics["loss"]))
+    assert np.all(np.isfinite(losses)) and losses[-1] < losses[0]
