@@ -8,6 +8,9 @@
 #   wire      wire_bench         packed wire format: bytes-on-wire per round
 #                                (asserted == closed forms) + packed-vs-dense
 #                                round throughput + bf16 policy leg
+#   topology  topology_bench     star vs chain vs tree: per-edge bytes
+#                                (asserted == closed forms) + round
+#                                wall-clock per topology
 #   throughput throughput_bench  end-to-end runner throughput: per-round
 #                                dispatch vs whole-epoch scan+prefetch vs
 #                                shard_map (forced 2-device subprocess)
@@ -22,7 +25,7 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
-                    help="comma list: table1,curves,kernels,wire,"
+                    help="comma list: table1,curves,kernels,wire,topology,"
                          "throughput,roofline")
     ap.add_argument("--epochs", type=int, default=3,
                     help="epochs for the accuracy curves (CPU-sized)")
@@ -44,6 +47,10 @@ def main() -> None:
     if want("wire"):
         from benchmarks import wire_bench
         wire_bench.main([])
+        sys.stdout.flush()
+    if want("topology"):
+        from benchmarks import topology_bench
+        topology_bench.main([])
         sys.stdout.flush()
     if want("curves"):
         from benchmarks import accuracy_curves

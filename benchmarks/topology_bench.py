@@ -1,0 +1,158 @@
+"""Benchmark — multi-hop topologies: per-edge bytes and round wall-clock.
+
+Two sections, written to BENCH_topology.json (--json):
+
+  bytes       the per-edge bandwidth ledger of one INL round on star(J),
+              chain(J) and tree(2,2): closed-form §III-C bits and measured
+              wire bytes per edge (core/topology.py over the real
+              core/wirefmt.py ops), dense and packed_duplex.  The section
+              ASSERTS the topology contract on every run:
+
+                * per-edge charges sum to the scheme totals exactly;
+                * star(J)'s per-edge ledger sums to the pre-topology
+                  Table-I totals exactly;
+                * packed_duplex measured bytes == closed forms per edge
+                  (lane-filling d_bottleneck).
+
+  throughput  wall-clock of the jitted INL train round per topology —
+              star vs chain vs tree on the same fixture model.  An
+              edge-homogeneous graph runs the same single fused cut-layer
+              launch as the star plus J cheap re-encoding hops, so the
+              interesting number is the hop OVERHEAD (expect ~1x on one
+              device; the multi-hop story is bandwidth, not compute).
+
+--smoke runs tiny shapes with 2 reps for the CI bench-smoke step, so the
+per-edge accounting assertions cannot bit-rot between nightly runs.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import statistics
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_inl import PaperExperimentConfig
+from repro.core import bandwidth, schemes
+from repro.core import topology as topology_lib
+from repro.data import multiview
+
+EPS = 1e-9
+
+
+def _cfg(J: int, *, smoke: bool, link_bits: int = 8):
+    stds = (0.4, 1.0, 2.0, 3.0, 4.0, 0.7, 1.5, 2.5)[:J]
+    if smoke:
+        return PaperExperimentConfig(
+            num_clients=J, noise_stds=stds, conv_channels=(4,),
+            d_bottleneck=8, dense_units=(32,), image_shape=(16, 16, 3),
+            link_bits=link_bits, dataset_size=128)
+    return PaperExperimentConfig(num_clients=J, noise_stds=stds,
+                                 link_bits=link_bits)
+
+
+def _topologies(J: int):
+    return {"star": topology_lib.star(J),
+            "chain": topology_lib.chain(J),
+            "tree(2,2)": topology_lib.tree(2, 2)}
+
+
+def bytes_section(*, smoke: bool, batch: int):
+    print("name,edge,closed_bits,measured_bytes_dense,"
+          "measured_bytes_duplex")
+    record = {}
+    scheme = schemes.get("inl")
+    for name, topo in _topologies(5).items():
+        J = topo.num_views()
+        cfg = dataclasses.replace(_cfg(J, smoke=smoke), d_bottleneck=16)
+        closed = topology_lib.round_edge_bits(topo, cfg, batch)
+        dense = topology_lib.round_edge_wire_bytes(topo, cfg, batch,
+                                                   wire="dense")
+        duplex = topology_lib.round_edge_wire_bytes(topo, cfg, batch,
+                                                    wire="packed_duplex")
+        # contract: per-edge sums == the Scheme API totals, exactly
+        assert sum(closed.values()) == scheme.bits_per_round(
+            cfg, None, batch, topology=topo)
+        assert sum(dense.values()) == scheme.wire_bytes_per_round(
+            cfg, None, batch, wire="dense", topology=topo)
+        # packed_duplex: measured == closed per edge (lanes fill at d=16)
+        for k in closed:
+            assert duplex[k] * 8 == closed[k], (name, k)
+        if name == "star":
+            p = J * cfg.d_bottleneck
+            assert sum(closed.values()) == bandwidth.inl_epoch_bits(
+                p, batch * J, J, cfg.link_bits)
+        for k in closed:
+            print(f"{name},{k},{closed[k]:.0f},{dense[k]:.0f},"
+                  f"{duplex[k]:.0f}")
+        record[name] = {"closed_bits": closed, "dense_bytes": dense,
+                        "duplex_bytes": duplex,
+                        "levels": [list(lv) for lv in topo.levels()]}
+    return record
+
+
+def _time_round(cfg, topo, views, labels, *, reps: int, batch: int):
+    scheme = schemes.get("inl")
+    state = scheme.init(cfg, jax.random.PRNGKey(0))
+    round_fn = scheme.make_round(cfg, topology=topo)
+    v = views[None, :, :batch]
+    lab = labels[None, :batch]
+    state, m = round_fn(state, v, lab, jax.random.PRNGKey(0))  # compile
+    jax.block_until_ready(m["loss"])
+    times = []
+    for i in range(reps):
+        t0 = time.perf_counter()
+        state, m = round_fn(state, v, lab, jax.random.PRNGKey(i))
+        jax.block_until_ready(m["loss"])
+        times.append(time.perf_counter() - t0)
+    return statistics.median(times)
+
+
+def throughput_section(*, smoke: bool, batch: int, reps: int):
+    print("name,us_per_round,vs_star")
+    record = {}
+    imgs, labels = multiview.make_base_dataset(
+        max(batch, 64), image_shape=_cfg(5, smoke=smoke).image_shape,
+        seed=0)
+    labels = jnp.asarray(labels)
+    base = None
+    for name, topo in _topologies(5).items():
+        cfg = _cfg(topo.num_views(), smoke=smoke)
+        views = jnp.asarray(multiview.make_views(imgs, cfg.noise_stds))
+        t = _time_round(cfg, topo, views, labels, reps=reps, batch=batch)
+        if base is None:
+            base = t
+        rel = t / max(base, EPS)
+        print(f"{name},{t * 1e6:.0f},{rel:.2f}x")
+        record[name] = {"us_per_round": t * 1e6, "vs_star": rel}
+    return record
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes, 2 reps (CI bench-smoke step)")
+    ap.add_argument("--reps", type=int, default=10)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--json", default="BENCH_topology.json",
+                    help="output path ('' disables)")
+    args = ap.parse_args(argv)
+    reps = 2 if args.smoke else args.reps
+    batch = 16 if args.smoke else args.batch
+
+    record = {"smoke": args.smoke, "batch": batch,
+              "bytes": bytes_section(smoke=args.smoke, batch=batch),
+              "throughput": throughput_section(smoke=args.smoke,
+                                               batch=batch, reps=reps)}
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(record, f, indent=2, sort_keys=True)
+        print(f"# wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -4,6 +4,11 @@ accuracy per epoch and per Gbit exchanged, on one shared runner and one
 fused cut-layer substrate.
 
     PYTHONPATH=src python examples/compare_schemes.py [--epochs 4]
+
+--topology chain re-routes the INL exchange over a J-hop line (each relay
+fuses the upstream latents with its own view — the follow-up paper's
+multi-hop setting) and prints the per-edge bandwidth ledger; FL/SL have no
+multi-hop reading, so the comparison then runs INL alone.
 """
 import argparse
 import pathlib
@@ -12,7 +17,8 @@ import sys
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
 
 from benchmarks.accuracy_curves import BATCH, CFG, _data  # noqa: E402
-from repro.core import schemes                            # noqa: E402
+from repro.core import bandwidth, schemes                 # noqa: E402
+from repro.core import topology as topology_lib           # noqa: E402
 
 
 def main():
@@ -21,9 +27,20 @@ def main():
     ap.add_argument("--experiment", type=int, default=2, choices=[1, 2])
     ap.add_argument("--schemes", default="",
                     help="comma list (default: every registered scheme)")
+    ap.add_argument("--topology", default="star", choices=["star", "chain"],
+                    help="INL inference graph (chain restricts the run to "
+                         "INL — FL/SL are star-only by construction)")
     args = ap.parse_args()
 
-    if args.schemes:
+    topo = None
+    if args.topology == "chain":
+        topo = topology_lib.chain(CFG.num_clients)
+        if args.schemes and args.schemes != "inl":
+            ap.error("--topology chain runs INL only (FL/SL have no "
+                     "multi-hop reading)")
+        names = ("inl",)
+        print(f"multi-hop INL: {topo.describe()}")
+    elif args.schemes:
         names = tuple(s.strip() for s in args.schemes.split(",") if s.strip())
         unknown = set(names) - set(schemes.available())
         if unknown:
@@ -32,8 +49,11 @@ def main():
     else:
         names = schemes.available()
     views, labels = _data(args.experiment)
+    meter = bandwidth.BandwidthMeter()
     results = schemes.runner.run_all(names, views, labels, CFG,
-                                     epochs=args.epochs, batch_size=BATCH)
+                                     epochs=args.epochs, batch_size=BATCH,
+                                     topology=topo,
+                                     **({"meter": meter} if topo else {}))
 
     print(f"\nExperiment {args.experiment} "
           f"(paper fig {5 if args.experiment == 1 else 7}):")
@@ -50,6 +70,11 @@ def main():
         pt = curve[-1]
         print(f"  {s:4s}: {schemes.runner.efficiency(curve):10.2f} acc/Gbit "
               f"(acc {pt.accuracy:.3f}, {pt.gbits:.4f} Gbit)")
+    if topo is not None:
+        print("\nper-edge ledger (closed-form Gbit | measured Gbit):")
+        for edge in (e.key for e in topo.topo_edges()):
+            print(f"  {edge:12s}: {meter.edge_bits[edge] / 1e9:.4f} | "
+                  f"{meter.edge_measured_bytes[edge] * 8 / 1e9:.4f}")
     print("\npaper's qualitative claim: INL >> SL > FL per bit; "
           "INL >= SL > FL in accuracy.")
 

@@ -34,6 +34,12 @@ class PaperExperimentConfig:
     # Q_psi_j(u_j): standard normal (False) or learned per-node Gaussian
     # marginals (True, trained jointly via the fused kernel's prior path)
     learned_prior: bool = False
+    # the inference graph (a core/topology.Topology: star/chain/tree, or
+    # any validated single-sink DAG with per-edge link_bits/wire/dtype).
+    # None — or an all-default star — keeps every code path bit-identical
+    # to the pre-topology star; explicit `topology=` arguments to the
+    # Scheme API override this field per call.
+    topology: object = None
     # experiment 1 partitions data per scheme; experiment 2 shares it
     experiment: int = 1
     dataset_size: int = 50_000

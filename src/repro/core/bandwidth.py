@@ -11,7 +11,7 @@ p=25088; eta=0.11 (VGG16) / 0.88 (ResNet50); s=32 bits.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict
 
 GBIT = 1e9
@@ -38,7 +38,13 @@ def sl_epoch_bits(p: int, q: int, N: int, J: int, eta: float,
 
 
 def table1(q: int, network: str) -> Dict[str, float]:
-    """Reproduce one row of Table I (values in Gbits)."""
+    """Reproduce one row of Table I (values in Gbits).
+
+    `network` must be a Table-I architecture — an unknown string used to
+    fall through to resnet50 silently."""
+    if network not in TABLE1_ETA:
+        raise ValueError(f"unknown Table-I network {network!r}; "
+                         f"known: {sorted(TABLE1_ETA)}")
     N = VGG16_PARAMS if network == "vgg16" else RESNET50_PARAMS
     eta = TABLE1_ETA[network]
     return {
@@ -68,15 +74,32 @@ class BandwidthMeter:
     With the packed wire format the two ledgers agree exactly
     (measured_bits == accounted bits); the dense fp32 baseline moves
     32/link_bits more than it accounts — the gap this meter exists to
-    expose.  tests/test_scheme_parity.py pins the agreement."""
+    expose.  tests/test_scheme_parity.py pins the agreement.
+
+    Both ledgers also decompose PER EDGE of a network topology
+    (core/topology.py): `add_edge` charges one named link on both ledgers
+    at once, accumulating `edge_bits` / `edge_measured_bytes` alongside the
+    totals — for `star(J)` the per-edge charges sum to exactly the Table-I
+    totals the scalar `add` path produces."""
     total_bits: float = 0.0
     measured_bytes: float = 0.0
+    edge_bits: Dict[str, float] = field(default_factory=dict)
+    edge_measured_bytes: Dict[str, float] = field(default_factory=dict)
 
     def add(self, bits: float) -> None:
         self.total_bits += float(bits)
 
     def add_measured(self, nbytes: float) -> None:
         self.measured_bytes += float(nbytes)
+
+    def add_edge(self, edge: str, *, bits: float = 0.0,
+                 nbytes: float = 0.0) -> None:
+        """Charge one topology edge on both ledgers (totals included)."""
+        self.edge_bits[edge] = self.edge_bits.get(edge, 0.0) + float(bits)
+        self.edge_measured_bytes[edge] = \
+            self.edge_measured_bytes.get(edge, 0.0) + float(nbytes)
+        self.add(bits)
+        self.add_measured(nbytes)
 
     @property
     def gbits(self) -> float:

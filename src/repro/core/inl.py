@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import bottleneck, linkmodel, losses, paper_model, wirefmt
+from repro.core import topology as topology_lib
 
 
 class INLParams(NamedTuple):
@@ -123,7 +124,7 @@ def decode(params: INLParams, u, *, train: bool, rng=None, u_joint=None):
 
 def loss_fn(params: INLParams, state, views, labels, rng, cfg, *,
             train: bool = True, rate_estimator: str = "sample",
-            backend: str = "auto", wire: str = "dense"):
+            backend: str = "auto", wire: str = "dense", topology=None):
     """Full eq.-(6) loss.  Returns (loss, (metrics, new_state)).
 
     The encode side runs the fused cut-layer megakernel, which also emits
@@ -136,17 +137,31 @@ def loss_fn(params: INLParams, state, views, labels, rng, cfg, *,
     sharded rounds run the same format over the real 'client' collective).
     cfg.compute_dtype="bf16" applies the mixed-precision policy: params
     and views drop to bf16 INSIDE this function, so gradients and the
-    optimizer's master params stay fp32."""
+    optimizer's master params stay fp32.
+
+    topology — a core/topology.Topology (defaults to cfg.topology, then
+    the implicit star): non-star graphs cut each node at its first hop's
+    width and route the latents through the edges' re-encoding hops in
+    topological order before the eq.-(5) concatenation at the fuse node
+    (graph_cut_and_ship); the default star keeps this function's
+    pre-topology graph bit for bit."""
+    topo = topology_lib.nontrivial(topology, cfg)
     dt = paper_model.compute_dtype(cfg)
     params_c = paper_model.cast_compute(params, dt)
     views = views.astype(dt)
     r_enc, r_dec = jax.random.split(rng)
     (mu, logvar), new_enc = _encode_mu_logvar(params_c, state, views,
                                               train=train)
-    u, rate, u_joint = wirefmt.cut_and_ship(
-        r_enc, mu, logvar, link_bits=cfg.link_bits,
-        rate_estimator=rate_estimator, wire=wire, prior=params_c.priors,
-        backend=backend)
+    if topo is None:
+        u, rate, u_joint = wirefmt.cut_and_ship(
+            r_enc, mu, logvar, link_bits=cfg.link_bits,
+            rate_estimator=rate_estimator, wire=wire, prior=params_c.priors,
+            backend=backend)
+    else:
+        eps = jax.random.normal(r_enc, mu.shape, jnp.float32)
+        u, rate, u_joint = topology_lib.graph_cut_and_ship(
+            topo, cfg, mu, logvar, eps, rate_estimator=rate_estimator,
+            wire=wire, prior=params_c.priors, backend=backend)
     new_state = {"encoders": new_enc}
     joint, branch = decode(params_c, u, train=train, rng=r_dec,
                            u_joint=u_joint)
@@ -157,32 +172,57 @@ def loss_fn(params: INLParams, state, views, labels, rng, cfg, *,
         s=cfg.s, rate_estimator=rate_estimator, rates=list(rate))
     metrics["accuracy"] = losses.accuracy(joint, labels)
     # §III-C accounting: activations forward + error vectors backward
-    p_total = J * cfg.d_bottleneck
-    metrics["bits_sent"] = jnp.asarray(
-        linkmodel.training_step_bits(labels.shape[0], p_total, cfg.link_bits),
-        jnp.float32)
+    # (per-edge payloads summed when a topology re-routes them)
+    if topo is None:
+        p_total = J * cfg.d_bottleneck
+        bits_sent = linkmodel.training_step_bits(labels.shape[0], p_total,
+                                                 cfg.link_bits)
+    else:
+        bits_sent = topology_lib.round_bits(topo, cfg, labels.shape[0])
+    metrics["bits_sent"] = jnp.asarray(bits_sent, jnp.float32)
     return loss, (metrics, new_state)
 
 
 def make_train_step(cfg, optimizer, *, rate_estimator: str = "sample",
-                    wire: str = "dense"):
+                    wire: str = "dense", topology=None):
     """jit-able train step closed over the experiment config + optimizer."""
     @jax.jit
     def step(params, state, opt_state, views, labels, rng):
         (loss, (metrics, new_state)), grads = jax.value_and_grad(
             loss_fn, has_aux=True)(params, state, views, labels, rng, cfg,
                                    train=True, rate_estimator=rate_estimator,
-                                   wire=wire)
+                                   wire=wire, topology=topology)
         new_params, new_opt = optimizer.update(grads, opt_state, params)
         return new_params, new_state, new_opt, metrics
     return step
 
 
-def predict(params: INLParams, state, views):
-    """Inference phase (§III-B): deterministic latents (u = mu), soft output."""
-    u, _, _, _ = encode(params, state, views, train=False,
-                        sample_latent=False)
-    joint, _ = decode(params, u, train=False)
+def predict(params: INLParams, state, views, *, cfg=None, topology=None):
+    """Inference phase (§III-B): deterministic latents (u = mu), soft output.
+
+    A non-star `topology` (needs `cfg` for the edge widths) routes the
+    deterministic latents through the same multi-hop re-encoding the
+    training graph runs — what the fuse node actually receives.  NOTE the
+    deliberate convention split: the star path ships UNQUANTIZED latents
+    at inference (the seed convention, pinned by the golden accuracies),
+    while the graph path models the real quantized multi-hop delivery —
+    so at full-precision links (every hop the identity) chain/tree
+    inference is bit-identical to the star, and at narrow links the
+    difference IS the deployment effect (a 2-bit uplink visibly costs
+    accuracy).  Compare star-vs-graph accuracy curves at link_bits=32, or
+    read narrow-width comparisons as including inference-time
+    quantization."""
+    topo = None if cfg is None else topology_lib.nontrivial(topology, cfg)
+    if topo is None:
+        u, _, _, _ = encode(params, state, views, train=False,
+                            sample_latent=False)
+        joint, _ = decode(params, u, train=False)
+        return jax.nn.softmax(joint, axis=-1)
+    (mu, logvar), _ = _encode_mu_logvar(params, state, views, train=False)
+    u, _, u_fused = topology_lib.graph_cut_and_ship(
+        topo, cfg, mu, logvar, jnp.zeros(mu.shape, jnp.float32),
+        rate_estimator="none")
+    joint, _ = decode(params, u, train=False, u_joint=u_fused)
     return jax.nn.softmax(joint, axis=-1)
 
 

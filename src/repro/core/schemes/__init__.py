@@ -21,7 +21,12 @@ first-class: every scheme sits behind one `Scheme` interface
 
 and every cut-layer exchange — INL's stochastic bottleneck, SL's
 deterministic activations, FL's in-model branch latents — runs through the
-SAME fused kernel (`kernels/ops.cutlayer`).
+SAME fused kernel (`kernels/ops.cutlayer`).  Every entry point also takes
+`topology=` (core/topology.py): the network graph the exchange routes
+over — star by default (bit-identical to the pre-topology paths), chains/
+trees/arbitrary single-sink DAGs for INL, with per-edge link widths, wire
+formats and a per-edge bandwidth ledger.  See the "Topologies" section of
+core/schemes/README.md.
 
 Registering a new scheme
 ------------------------

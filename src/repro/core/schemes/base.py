@@ -17,10 +17,19 @@ Bandwidth: `bits_per_round` must route through the closed-form §III-C /
 Table-I accounting in `core/bandwidth.py` (tests/test_scheme_parity.py
 asserts exact agreement), so the measured curves and the published formulas
 cannot drift apart.
+
+Topology: every entry point accepts `topology=` (a core/topology.Topology;
+None resolves to cfg.topology, then the implicit `star(cfg.num_clients)`).
+The default star dispatches to the pre-topology code paths bit for bit;
+INL compiles non-star graphs to multi-hop execution and per-edge
+accounting (`edge_ledger`), while schemes whose exchange has no multi-hop
+reading validate the topology is a star and raise otherwise.
 """
 from __future__ import annotations
 
-from typing import Any, Tuple
+from typing import Any, Dict, Optional, Tuple
+
+import jax
 
 
 class Scheme:
@@ -38,7 +47,8 @@ class Scheme:
         Must be deterministic in `key`; `lr` must match `make_round`'s."""
         raise NotImplementedError
 
-    def make_round(self, cfg, *, lr: float = 2e-3, wire: str = "dense"):
+    def make_round(self, cfg, *, lr: float = 2e-3, wire: str = "dense",
+                   topology=None):
         """Return a jitted round_fn(state, views, labels, rng) ->
         (new_state, metrics) with views (R, J, B, H, W, C), labels (R, B),
         R == batches_per_round(cfg).  metrics must include "loss".
@@ -47,11 +57,14 @@ class Scheme:
         quantized values at their storage dtype (the golden baseline),
         "packed" moves bit-packed codewords (trajectory bit-identical),
         "packed_duplex" packs the backward error vectors too.  Schemes
-        without a cut-layer exchange (FL's weight transfer) ignore it."""
+        without a cut-layer exchange (FL's weight transfer) ignore it.
+
+        topology — the inference graph (core/topology.py); the default
+        star keeps the pre-topology round bit for bit."""
         raise NotImplementedError
 
     def make_sharded_round(self, cfg, mesh, *, lr: float = 2e-3,
-                           wire: str = "dense"):
+                           wire: str = "dense", topology=None):
         """Round with the same signature/semantics as make_round's, executed
         across a ('client', 'data') mesh via shard_map (core/sharded.py):
         the J client branches on 'client', the batch on 'data'.  Must match
@@ -61,21 +74,22 @@ class Scheme:
                                   "round")
 
     def make_epoch(self, cfg, *, lr: float = 2e-3, mesh=None, donate=None,
-                   wire: str = "dense"):
+                   wire: str = "dense", topology=None):
         """K rounds in ONE jitted lax.scan — the whole-epoch dispatch unit.
 
         Returns epoch_fn(state, views, labels, rngs) -> (state, metrics)
         with views (K, R, J, B, ...), labels (K, R, B), rngs (K,) PRNG keys
         (one per round, the same chain the per-round path splits), and
         metrics stacked (K,) leaves.  mesh switches the body to the
-        shard_map round; wire selects the cut-layer link format for every
-        round in the scan.  donate=None donates (params/opt buffers reused
-        in-place) on accelerators only — CPU XLA cannot alias and would
-        warn."""
-        import jax
-        round_fn = (self.make_sharded_round(cfg, mesh, lr=lr, wire=wire)
+        shard_map round; wire selects the cut-layer link format and
+        topology the inference graph for every round in the scan.
+        donate=None donates (params/opt buffers reused in-place) on
+        accelerators only — CPU XLA cannot alias and would warn."""
+        round_fn = (self.make_sharded_round(cfg, mesh, lr=lr, wire=wire,
+                                            topology=topology)
                     if mesh is not None
-                    else self.make_round(cfg, lr=lr, wire=wire))
+                    else self.make_round(cfg, lr=lr, wire=wire,
+                                         topology=topology))
 
         def epoch_fn(state, views, labels, rngs):
             def body(st, xs):
@@ -93,20 +107,23 @@ class Scheme:
         leaves on 'client' where the sharded round expects them).  Default:
         fully replicated."""
         from jax.sharding import NamedSharding, PartitionSpec
-        import jax
         rep = NamedSharding(mesh, PartitionSpec())
         return jax.tree.map(lambda _: rep, state)
 
-    def predict(self, state, views) -> Any:
+    def predict(self, state, views, topology=None, cfg=None) -> Any:
         """views (J, B, ...) -> class probabilities (B, C); rows sum to 1.
 
         Each scheme applies its own inference convention (INL: deterministic
-        latents; FL: central model on the average-quality view; SL: client
-        forward + server decoder)."""
+        latents, routed through the topology's hops when one is given — that
+        path needs `cfg` for the edge-width defaults; FL: central model on
+        the average-quality view; SL: client forward + server decoder)."""
         raise NotImplementedError
 
-    def bits_per_round(self, cfg, state, batch_size: int) -> float:
-        """Bits moved by ONE round, via core/bandwidth.py closed forms."""
+    def bits_per_round(self, cfg, state, batch_size: int, *,
+                       topology=None) -> float:
+        """Bits moved by ONE round, via core/bandwidth.py closed forms (a
+        non-star topology sums its per-edge charges — identical for the
+        star)."""
         raise NotImplementedError
 
     def epoch_overhead_bits(self, cfg, state) -> float:
@@ -115,7 +132,7 @@ class Scheme:
         return 0.0
 
     def wire_bytes_per_round(self, cfg, state, batch_size: int, *,
-                             wire: str = "dense") -> float:
+                             wire: str = "dense", topology=None) -> float:
         """MEASURED bytes one round actually puts on the wire under `wire`
         — the nbytes of the transmitted buffers (core/wirefmt.py derives
         them from the real wire ops), not the closed-form accounting.
@@ -130,27 +147,54 @@ class Scheme:
         Default 0."""
         return 0.0
 
+    def edge_ledger(self, cfg, state, batch_size: int, *,
+                    wire: str = "dense",
+                    topology=None) -> Optional[Dict[str, Tuple[float,
+                                                               float]]]:
+        """Per-edge bandwidth of one round: {edge_key: (closed-form bits,
+        measured wire bytes)}, summing to bits_per_round /
+        wire_bytes_per_round exactly.  None (the default) for schemes whose
+        exchange has no per-edge decomposition — the runner then meters
+        totals only."""
+        return None
+
     # -- conveniences shared by implementations ---------------------------
 
     @staticmethod
     def param_count(tree) -> int:
-        import jax
         return sum(int(x.size) for x in jax.tree.leaves(tree))
 
     def __repr__(self):
         return f"<Scheme {self.name!r}>"
 
 
-def evaluate_accuracy(scheme: Scheme, state, views, labels) -> float:
+# One jitted predict per (scheme, topology, cfg): topology and cfg are
+# closed over as statics (they change the traced graph), while state/views
+# changes hit jax.jit's OWN cache — a new treedef or shape retraces, so
+# switching cfgs mid-process can never reuse a stale closure (the former
+# cache pinned the first-ever jitted predict on the registry singleton
+# forever).  LRU-bounded so a config sweep (placement search over
+# (topology, width) settings) cannot grow it monotonically.
+_PREDICT_JIT: dict = {}
+_PREDICT_JIT_CAP = 32
+
+
+def evaluate_accuracy(scheme: Scheme, state, views, labels,
+                      topology=None, cfg=None) -> float:
     """Shared top-1 accuracy via the scheme's own predict convention.
 
-    The predict forward is jitted once per scheme (cached on the registry
-    singleton) — the per-epoch eval in the runner would otherwise run the
-    whole encoder/decoder stack op-by-op."""
-    import jax
+    The predict forward is jitted once per (scheme, topology, cfg) — the
+    per-epoch eval in the runner would otherwise run the whole
+    encoder/decoder stack op-by-op."""
     import jax.numpy as jnp
-    jitted = scheme.__dict__.get("_predict_jit")
+    key = (scheme.name, topology, cfg)
+    jitted = _PREDICT_JIT.pop(key, None)
     if jitted is None:
-        jitted = scheme._predict_jit = jax.jit(scheme.predict)
+        def _predict(st, v):
+            return scheme.predict(st, v, topology=topology, cfg=cfg)
+        jitted = jax.jit(_predict)
+    _PREDICT_JIT[key] = jitted                   # most-recently-used last
+    while len(_PREDICT_JIT) > _PREDICT_JIT_CAP:
+        _PREDICT_JIT.pop(next(iter(_PREDICT_JIT)))
     probs = jitted(state, views)
     return float((jnp.argmax(probs, axis=-1) == labels).mean())

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from repro import optim
 from repro.core import bandwidth, fl, paper_model
 from repro.core import schemes as _schemes
+from repro.core import topology as topology_lib
 from repro.core.schemes import base
 from repro.data import multiview
 
@@ -35,10 +36,14 @@ class FLScheme(base.Scheme):
         return {"params": params, "state": state,
                 "opt": jax.vmap(opt.init)(params)}
 
-    def make_round(self, cfg, *, lr: float = 2e-3, wire: str = "dense"):
+    def make_round(self, cfg, *, lr: float = 2e-3, wire: str = "dense",
+                   topology=None):
         # FL has no cut-layer exchange: the wire carries full fp32 weights
         # (quantized FedAvg would be a different algorithm), so `wire` is
-        # accepted for interface parity and ignored.
+        # accepted for interface parity and ignored; the weight exchange is
+        # a client<->server star by definition, so non-star topologies are
+        # rejected up front.
+        topology_lib.require_star(topology, cfg, scheme=self.name)
         opt = optim.adam(lr)
         round_impl = fl.make_round(cfg, opt, self.local_steps)
         J, ls = cfg.num_clients, self.local_steps
@@ -64,8 +69,9 @@ class FLScheme(base.Scheme):
         return round_fn
 
     def make_sharded_round(self, cfg, mesh, *, lr: float = 2e-3,
-                           wire: str = "dense"):
+                           wire: str = "dense", topology=None):
         from repro.core import sharded
+        topology_lib.require_star(topology, cfg, scheme=self.name)
         return sharded.make_fl_sharded_round(cfg, mesh, optim.adam(lr),
                                              self.local_steps)
 
@@ -77,17 +83,19 @@ class FLScheme(base.Scheme):
         cl = NamedSharding(mesh, P("client"))
         return jax.tree.map(lambda _: cl, state)
 
-    def predict(self, state, views):
+    def predict(self, state, views, topology=None, cfg=None):
         # FL inference is central: aggregated model, average-quality view
         return fl.predict(state["params"], state["state"],
                           multiview.average_view(views))
 
-    def bits_per_round(self, cfg, state, batch_size: int) -> float:
+    def bits_per_round(self, cfg, state, batch_size: int, *,
+                       topology=None) -> float:
+        topology_lib.require_star(topology, cfg, scheme=self.name)
         N = paper_model.fl_param_count(cfg)
         return bandwidth.fl_round_bits(N, cfg.num_clients, cfg.link_bits)
 
     def wire_bytes_per_round(self, cfg, state, batch_size: int, *,
-                             wire: str = "dense") -> float:
+                             wire: str = "dense", topology=None) -> float:
         # weights down + weights up for every client, at the buffers'
         # actual (fp32 master) sizes — FL keeps a full-precision exchange
         # regardless of the wire format

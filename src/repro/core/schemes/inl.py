@@ -5,12 +5,20 @@ cut layer (sample + link quantizer + rate, learned priors included) is the
 fused kernel.  Bandwidth per round is the paper's 2 b p s — activations
 forward, eq.-(10) error vectors backward — expressed through the Table-I
 closed form so measured and published accounting share one source.
+
+INL is the scheme the network GRAPH belongs to: `topology=` compiles
+non-star graphs (chains, trees, heterogeneous per-edge widths) to
+multi-hop execution (core/topology.graph_cut_and_ship) and decomposes both
+bandwidth ledgers per edge (`edge_ledger`), each edge charged for the
+payload it carries.  The default star keeps every path bit-identical to
+the pre-topology code.
 """
 from __future__ import annotations
 
 from repro import optim
 from repro.core import bandwidth, inl, paper_model, wirefmt
 from repro.core import schemes as _schemes
+from repro.core import topology as topology_lib
 from repro.core.schemes import base
 
 
@@ -23,9 +31,10 @@ class INLScheme(base.Scheme):
         opt = optim.adam(lr)
         return {"params": params, "state": state, "opt": opt.init(params)}
 
-    def make_round(self, cfg, *, lr: float = 2e-3, wire: str = "dense"):
+    def make_round(self, cfg, *, lr: float = 2e-3, wire: str = "dense",
+                   topology=None):
         opt = optim.adam(lr)
-        step = inl.make_train_step(cfg, opt, wire=wire)
+        step = inl.make_train_step(cfg, opt, wire=wire, topology=topology)
 
         def round_fn(state, views, labels, rng):
             params, st, opt_state, metrics = step(
@@ -36,10 +45,10 @@ class INLScheme(base.Scheme):
         return round_fn
 
     def make_sharded_round(self, cfg, mesh, *, lr: float = 2e-3,
-                           wire: str = "dense"):
+                           wire: str = "dense", topology=None):
         from repro.core import sharded
         return sharded.make_inl_sharded_round(cfg, mesh, optim.adam(lr),
-                                              wire=wire)
+                                              wire=wire, topology=topology)
 
     def state_shardings(self, cfg, state, mesh):
         import jax
@@ -62,10 +71,15 @@ class INLScheme(base.Scheme):
                 "opt": {k: (rep if k == "step" else p_sh)
                         for k in state["opt"]}}
 
-    def predict(self, state, views):
-        return inl.predict(state["params"], state["state"], views)
+    def predict(self, state, views, topology=None, cfg=None):
+        return inl.predict(state["params"], state["state"], views,
+                           cfg=cfg, topology=topology)
 
-    def bits_per_round(self, cfg, state, batch_size: int) -> float:
+    def bits_per_round(self, cfg, state, batch_size: int, *,
+                       topology=None) -> float:
+        topo = topology_lib.nontrivial(topology, cfg)
+        if topo is not None:
+            return topology_lib.round_bits(topo, cfg, batch_size)
         # §III-C: each of the J nodes holds q/J of the round's q = b*J
         # node-points and sends p/J = d_bottleneck values per point, both
         # directions -> 2 b p s with p = J * d_bottleneck.
@@ -74,10 +88,24 @@ class INLScheme(base.Scheme):
                                         cfg.num_clients, cfg.link_bits)
 
     def wire_bytes_per_round(self, cfg, state, batch_size: int, *,
-                             wire: str = "dense") -> float:
+                             wire: str = "dense", topology=None) -> float:
+        topo = topology_lib.nontrivial(topology, cfg)
+        if topo is not None:
+            return topology_lib.round_wire_bytes(topo, cfg, batch_size,
+                                                 wire=wire)
         # the round's exchange is J*B latent d_b-vectors forward and their
         # eq.-(10) error chunks back, at the sizes wirefmt actually ships
         return wirefmt.round_wire_bytes(
             cfg.num_clients * batch_size, cfg.d_bottleneck,
             link_bits=cfg.link_bits, wire=wire,
             dtype=paper_model.compute_dtype(cfg))["total"]
+
+    def edge_ledger(self, cfg, state, batch_size: int, *,
+                    wire: str = "dense", topology=None):
+        # always decomposable for INL — the star is J single-latent edges
+        # whose charges sum to the Table-I totals exactly
+        topo = topology_lib.resolve(topology, cfg)
+        bits = topology_lib.round_edge_bits(topo, cfg, batch_size)
+        nbytes = topology_lib.round_edge_wire_bytes(topo, cfg, batch_size,
+                                                    wire=wire)
+        return {k: (bits[k], nbytes[k]) for k in bits}

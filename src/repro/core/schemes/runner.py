@@ -53,11 +53,38 @@ def _split_chain(key, n: int):
     return jax.lax.scan(body, key, None, length=n)
 
 
+def _round_charges(scheme, cfg, state, batch_size, *, wire, topology):
+    """ONE round's bandwidth charges, computed once per run (they depend
+    only on static shapes, and the measured side runs 2 eval_shape traces
+    per edge — per-round recomputation would tax the per_round dispatch
+    baseline): the per-edge ledger where the scheme decomposes its
+    exchange over the topology's links (INL; per-edge charges sum to the
+    totals exactly), else the scalar totals."""
+    ledger = scheme.edge_ledger(cfg, state, batch_size, wire=wire,
+                                topology=topology)
+    if ledger is not None:
+        return ledger
+    return {None: (scheme.bits_per_round(cfg, state, batch_size,
+                                         topology=topology),
+                   scheme.wire_bytes_per_round(cfg, state, batch_size,
+                                               wire=wire,
+                                               topology=topology))}
+
+
+def _meter_rounds(meter, charges, rounds=1):
+    for edge, (bits, nbytes) in charges.items():
+        if edge is None:
+            meter.add(rounds * bits)
+            meter.add_measured(rounds * nbytes)
+        else:
+            meter.add_edge(edge, bits=rounds * bits, nbytes=rounds * nbytes)
+
+
 def run_scheme(name: str, views, labels, cfg, *, epochs: int,
                batch_size: int = 64, lr: float = 2e-3, seed: int = 0,
                eval_n: int = 512, dispatch: str = "scan", mesh=None,
-               prefetch_size: int = 2,
-               wire: str = "dense") -> List[CurvePoint]:
+               prefetch_size: int = 2, wire: str = "dense",
+               topology=None, meter=None) -> List[CurvePoint]:
     """Train scheme `name` for `epochs` over the (J, n, ...) multi-view set
     and return its accuracy/bandwidth curve (paper Figs. 5/7 rows).
 
@@ -66,14 +93,20 @@ def run_scheme(name: str, views, labels, cfg, *, epochs: int,
     per-epoch accounting uses).  Bandwidth accrues on TWO ledgers: the
     §III-C closed forms (`gbits`, as published) and the MEASURED nbytes of
     the buffers the chosen wire format actually transmits per round
-    (`measured_gbits`; Scheme.wire_bytes_per_round via core/wirefmt.py).
+    (`measured_gbits`; Scheme.wire_bytes_per_round via core/wirefmt.py) —
+    per EDGE where the scheme decomposes its exchange over the topology's
+    links (pass `meter=` a BandwidthMeter to read the per-edge ledgers
+    afterwards).
 
     dispatch="scan" (default) runs each epoch as one jitted lax.scan fed by
     the device prefetcher; dispatch="per_round" keeps the seed-style loop
     (one dispatch per round).  `mesh` enables shard_map execution (scan
     dispatch only).  wire="packed" moves the cut-layer collectives as
     bit-packed codewords (trajectories identical to dense);
-    "packed_duplex" packs the backward error vectors too.
+    "packed_duplex" packs the backward error vectors too.  topology — a
+    core/topology.Topology routing the INL exchange over a multi-hop graph
+    (the default star reproduces the pre-topology behaviour bit for bit;
+    FL/SL validate and reject non-star graphs).
     """
     from repro.core import schemes
     scheme = schemes.get(name)
@@ -82,12 +115,14 @@ def run_scheme(name: str, views, labels, cfg, *, epochs: int,
             raise ValueError("mesh execution needs dispatch='scan'")
         return _run_per_round(scheme, views, labels, cfg, epochs=epochs,
                               batch_size=batch_size, lr=lr, seed=seed,
-                              eval_n=eval_n, wire=wire)
+                              eval_n=eval_n, wire=wire, topology=topology,
+                              meter=meter)
     if dispatch != "scan":
         raise ValueError(f"unknown dispatch {dispatch!r}")
 
     state = scheme.init(cfg, jax.random.PRNGKey(seed), lr=lr)
-    epoch_fn = scheme.make_epoch(cfg, lr=lr, mesh=mesh, wire=wire)
+    epoch_fn = scheme.make_epoch(cfg, lr=lr, mesh=mesh, wire=wire,
+                                 topology=topology)
     bpr = scheme.batches_per_round(cfg)
     views_np, labels_np = np.asarray(views), np.asarray(labels)
     n = labels_np.shape[0]
@@ -115,7 +150,9 @@ def run_scheme(name: str, views, labels, cfg, *, epochs: int,
             yield (np.moveaxis(views_np[:, idx], 0, 2), labels_np[idx],
                    subs)
 
-    meter = bandwidth.BandwidthMeter()
+    meter = bandwidth.BandwidthMeter() if meter is None else meter
+    charges = _round_charges(scheme, cfg, state, batch_size, wire=wire,
+                             topology=topology)
     n_eval = min(eval_n, n)
     ev = jnp.asarray(views_np[:, :n_eval])
     el = jnp.asarray(labels_np[:n_eval])
@@ -128,28 +165,29 @@ def run_scheme(name: str, views, labels, cfg, *, epochs: int,
         if rounds:
             ep_views, ep_labels, ep_rngs = next(items)
             state, _ = epoch_fn(state, ep_views, ep_labels, ep_rngs)
-            meter.add(rounds * scheme.bits_per_round(cfg, state, batch_size))
-            meter.add_measured(rounds * scheme.wire_bytes_per_round(
-                cfg, state, batch_size, wire=wire))
+            _meter_rounds(meter, charges, rounds)
         meter.add(scheme.epoch_overhead_bits(cfg, state))
         meter.add_measured(scheme.epoch_overhead_wire_bytes(cfg, state))
         eval_state = jax.device_get(state) if mesh is not None else state
-        acc = base.evaluate_accuracy(scheme, eval_state, ev, el)
+        acc = base.evaluate_accuracy(scheme, eval_state, ev, el,
+                                     topology=topology, cfg=cfg)
         curve.append(CurvePoint(ep + 1, acc, meter.gbits,
                                 meter.measured_gbits))
     return curve
 
 
 def _run_per_round(scheme, views, labels, cfg, *, epochs, batch_size, lr,
-                   seed, eval_n, wire="dense"):
+                   seed, eval_n, wire="dense", topology=None, meter=None):
     """The seed-style path: one transfer + one jitted dispatch per round.
     Kept verbatim as the throughput baseline (benchmarks/throughput_bench)
     and the semantics reference the scan path is tested against."""
     state = scheme.init(cfg, jax.random.PRNGKey(seed), lr=lr)
-    round_fn = scheme.make_round(cfg, lr=lr, wire=wire)
+    round_fn = scheme.make_round(cfg, lr=lr, wire=wire, topology=topology)
     bpr = scheme.batches_per_round(cfg)
 
-    meter = bandwidth.BandwidthMeter()
+    meter = bandwidth.BandwidthMeter() if meter is None else meter
+    charges = _round_charges(scheme, cfg, state, batch_size, wire=wire,
+                             topology=topology)
     rng = jax.random.PRNGKey(seed + 1)
     n_eval = min(eval_n, labels.shape[0])
     ev = jnp.asarray(views[:, :n_eval])
@@ -168,13 +206,12 @@ def _run_per_round(scheme, views, labels, cfg, *, epochs, batch_size, lr,
             state, metrics = round_fn(
                 state, jnp.asarray(np.stack(group_v)),
                 jnp.asarray(np.stack(group_l)), sub)
-            meter.add(scheme.bits_per_round(cfg, state, batch_size))
-            meter.add_measured(scheme.wire_bytes_per_round(
-                cfg, state, batch_size, wire=wire))
+            _meter_rounds(meter, charges)
             group_v, group_l = [], []
         meter.add(scheme.epoch_overhead_bits(cfg, state))
         meter.add_measured(scheme.epoch_overhead_wire_bytes(cfg, state))
-        acc = base.evaluate_accuracy(scheme, state, ev, el)
+        acc = base.evaluate_accuracy(scheme, state, ev, el,
+                                     topology=topology, cfg=cfg)
         curve.append(CurvePoint(ep + 1, acc, meter.gbits,
                                 meter.measured_gbits))
     return curve
@@ -182,7 +219,14 @@ def _run_per_round(scheme, views, labels, cfg, *, epochs, batch_size, lr,
 
 def run_all(names: Sequence[str], views, labels, cfg, *, epochs: int,
             **kw) -> dict:
-    """Curves for several registered schemes on the same data."""
+    """Curves for several registered schemes on the same data.
+
+    A caller-supplied `meter=` is per RUN: sharing one across schemes
+    would accumulate every earlier scheme's traffic into the later curves'
+    gbits, so it is only accepted for a single-scheme list."""
+    if kw.get("meter") is not None and len(names) > 1:
+        raise ValueError("meter= accumulates across runs; pass it to "
+                         "run_scheme per scheme (or run one scheme)")
     return {n: run_scheme(n, views, labels, cfg, epochs=epochs, **kw)
             for n in names}
 

@@ -14,6 +14,7 @@ import jax
 from repro import optim
 from repro.core import bandwidth, paper_model, sl, wirefmt
 from repro.core import schemes as _schemes
+from repro.core import topology as topology_lib
 from repro.core.schemes import base
 
 
@@ -27,7 +28,11 @@ class SLScheme(base.Scheme):
         return {"client": client, "server": server, "state": state,
                 "opt_c": oc.init(client), "opt_s": osrv.init(server)}
 
-    def make_round(self, cfg, *, lr: float = 2e-3, wire: str = "dense"):
+    def make_round(self, cfg, *, lr: float = 2e-3, wire: str = "dense",
+                   topology=None):
+        # SL's cut is ONE client->server boundary (all conv branches live on
+        # the active client), so only the star topology has a reading here
+        topology_lib.require_star(topology, cfg, scheme=self.name)
         oc, osrv = optim.adam(lr), optim.adam(lr)
         step = sl.make_train_step(
             oc, osrv, link_bits=cfg.link_bits, wire=wire,
@@ -42,18 +47,21 @@ class SLScheme(base.Scheme):
         return round_fn
 
     def make_sharded_round(self, cfg, mesh, *, lr: float = 2e-3,
-                           wire: str = "dense"):
+                           wire: str = "dense", topology=None):
         # SL is sequential client/server by construction; the batch shards
         # over 'data' (params replicated — the base state_shardings default)
         from repro.core import sharded
+        topology_lib.require_star(topology, cfg, scheme=self.name)
         return sharded.make_sl_sharded_round(cfg, mesh, optim.adam(lr),
                                              optim.adam(lr), wire=wire)
 
-    def predict(self, state, views):
+    def predict(self, state, views, topology=None, cfg=None):
         return sl.predict(state["client"], state["server"], state["state"],
                           views)
 
-    def bits_per_round(self, cfg, state, batch_size: int) -> float:
+    def bits_per_round(self, cfg, state, batch_size: int, *,
+                       topology=None) -> float:
+        topology_lib.require_star(topology, cfg, scheme=self.name)
         # activation/error traffic only (eta = 0 cancels the hand-off term)
         p = cfg.num_clients * cfg.d_bottleneck
         N = paper_model.fl_param_count(cfg)
@@ -69,7 +77,7 @@ class SLScheme(base.Scheme):
                                        cfg.link_bits)
 
     def wire_bytes_per_round(self, cfg, state, batch_size: int, *,
-                             wire: str = "dense") -> float:
+                             wire: str = "dense", topology=None) -> float:
         # J*B deterministic cut d_b-vectors to the server, error vectors
         # back — same per-vector wire encoding as INL's exchange
         return wirefmt.round_wire_bytes(

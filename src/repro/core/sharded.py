@@ -60,6 +60,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core import linkmodel, losses, paper_model, wirefmt
+from repro.core import topology as topology_lib
 from repro.core.inl import INLParams
 from repro.kernels import ops
 
@@ -102,17 +103,31 @@ def _psum(tree, axis: str):
 # INL: encoders sharded over 'client', batch over 'data', all_gather fan-in
 # ---------------------------------------------------------------------------
 
-def make_inl_sharded_round(cfg, mesh, optimizer, *, wire: str = "dense"):
+def make_inl_sharded_round(cfg, mesh, optimizer, *, wire: str = "dense",
+                           topology=None):
     """(state, views (1,J,B,H,W,C), labels (1,B), rng) -> (state, metrics),
-    numerically matching core/inl.make_train_step on one device."""
+    numerically matching core/inl.make_train_step on one device.
+
+    A non-star `topology` swaps the fan-in for the graph execution
+    (core/topology.graph_cut_and_ship): each node's cut runs per-shard at
+    its first-hop width (group masks stay SPMD-uniform via the sharded
+    `group_ids` input), the 'client' all_gather remains the one physical
+    collective, and the per-edge re-encoding hops run replicated on the
+    gathered buffer — values exactly the modeled multi-hop network's, so
+    single-device parity holds at the same rtol as the star."""
     check_mesh(mesh, cfg.num_clients)
     wirefmt.resolve_wire(wire, cfg.link_bits)        # fail at build time
+    topo = topology_lib.nontrivial(topology, cfg)
     J, s = cfg.num_clients, cfg.s
     n_c, n_d = axis_size(mesh, "client"), axis_size(mesh, "data")
     d_ax = "data"
     dt = paper_model.compute_dtype(cfg)
+    if topo is None:
+        gid_of_view = (0,) * J
+    else:
+        _, gid_of_view = topology_lib.first_hop_groups(topo, cfg)
 
-    def local_grads(params, enc_state, views, labels, eps, masks):
+    def local_grads(params, enc_state, views, labels, eps, masks, gids):
         def obj_fn(p):
             p = paper_model.cast_compute(p, dt)
             (mu, logvar), new_st = jax.vmap(
@@ -121,10 +136,16 @@ def make_inl_sharded_round(cfg, mesh, optimizer, *, wire: str = "dense"):
             )(p.encoders, enc_state, views.astype(dt))
             # fusion-center fan-in: eq. (5)'s concat as a wire transfer —
             # dense values or packed codewords over the 'client' collective
-            u, rate, u_all = wirefmt.cut_and_ship(
-                None, mu, logvar, eps=eps, link_bits=cfg.link_bits,
-                rate_estimator="sample", wire=wire, axis_name="client",
-                prior=p.priors or {})
+            if topo is None:
+                u, rate, u_all = wirefmt.cut_and_ship(
+                    None, mu, logvar, eps=eps, link_bits=cfg.link_bits,
+                    rate_estimator="sample", wire=wire, axis_name="client",
+                    prior=p.priors or {})
+            else:
+                u, rate, u_all = topology_lib.graph_cut_and_ship(
+                    topo, cfg, mu, logvar, eps, rate_estimator="sample",
+                    wire=wire, prior=p.priors or {}, axis_name="client",
+                    group_ids=gids)
             b_l = u.shape[1]
             u_cat = jnp.moveaxis(u_all, 0, 1).reshape(b_l, J * u.shape[-1])
             joint = paper_model.decoder_apply(p.decoder, u_cat, train=True,
@@ -176,15 +197,19 @@ def make_inl_sharded_round(cfg, mesh, optimizer, *, wire: str = "dense"):
         grads, metrics, new_enc_st = shard_map(
             local_grads, mesh=mesh,
             in_specs=(p_specs, c, P("client", "data"), P("data"),
-                      P("client", "data"), P("data")),
+                      P("client", "data"), P("data"), c),
             out_specs=(p_specs, P(), c),
             check_rep=False,
-        )(params, mstate["encoders"], views, labels, eps, masks)
+        )(params, mstate["encoders"], views, labels, eps, masks,
+          jnp.asarray(gid_of_view, jnp.int32))
         new_params, new_opt = optimizer.update(grads, opt_state, params)
-        p_total = J * cfg.d_bottleneck
-        metrics["bits_sent"] = jnp.asarray(
-            linkmodel.training_step_bits(B, p_total, cfg.link_bits),
-            jnp.float32)
+        if topo is None:
+            p_total = J * cfg.d_bottleneck
+            bits_sent = linkmodel.training_step_bits(B, p_total,
+                                                     cfg.link_bits)
+        else:
+            bits_sent = topology_lib.round_bits(topo, cfg, B)
+        metrics["bits_sent"] = jnp.asarray(bits_sent, jnp.float32)
         return ({"params": new_params, "state": {"encoders": new_enc_st},
                  "opt": new_opt}, metrics)
     return jax.jit(round_fn)

@@ -1,0 +1,528 @@
+"""First-class network topology — the inference graph as a declarative API.
+
+The source paper trains the STAR setting (J measurement nodes, one fusion
+center); the authors' follow-up (In-Network Learning: Distributed Training
+and Inference in Networks, arXiv:2107.03433) generalises INL to arbitrary
+networks where intermediate nodes fuse incoming latents with their own
+observation and forward the result along multi-hop routes.  This module
+makes that graph an explicit object instead of an assumption baked into
+`Scheme.make_round` / `core/sharded.py`'s single all_gather:
+
+    Node  — name + role:
+              "measure"  holds a view, no incoming links (a leaf sensor)
+              "relay"    holds a view AND forwards everything it receives
+              "fuse"     the fusion center (node J+1): decodes, no view
+    Edge  — a directed link src -> dst carrying its own width
+            (`link_bits`, default: cfg.link_bits), wire format
+            (`wire`, core/wirefmt.py, default: the round's wire=) and
+            storage dtype for dense payloads (`dtype`, default: the
+            cfg compute dtype)
+    Topology — nodes + edges, validated on construction: exactly one fuse
+            node (the single sink), acyclic, every measure node reaches the
+            fuse node, and every non-fuse node forwards along exactly ONE
+            outgoing edge (multicast duplicates latents and has no eq.-(5)
+            reading — rejected).
+
+Every non-fuse node observes a view: `views[j]` feeds `view_nodes()[j]`
+(declaration order), so a topology with J view-holding nodes consumes the
+same (J, B, H, W, C) multi-view batch the star does and
+`cfg.num_clients == num_views()` is enforced (`resolve`).
+
+Execution model (`graph_cut_and_ship` — what `core/inl.py` and
+`core/sharded.py` compile the graph to):
+
+  1. every view node encodes its observation and applies the fused cut
+     layer (`kernels/ops.cutlayer`) at its OUTGOING edge's width — nodes
+     sharing a (link_bits, prior) first hop fold into one kernel launch,
+     exactly the star's single launch when the graph is edge-homogeneous;
+  2. edges run in topological order: a relay concatenates the latents it
+     received with its own (eq. (5) applied per hop) and re-encodes the
+     whole payload for its outgoing link — a straight-through
+     re-quantization at the edge's width plus the edge's wire encoding
+     (`wirefmt.relay_hop`).  On an edge-homogeneous graph the re-coding is
+     the identity (the uniform quantizer is idempotent on its own grid),
+     so a dense chain/tree reproduces the star's latents bit for bit;
+  3. the fuse node receives every view node's latent (possibly re-coded by
+     the hops) and decodes the eq.-(5) concatenation as before.  Backward,
+     AD routes each error chunk edge-REVERSED through the same hops — the
+     eq.-(10) split per link, with "packed_duplex" edges quantizing the
+     chunk at every traversal (a genuinely lossier multi-hop error path).
+
+Bandwidth gets a PER-EDGE ledger: an edge's closed-form charge is the
+§III-C two-direction count for the payload it carries
+(2 * batch * |payload| * d_bottleneck * link_bits), its measured bytes come
+from the same `wirefmt.round_wire_bytes` eval_shape accounting the star
+uses — and for `star(J)` both sum to the existing Table-I totals exactly
+(tests/test_topology.py pins it).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from typing import Dict, Optional, Sequence, Tuple
+
+ROLES = ("measure", "relay", "fuse")
+FUSE = "fuse"                     # canonical name of the fusion-center node
+
+
+@dataclass(frozen=True)
+class Node:
+    name: str
+    role: str                     # "measure" | "relay" | "fuse"
+
+
+@dataclass(frozen=True)
+class Edge:
+    src: str
+    dst: str
+    link_bits: Optional[int] = None     # None -> cfg.link_bits
+    wire: Optional[str] = None          # None -> the round's wire=
+    dtype: Optional[str] = None         # None -> cfg compute dtype
+
+    @property
+    def key(self) -> str:
+        return f"{self.src}->{self.dst}"
+
+
+@dataclass(frozen=True)
+class Topology:
+    """A validated single-sink routing graph.  Hashable (usable as a jit
+    static argument and inside a frozen config)."""
+    nodes: Tuple[Node, ...]
+    edges: Tuple[Edge, ...]
+
+    def __post_init__(self):
+        names = [n.name for n in self.nodes]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate node names in {names}")
+        for n in self.nodes:
+            if n.role not in ROLES:
+                raise ValueError(f"node {n.name!r} has unknown role "
+                                 f"{n.role!r}; roles: {ROLES}")
+            if not n.name:
+                raise ValueError("node names must be non-empty")
+        fuse = [n.name for n in self.nodes if n.role == "fuse"]
+        if len(fuse) != 1:
+            raise ValueError(f"a topology needs exactly ONE fuse node "
+                             f"(the single sink); got {fuse or 'none'}")
+        known = set(names)
+        seen = set()
+        out: Dict[str, Edge] = {}
+        for e in self.edges:
+            if e.src not in known or e.dst not in known:
+                raise ValueError(f"edge {e.key} references unknown node(s); "
+                                 f"nodes: {sorted(known)}")
+            if e.src == e.dst:
+                raise ValueError(f"self-loop {e.key}")
+            if e.key in seen:
+                raise ValueError(f"duplicate edge {e.key}")
+            seen.add(e.key)
+            if e.src in out:
+                raise ValueError(
+                    f"node {e.src!r} has two outgoing edges ({out[e.src].key}"
+                    f", {e.key}); multicast routing duplicates latents and "
+                    "has no eq.-(5) reading — every non-fuse node forwards "
+                    "along exactly one edge")
+            out[e.src] = e
+        (fuse_name,) = fuse
+        if fuse_name in out:
+            raise ValueError(f"the fuse node {fuse_name!r} is the sink; it "
+                             f"cannot have an outgoing edge "
+                             f"({out[fuse_name].key})")
+        indeg = {n.name: 0 for n in self.nodes}
+        for e in self.edges:
+            indeg[e.dst] += 1
+        for n in self.nodes:
+            if n.role == "measure" and indeg[n.name]:
+                raise ValueError(f"measure node {n.name!r} has incoming "
+                                 "edges; sensors are sources — use role="
+                                 "'relay' for a fusing forwarder")
+            if n.role == "relay" and not indeg[n.name]:
+                raise ValueError(f"relay node {n.name!r} receives nothing; "
+                                 "use role='measure' for a leaf")
+        # single out-edge per node => the graph is a union of paths into the
+        # sink iff acyclic; walk each node's unique route and demand it
+        # reaches the fuse node without revisiting anything
+        for n in self.nodes:
+            if n.role == "fuse":
+                continue
+            cur, hops = n.name, 0
+            while cur != fuse_name:
+                if cur not in out:
+                    raise ValueError(f"node {n.name!r} cannot reach the "
+                                     f"fuse node: route dead-ends at "
+                                     f"{cur!r}")
+                cur = out[cur].dst
+                hops += 1
+                if hops > len(self.nodes):
+                    raise ValueError(f"cycle on the route from {n.name!r} "
+                                     "(topologies must be DAGs)")
+
+    # -- structure --------------------------------------------------------
+
+    @property
+    def fuse_node(self) -> str:
+        return next(n.name for n in self.nodes if n.role == "fuse")
+
+    def view_nodes(self) -> Tuple[str, ...]:
+        """View-holding nodes in declaration order: views[j] feeds the j-th
+        name here.  Every measure AND relay node observes a view."""
+        return tuple(n.name for n in self.nodes if n.role != "fuse")
+
+    def num_views(self) -> int:
+        return len(self.view_nodes())
+
+    def out_edge(self, name: str) -> Edge:
+        return next(e for e in self.edges if e.src == name)
+
+    def in_edges(self, name: str) -> Tuple[Edge, ...]:
+        return tuple(e for e in self.edges if e.dst == name)
+
+    def topo_edges(self) -> Tuple[Edge, ...]:
+        """Edges in topological order: an edge appears only after every edge
+        into its source (the order hops execute in)."""
+        done: set = set()
+        ordered = []
+        pending = list(self.edges)
+        while pending:
+            progress = False
+            rest = []
+            for e in pending:
+                if all(i.key in done for i in self.in_edges(e.src)):
+                    ordered.append(e)
+                    done.add(e.key)
+                    progress = True
+                else:
+                    rest.append(e)
+            pending = rest
+            if pending and not progress:     # unreachable post-validation
+                raise ValueError("cyclic edge set")
+        return tuple(ordered)
+
+    def payload(self, edge: Edge) -> Tuple[int, ...]:
+        """View indices whose latents `edge` carries: every view node in the
+        subtree draining through the edge (the source's own latent last —
+        relays append their observation to what they received)."""
+        idx = {name: j for j, name in enumerate(self.view_nodes())}
+        acc: Tuple[int, ...] = ()
+        for e_in in self.in_edges(edge.src):
+            acc = acc + self.payload(e_in)
+        return acc + (idx[edge.src],)
+
+    def levels(self) -> Tuple[Tuple[str, ...], ...]:
+        """Non-fuse nodes grouped by longest hop-distance from a leaf —
+        the per-level schedule the hops (and a real multi-host placement)
+        execute in."""
+        depth: Dict[str, int] = {}
+        for e in self.topo_edges():
+            ins = [depth[i.src] + 1 for i in self.in_edges(e.src)]
+            depth[e.src] = max(ins) if ins else 0
+        if not depth:
+            return ()
+        out = [[] for _ in range(max(depth.values()) + 1)]
+        for name in self.view_nodes():
+            out[depth[name]].append(name)
+        return tuple(tuple(level) for level in out)
+
+    def is_default_star(self) -> bool:
+        """True when this topology IS the implicit star the legacy code
+        paths assume: every view node a measure node wired straight into
+        the fuse node, in declaration order, every edge at the inherited
+        (cfg-level) width/wire/dtype.  Those paths stay bit-identical, so
+        resolvers dispatch them to the pre-topology code."""
+        fuse = self.fuse_node
+        if any(n.role == "relay" for n in self.nodes):
+            return False
+        views = self.view_nodes()
+        if len(self.edges) != len(views):
+            return False
+        for name, e in zip(views, self.edges):
+            if (e.src, e.dst) != (name, fuse):
+                return False
+            if (e.link_bits, e.wire, e.dtype) != (None, None, None):
+                return False
+        return True
+
+    def describe(self) -> str:
+        levels = " | ".join(",".join(lv) for lv in self.levels())
+        return (f"Topology({self.num_views()} views -> {self.fuse_node}; "
+                f"levels {levels}; edges "
+                f"{[e.key for e in self.topo_edges()]})")
+
+
+# ---------------------------------------------------------------------------
+# Constructors
+# ---------------------------------------------------------------------------
+
+def _per_edge_bits(link_bits, n: int):
+    if link_bits is None or isinstance(link_bits, int):
+        return (link_bits,) * n
+    bits = tuple(link_bits)
+    if len(bits) != n:
+        raise ValueError(f"need one link_bits per edge ({n}), got {bits}")
+    return bits
+
+
+def star(J: int, *, link_bits=None) -> Topology:
+    """The paper's setting: J measure nodes, each one hop from the fusion
+    center.  `link_bits` — scalar or per-edge sequence; None inherits
+    cfg.link_bits (and keeps the topology on the legacy fast path)."""
+    if J < 1:
+        raise ValueError(f"star needs J >= 1, got {J}")
+    bits = _per_edge_bits(link_bits, J)
+    nodes = tuple(Node(f"m{j}", "measure") for j in range(J)) \
+        + (Node(FUSE, "fuse"),)
+    edges = tuple(Edge(f"m{j}", FUSE, link_bits=bits[j]) for j in range(J))
+    return Topology(nodes, edges)
+
+
+def chain(J: int, *, link_bits=None) -> Topology:
+    """A line: m0 -> r1 -> ... -> r{J-1} -> fuse.  Every hop aggregates the
+    upstream latents with the local view, so the last link carries all J —
+    the bandwidth-extreme opposite of the star."""
+    if J < 1:
+        raise ValueError(f"chain needs J >= 1, got {J}")
+    bits = _per_edge_bits(link_bits, J)
+    nodes = (Node("m0", "measure"),) \
+        + tuple(Node(f"r{j}", "relay") for j in range(1, J)) \
+        + (Node(FUSE, "fuse"),)
+    names = [n.name for n in nodes[:-1]] + [FUSE]
+    edges = tuple(Edge(names[j], names[j + 1], link_bits=bits[j])
+                  for j in range(J))
+    return Topology(nodes, edges)
+
+
+def tree(branching: int, depth: int, *, link_bits=None) -> Topology:
+    """A complete `branching`-ary in-tree of view nodes under the fusion
+    center: `depth` levels, measure leaves at the bottom, relays above.
+    num_views == branching + branching^2 + ... + branching^depth
+    (e.g. tree(2, 2) -> 6 views).  `link_bits` — scalar applied to every
+    edge, or None to inherit."""
+    if branching < 1 or depth < 1:
+        raise ValueError(f"tree needs branching >= 1 and depth >= 1, got "
+                         f"({branching}, {depth})")
+    nodes, edges = [], []
+
+    def grow(parent: str, level: int):
+        for i in range(branching):
+            name = f"{parent}.{i}" if parent != FUSE else f"t{i}"
+            role = "measure" if level == depth else "relay"
+            nodes.append(Node(name, role))
+            edges.append(Edge(name, parent, link_bits=link_bits))
+            if level < depth:
+                grow(name, level + 1)
+
+    grow(FUSE, 1)
+    nodes.append(Node(FUSE, "fuse"))
+    return Topology(tuple(nodes), tuple(edges))
+
+
+# ---------------------------------------------------------------------------
+# Resolution against a config
+# ---------------------------------------------------------------------------
+
+def resolve(topology: Optional[Topology], cfg) -> Topology:
+    """The topology a round runs: the explicit argument, else cfg.topology,
+    else the implicit `star(cfg.num_clients)`.  Validates the view count
+    against cfg."""
+    topo = topology if topology is not None \
+        else getattr(cfg, "topology", None)
+    if topo is None:
+        return star(cfg.num_clients)
+    if topo.num_views() != cfg.num_clients:
+        raise ValueError(
+            f"topology has {topo.num_views()} view nodes but "
+            f"cfg.num_clients == {cfg.num_clients}; every measure/relay "
+            "node observes one of the J views")
+    return topo
+
+
+def nontrivial(topology: Optional[Topology], cfg) -> Optional[Topology]:
+    """`resolve`, then None when the result is the default star — callers
+    dispatch None to the pre-topology code paths, which stay bit-identical
+    (golden trajectories included)."""
+    topo = resolve(topology, cfg)
+    return None if topo.is_default_star() else topo
+
+
+def require_star(topology: Optional[Topology], cfg, *, scheme: str):
+    """Schemes whose exchange has no multi-hop reading (FL's weight
+    transfer, SL's single client->server boundary) accept `topology=` for
+    interface parity but only run the star."""
+    if nontrivial(topology, cfg) is not None:
+        raise ValueError(
+            f"scheme {scheme!r} runs the star topology only (its exchange "
+            "is a single client<->server transaction); multi-hop graphs "
+            "are an INL execution concept")
+
+
+def edge_bits(edge: Edge, cfg) -> int:
+    return cfg.link_bits if edge.link_bits is None else edge.link_bits
+
+
+def edge_wire(edge: Edge, default: str) -> str:
+    return default if edge.wire is None else edge.wire
+
+
+def edge_dtype(edge: Edge, cfg):
+    from repro.core import paper_model
+    if edge.dtype is None:
+        return paper_model.compute_dtype(cfg)
+    try:
+        return paper_model.COMPUTE_DTYPES[edge.dtype]
+    except KeyError:
+        raise ValueError(f"edge {edge.key} has unknown dtype {edge.dtype!r};"
+                         f" known: {sorted(paper_model.COMPUTE_DTYPES)}"
+                         ) from None
+
+
+# ---------------------------------------------------------------------------
+# Per-edge bandwidth: closed forms and measured bytes
+# ---------------------------------------------------------------------------
+
+def round_edge_bits(topo: Topology, cfg, batch_size: int) -> Dict[str, float]:
+    """Closed-form §III-C charge of ONE training round, per edge: the
+    forward activations and backward error vectors for every latent the
+    edge carries — 2 * batch * |payload| * d_bottleneck * link_bits.
+
+    For `star(J)` at inherited widths the J single-latent edges sum to
+    exactly `bandwidth.inl_epoch_bits(J*d_b, batch*J, J, cfg.link_bits)`,
+    the existing Table-I total."""
+    return {e.key: float(2 * batch_size * len(topo.payload(e))
+                         * cfg.d_bottleneck * edge_bits(e, cfg))
+            for e in topo.topo_edges()}
+
+
+def round_edge_wire_bytes(topo: Topology, cfg, batch_size: int, *,
+                          wire: str = "dense") -> Dict[str, float]:
+    """MEASURED bytes of one round, per edge: what the edge's wire encoding
+    actually occupies for its payload (core/wirefmt.round_wire_bytes over
+    the real pack/ship ops), both directions."""
+    from repro.core import wirefmt
+    out = {}
+    for e in topo.topo_edges():
+        n_vec = batch_size * len(topo.payload(e))
+        out[e.key] = float(wirefmt.round_wire_bytes(
+            n_vec, cfg.d_bottleneck, link_bits=edge_bits(e, cfg),
+            wire=edge_wire(e, wire), dtype=edge_dtype(e, cfg))["total"])
+    return out
+
+
+def round_bits(topo: Topology, cfg, batch_size: int) -> float:
+    return float(sum(round_edge_bits(topo, cfg, batch_size).values()))
+
+
+def round_wire_bytes(topo: Topology, cfg, batch_size: int, *,
+                     wire: str = "dense") -> float:
+    return float(sum(round_edge_wire_bytes(topo, cfg, batch_size,
+                                           wire=wire).values()))
+
+
+# ---------------------------------------------------------------------------
+# Graph execution: the compiled sequence of cut + hop launches
+# ---------------------------------------------------------------------------
+
+def first_hop_groups(topo: Topology, cfg):
+    """View nodes grouped by their outgoing edge's link width — each group
+    is ONE fused `ops.cutlayer` launch.  Returns (groups, gid_of_view):
+    groups is a tuple of (gid, link_bits); gid_of_view a tuple assigning
+    every view index its group.  Edge-homogeneous graphs (the default) have
+    a single group — the star's one-launch hot path, unchanged."""
+    by_bits: Dict[int, int] = {}
+    gid_of_view = []
+    for name in topo.view_nodes():
+        b = edge_bits(topo.out_edge(name), cfg)
+        gid_of_view.append(by_bits.setdefault(b, len(by_bits)))
+    groups = tuple((gid, b) for b, gid in sorted(by_bits.items(),
+                                                 key=lambda kv: kv[1]))
+    return groups, tuple(gid_of_view)
+
+
+def graph_cut_and_ship(topo: Topology, cfg, mu, logvar, eps, *,
+                       rate_estimator: str = "sample", wire: str = "dense",
+                       prior: dict = None, backend: str = "auto",
+                       axis_name=None, group_ids=None):
+    """Compile-and-run the inference graph on stacked latents.
+
+    mu/logvar/eps: (J, B, d) per-view-node encoder outputs (J_local rows
+    inside a shard_map body).  Returns (u, rate, u_fused):
+
+      u        (J, B, d)  each node's OWN cut-layer output (first-hop
+                          width) — branch heads and the rate read this;
+      rate     (J, B)     the eq.-(6) rate term per node;
+      u_fused  (J, B, d)  the latents as the fuse node RECEIVES them after
+                          every hop's re-coding, in view-node order —
+                          eq. (5) concatenates them (all J rows when
+                          `axis_name` gathers over a 'client' mesh axis).
+
+    Stage 1 runs one fused cutlayer per first-hop width group (ONE launch
+    for edge-homogeneous graphs).  Heterogeneous groups run per group: on
+    the single-device path (group_ids=None) each launch takes exactly its
+    group's row slice (static indices — no wasted compute); inside
+    shard_map pass the (J_local,) `group_ids` slice and every launch runs
+    the full local block with a per-node mask select, which is
+    SPMD-uniform across shards.  Stage 2
+    gathers over `axis_name` when given (the fan-in collective) and then
+    applies every edge in topological order via `wirefmt.relay_hop`:
+    straight-through re-quantization at the edge's width + the edge's wire
+    encoding, to exactly the payload rows the edge carries.  Backward, AD
+    reverses the edge sequence — each node's error chunk traverses its
+    route's hops transposed (duplex edges quantize it per hop).
+
+    On a mesh the hops run replicated on the post-gather buffer: the
+    VALUES are exactly the modeled multi-hop network's, while the physical
+    collective stays one all_gather (per-edge point-to-point placement is
+    the multi-host follow-up; the per-edge meter charges the modeled
+    links, same convention as the duplex backward in core/wirefmt.py)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import wirefmt
+    from repro.kernels import ops
+
+    prior = prior or {}
+    groups, gid_of_view = first_hop_groups(topo, cfg)
+    pmu, plv = prior.get("mu"), prior.get("logvar")
+    if len(groups) == 1:
+        u, rate = ops.cutlayer(mu, logvar, eps, link_bits=groups[0][1],
+                               rate_estimator=rate_estimator, prior_mu=pmu,
+                               prior_logvar=plv, backend=backend)
+    elif group_ids is None:
+        # single-device: group membership is static — each launch takes
+        # exactly its rows (no masked recompute of the full block)
+        u = jnp.zeros(mu.shape, mu.dtype)
+        rate = jnp.zeros(mu.shape[:-1], jnp.float32)
+        for gid, bits in groups:
+            idx = jnp.asarray([j for j, g in enumerate(gid_of_view)
+                               if g == gid], jnp.int32)
+            ug, rg = ops.cutlayer(
+                mu[idx], logvar[idx], eps[idx], link_bits=bits,
+                rate_estimator=rate_estimator,
+                prior_mu=None if pmu is None else pmu[idx],
+                prior_logvar=None if plv is None else plv[idx],
+                backend=backend)
+            u = u.at[idx].set(ug)
+            rate = rate.at[idx].set(rg)
+    else:
+        # shard_map: the same program must run on every shard, so every
+        # launch covers the full local block and the per-node mask selects
+        u = rate = None
+        for gid, bits in groups:
+            ug, rg = ops.cutlayer(mu, logvar, eps, link_bits=bits,
+                                  rate_estimator=rate_estimator,
+                                  prior_mu=pmu, prior_logvar=plv,
+                                  backend=backend)
+            sel = group_ids == gid
+            u = ug if u is None else jnp.where(sel[:, None, None], ug, u)
+            rate = rg if rate is None else jnp.where(sel[:, None], rg, rate)
+
+    u_fused = jax.lax.all_gather(u, axis_name, axis=0, tiled=True) \
+        if axis_name else u
+    for e in topo.topo_edges():
+        ids = jnp.asarray(topo.payload(e), jnp.int32)
+        hopped = wirefmt.relay_hop(
+            u_fused[ids], link_bits=edge_bits(e, cfg),
+            wire=edge_wire(e, wire), dtype=edge_dtype(e, cfg),
+            backend=backend)
+        u_fused = u_fused.at[ids].set(hopped)
+    return u, rate, u_fused

@@ -156,6 +156,32 @@ def ship(u, *, link_bits: int, wire: str = "dense", axis_name=None,
                  ops.resolve_backend(backend), block_t)
 
 
+def relay_hop(x, *, link_bits: int, wire: str = "dense", dtype=None,
+              backend: str = "auto", block_t: int = None):
+    """One edge traversal of a multi-hop topology (core/topology.py): a
+    relay re-encodes the payload it forwards for ITS outgoing link.
+
+    Forward: straight-through re-quantization of the (already quantized)
+    values at this edge's `link_bits` — the identity when the payload is
+    already on this grid (the uniform quantizer is idempotent), a genuine
+    re-coding when an upstream link was finer — then, for a dense edge
+    narrower than fp32, a straight-through round trip through the edge's
+    storage `dtype`, and finally the edge's wire encoding (`ship`: packed
+    codeword lanes are a lossless re-encoding; "packed_duplex" also
+    quantizes the BACKWARD error chunk at `link_bits` on every traversal,
+    so a b-hop route's eq.-(10) error vector is b-times link-quantized —
+    the multi-hop link model, priced per edge by the topology meter)."""
+    wire, _ = resolve_wire(wire, link_bits)
+    q = ref.quantize_value(x.astype(jnp.float32), link_bits).astype(x.dtype)
+    x = x + jax.lax.stop_gradient(q - x)
+    if wire == "dense" and dtype is not None \
+            and jnp.dtype(dtype) != x.dtype:
+        rt = x.astype(dtype).astype(x.dtype)
+        x = x + jax.lax.stop_gradient(rt - x)
+    return ship(x, link_bits=link_bits, wire=wire, backend=backend,
+                block_t=block_t)
+
+
 # ---------------------------------------------------------------------------
 # cut_and_ship: the fused cut layer with the wire folded into the kernel
 # ---------------------------------------------------------------------------

@@ -1,0 +1,431 @@
+"""First-class network topology (core/topology.py): validation, the
+star/chain/tree constructors, per-edge bandwidth (closed-form AND measured,
+summing to the existing Table-I totals for the star), and the multi-hop
+graph execution behind the Scheme API —
+
+  * `topology=star(J)` (and None) leaves every existing path bit-identical;
+  * an edge-homogeneous dense chain reproduces the star's latents and
+    trajectory BIT-identically (hops re-code on the same quantizer grid);
+  * heterogeneous per-edge `link_bits` ({2, 8} on a 3-node chain) meters
+    per-edge measured bytes == per-edge closed forms exactly;
+  * chain/tree INL trains end-to-end on the fixture; FL/SL validate and
+    reject non-star graphs;
+  * sharded graph rounds match single-device at rtol 1e-4 (forced
+    2-device CI leg).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _schemes_common import BATCH, CFG, fixture_data, trajectory
+
+from repro.core import bandwidth, schemes, wirefmt
+from repro.core import topology as T
+from repro.core.schemes import runner
+
+CHAIN = T.chain(CFG.num_clients)
+ROUNDS = 4
+
+
+# ---------------------------------------------------------------------------
+# Construction + validation
+# ---------------------------------------------------------------------------
+
+def test_constructors_shape():
+    s = T.star(5)
+    assert s.num_views() == 5 and s.is_default_star()
+    assert [e.key for e in s.topo_edges()] == \
+        [f"m{j}->fuse" for j in range(5)]
+    assert all(len(s.payload(e)) == 1 for e in s.edges)
+
+    c = T.chain(5)
+    assert c.num_views() == 5 and not c.is_default_star()
+    assert c.payload(c.topo_edges()[-1]) == (0, 1, 2, 3, 4)
+    assert len(c.levels()) == 5                   # a line: one node a level
+
+    tr = T.tree(2, 2)
+    assert tr.num_views() == 6
+    assert len(tr.levels()) == 2                  # 4 leaves, then 2 relays
+    assert sorted(len(tr.payload(e)) for e in tr.edges) == [1, 1, 1, 1, 3, 3]
+
+
+@pytest.mark.parametrize("bad,match", [
+    # no fuse node
+    (lambda: T.Topology((T.Node("a", "measure"),), ()), "exactly ONE fuse"),
+    # two fuse nodes
+    (lambda: T.Topology((T.Node("f", "fuse"), T.Node("g", "fuse")), ()),
+     "exactly ONE fuse"),
+    # multicast: two outgoing edges
+    (lambda: T.Topology(
+        (T.Node("a", "measure"), T.Node("r", "relay"), T.Node("f", "fuse")),
+        (T.Edge("a", "r"), T.Edge("a", "f"), T.Edge("r", "f"))),
+     "two outgoing"),
+    # cycle between relays
+    (lambda: T.Topology(
+        (T.Node("a", "measure"), T.Node("r1", "relay"),
+         T.Node("r2", "relay"), T.Node("f", "fuse")),
+        (T.Edge("a", "r1"), T.Edge("r1", "r2"), T.Edge("r2", "r1"))),
+     "cycle|reach"),
+    # dead end: measure node with no route
+    (lambda: T.Topology(
+        (T.Node("a", "measure"), T.Node("f", "fuse")), ()),
+     "cannot reach"),
+    # relay that receives nothing
+    (lambda: T.Topology(
+        (T.Node("r", "relay"), T.Node("f", "fuse")), (T.Edge("r", "f"),)),
+     "receives nothing"),
+    # measure node with an incoming edge
+    (lambda: T.Topology(
+        (T.Node("a", "measure"), T.Node("b", "measure"),
+         T.Node("f", "fuse")),
+        (T.Edge("a", "b"), T.Edge("b", "f"))),
+     "incoming"),
+    # unknown node
+    (lambda: T.Topology((T.Node("f", "fuse"),), (T.Edge("x", "f"),)),
+     "unknown node"),
+    # bad role
+    (lambda: T.Topology((T.Node("a", "router"), T.Node("f", "fuse")),
+                        (T.Edge("a", "f"),)), "unknown role"),
+])
+def test_validation_rejects(bad, match):
+    with pytest.raises(ValueError, match=match):
+        bad()
+
+
+def test_resolution_against_cfg():
+    assert T.resolve(None, CFG) == T.star(CFG.num_clients)
+    assert T.nontrivial(None, CFG) is None
+    assert T.nontrivial(T.star(CFG.num_clients), CFG) is None
+    assert T.nontrivial(CHAIN, CFG) is CHAIN
+    # cfg.topology is the fallback the explicit argument overrides
+    cfg_c = dataclasses.replace(CFG, topology=CHAIN)
+    assert T.nontrivial(None, cfg_c) is CHAIN
+    with pytest.raises(ValueError, match="view nodes"):
+        T.resolve(T.chain(3), CFG)
+    with pytest.raises(ValueError, match="star topology only"):
+        T.require_star(CHAIN, CFG, scheme="fl")
+    T.require_star(T.star(CFG.num_clients), CFG, scheme="fl")   # fine
+
+
+# ---------------------------------------------------------------------------
+# Per-edge bandwidth: closed forms and measured bytes
+# ---------------------------------------------------------------------------
+
+def test_star_edges_sum_to_table1_totals_exactly():
+    """star(J)'s per-edge ledger reproduces the existing §III-C totals —
+    closed-form AND measured, for every wire format."""
+    p = CFG.num_clients * CFG.d_bottleneck
+    edges = T.round_edge_bits(T.star(CFG.num_clients), CFG, BATCH)
+    assert sum(edges.values()) == bandwidth.inl_epoch_bits(
+        p, BATCH * CFG.num_clients, CFG.num_clients, CFG.link_bits)
+
+    cfg8 = dataclasses.replace(CFG, link_bits=8)
+    for wire in ("dense", "packed", "packed_duplex"):
+        per_edge = T.round_edge_wire_bytes(T.star(CFG.num_clients), cfg8,
+                                           BATCH, wire=wire)
+        legacy = wirefmt.round_wire_bytes(
+            CFG.num_clients * BATCH, CFG.d_bottleneck, link_bits=8,
+            wire=wire)["total"]
+        assert sum(per_edge.values()) == legacy
+
+
+def test_chain_edges_charge_their_payload():
+    edges = T.round_edge_bits(CHAIN, CFG, BATCH)
+    base = 2 * BATCH * CFG.d_bottleneck * CFG.link_bits
+    assert list(edges.values()) == [base * k
+                                    for k in range(1, CFG.num_clients + 1)]
+
+
+def test_heterogeneous_chain_measured_equals_closed_forms():
+    """The satellite contract: a 3-node chain (2 view nodes -> fuse) with
+    per-edge bits {2, 8} meters per-edge MEASURED bytes == per-edge closed
+    forms under the packed_duplex wire (both directions at the edge's
+    width), at a lane-filling d_bottleneck."""
+    cfg = dataclasses.replace(CFG, num_clients=2, noise_stds=(0.4, 1.0),
+                              d_bottleneck=16)
+    topo = T.chain(2, link_bits=(2, 8))
+    closed = T.round_edge_bits(topo, cfg, BATCH)
+    measured = T.round_edge_wire_bytes(topo, cfg, BATCH,
+                                       wire="packed_duplex")
+    assert set(closed) == {"m0->r1", "r1->fuse"}
+    assert closed["m0->r1"] == 2 * BATCH * 1 * 16 * 2
+    assert closed["r1->fuse"] == 2 * BATCH * 2 * 16 * 8
+    for k in closed:
+        assert measured[k] * 8 == closed[k], k
+    # and the totals the Scheme API reports are these sums
+    s_inl = schemes.get("inl")
+    assert s_inl.bits_per_round(cfg, None, BATCH, topology=topo) == \
+        sum(closed.values())
+    assert s_inl.wire_bytes_per_round(cfg, None, BATCH,
+                                      wire="packed_duplex",
+                                      topology=topo) == \
+        sum(measured.values())
+
+
+def test_meter_edge_ledger_sums_to_totals():
+    m = bandwidth.BandwidthMeter()
+    m.add_edge("a->b", bits=8.0, nbytes=1.0)
+    m.add_edge("b->f", bits=16.0, nbytes=2.0)
+    m.add_edge("a->b", bits=8.0, nbytes=1.0)
+    assert m.edge_bits == {"a->b": 16.0, "b->f": 16.0}
+    assert m.edge_measured_bytes == {"a->b": 2.0, "b->f": 2.0}
+    assert m.total_bits == 32.0 and m.measured_bytes == 4.0
+
+
+def test_table1_rejects_unknown_network():
+    with pytest.raises(ValueError, match="unknown Table-I network"):
+        bandwidth.table1(50_000, "alexnet")
+    assert bandwidth.table1(50_000, "vgg16")["federated"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Graph execution
+# ---------------------------------------------------------------------------
+
+def _latents(J=5, B=8, d=8, bits=32):
+    k = jax.random.PRNGKey(0)
+    mu = jax.random.normal(k, (J, B, d))
+    lv = jnp.full((J, B, d), -1.0)
+    eps = jax.random.normal(jax.random.PRNGKey(1), (J, B, d))
+    return mu, lv, eps
+
+
+def test_homogeneous_chain_is_bitwise_the_star():
+    """Re-coding on the same quantizer grid is the identity, so a dense
+    edge-homogeneous chain delivers the star's latents bit for bit."""
+    mu, lv, eps = _latents()
+    cfg8 = dataclasses.replace(CFG, link_bits=8)
+    for cfg in (CFG, cfg8):
+        u_s, r_s, uf_s = T.graph_cut_and_ship(T.star(5), cfg, mu, lv, eps)
+        u_c, r_c, uf_c = T.graph_cut_and_ship(T.chain(5), cfg, mu, lv, eps)
+        np.testing.assert_array_equal(np.asarray(uf_s), np.asarray(uf_c))
+        np.testing.assert_array_equal(np.asarray(r_s), np.asarray(r_c))
+
+
+def test_heterogeneous_first_hops_quantize_per_edge():
+    """Each node's own latent is cut at ITS outgoing edge's width, and a
+    coarser downstream hop re-codes everything it forwards."""
+    from repro.kernels import ops, ref
+    mu, lv, eps = _latents(J=2)
+    cfg = dataclasses.replace(CFG, num_clients=2, noise_stds=(0.4, 1.0))
+    topo = T.chain(2, link_bits=(8, 2))
+    u, rate, uf = T.graph_cut_and_ship(topo, cfg, mu, lv, eps)
+    u8, _ = ops.cutlayer(mu, lv, eps, link_bits=8)
+    u2, _ = ops.cutlayer(mu, lv, eps, link_bits=2)
+    # node 0 cuts at 8 bits; its latent is then re-coded to the 2-bit grid
+    # by the r1->fuse hop; node 1 cuts at 2 bits (already on that grid)
+    np.testing.assert_array_equal(np.asarray(u[0]), np.asarray(u8[0]))
+    np.testing.assert_array_equal(np.asarray(u[1]), np.asarray(u2[1]))
+    np.testing.assert_array_equal(
+        np.asarray(uf[0]), np.asarray(ref.quantize_value(u8[0], 2)))
+    np.testing.assert_array_equal(np.asarray(uf[1]), np.asarray(u2[1]))
+    # a genuinely different grid than cutting at 2 bits directly would give
+    assert float(jnp.abs(uf[0] - u2[0]).max()) >= 0.0
+
+
+def test_graph_backward_routes_error_chunks():
+    """AD through the hops: every node still receives a finite error chunk
+    (edge-reversed routing), on homogeneous and heterogeneous graphs."""
+    mu, lv, eps = _latents()
+    for topo, cfg in [(T.chain(5), CFG),
+                      (T.chain(5, link_bits=(2, 4, 8, 8, 32)), CFG)]:
+        def f(m):
+            u, r, uf = T.graph_cut_and_ship(topo, cfg, m, lv, eps)
+            return jnp.sum(uf ** 2) + jnp.sum(r)
+        g = jax.grad(f)(mu)
+        assert bool(jnp.isfinite(g).all())
+        assert float(jnp.abs(g).max()) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# The Scheme API on topologies
+# ---------------------------------------------------------------------------
+
+def _inl_trajectory(cfg, topo, wire="dense", rounds=ROUNDS):
+    views, labels = fixture_data()
+    scheme = schemes.get("inl")
+    state = scheme.init(cfg, jax.random.PRNGKey(0))
+    round_fn = scheme.make_round(cfg, wire=wire, topology=topo)
+    v = views[None, :, :BATCH]
+    lab = labels[None, :BATCH]
+    losses = []
+    for i in range(rounds):
+        state, metrics = round_fn(state, v, lab, jax.random.PRNGKey(i))
+        losses.append(float(metrics["loss"]))
+    return losses, state
+
+
+def test_explicit_star_is_bitwise_the_default():
+    """topology=star(J) (and cfg.topology=star) dispatch the legacy path —
+    the golden trajectories cannot move."""
+    want = trajectory("inl")["losses"][:ROUNDS]
+    got, _ = _inl_trajectory(CFG, T.star(CFG.num_clients))
+    assert list(want) == got
+    got_cfg, _ = _inl_trajectory(
+        dataclasses.replace(CFG, topology=T.star(CFG.num_clients)), None)
+    assert list(want) == got_cfg
+
+
+def test_dense_chain_trajectory_is_bitwise_the_star():
+    want = trajectory("inl")["losses"][:ROUNDS]
+    got, state = _inl_trajectory(CFG, CHAIN)
+    assert list(want) == got
+    # at full-precision links (the fixture's link_bits=32, every hop the
+    # identity) predict through the chain matches the star bit for bit
+    views, labels = fixture_data()
+    scheme = schemes.get("inl")
+    p_star = scheme.predict(state, views[:, :BATCH])
+    p_chain = scheme.predict(state, views[:, :BATCH], topology=CHAIN,
+                             cfg=CFG)
+    np.testing.assert_array_equal(np.asarray(p_star), np.asarray(p_chain))
+
+
+def test_graph_predict_models_quantized_delivery():
+    """The documented convention split (core/inl.predict): the star ships
+    UNQUANTIZED latents at inference (seed behaviour, golden-pinned) while
+    the graph path delivers what the narrow links actually carry — at
+    2-bit links the two visibly differ, and the graph result equals
+    decoding the re-quantized latents directly."""
+    from repro.core import inl as inl_lib
+    cfg2 = dataclasses.replace(CFG, link_bits=2)
+    _, state = _inl_trajectory(CFG, None, rounds=2)
+    views, _ = fixture_data()
+    scheme = schemes.get("inl")
+    p_star = scheme.predict(state, views[:, :BATCH])          # unquantized
+    p_chain = scheme.predict(state, views[:, :BATCH],
+                             topology=T.chain(CFG.num_clients), cfg=cfg2)
+    assert float(jnp.abs(p_star - p_chain).max()) > 1e-4
+    # the graph delivery == cut at 2 bits, every hop idempotent after that
+    params, mstate = state["params"], state["state"]
+    (mu, lv), _ = inl_lib._encode_mu_logvar(params, mstate,
+                                            views[:, :BATCH], train=False)
+    from repro.kernels import ref
+    u2 = ref.quantize_value(mu, 2)
+    joint, _ = inl_lib.decode(params, u2, train=False)
+    np.testing.assert_allclose(np.asarray(p_chain),
+                               np.asarray(jax.nn.softmax(joint, -1)),
+                               atol=1e-6)
+
+
+def test_tree_and_heterogeneous_chain_train_end_to_end():
+    from repro.data import multiview
+    cfg6 = dataclasses.replace(
+        CFG, num_clients=6, noise_stds=(0.4, 1.0, 2.0, 3.0, 4.0, 0.7))
+    imgs, labels6 = multiview.make_base_dataset(
+        128, image_shape=CFG.image_shape, seed=0)
+    views6 = jnp.asarray(multiview.make_views(imgs, cfg6.noise_stds))
+    scheme = schemes.get("inl")
+    state = scheme.init(cfg6, jax.random.PRNGKey(0))
+    round_fn = scheme.make_round(cfg6, topology=T.tree(2, 2))
+    v, lab = views6[None, :, :BATCH], jnp.asarray(labels6)[None, :BATCH]
+    losses = []
+    for i in range(ROUNDS):
+        state, metrics = round_fn(state, v, lab, jax.random.PRNGKey(i))
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0], losses
+    het = T.chain(CFG.num_clients, link_bits=(2, 4, 8, 8, 32))
+    losses, _ = _inl_trajectory(CFG, het)
+    assert losses[-1] < losses[0], losses
+
+
+def test_runner_meters_per_edge_and_totals_agree():
+    views, labels = fixture_data()
+    views, labels = np.asarray(views[:, :64]), np.asarray(labels[:64])
+    meter = bandwidth.BandwidthMeter()
+    curve = runner.run_scheme("inl", views, labels, CFG, epochs=2,
+                              batch_size=16, eval_n=32, topology=CHAIN,
+                              meter=meter)
+    assert set(meter.edge_bits) == {e.key for e in CHAIN.edges}
+    assert sum(meter.edge_bits.values()) == meter.total_bits
+    assert sum(meter.edge_measured_bytes.values()) == meter.measured_bytes
+    assert curve[-1].gbits == meter.total_bits / bandwidth.GBIT
+    # dense 32-bit links: measured == accounted per edge, not just in total
+    for k, bits in meter.edge_bits.items():
+        assert meter.edge_measured_bytes[k] * 8 == bits
+    # the star run reproduces the pre-topology curve with a per-edge ledger
+    m_star = bandwidth.BandwidthMeter()
+    c_star = runner.run_scheme("inl", views, labels, CFG, epochs=2,
+                               batch_size=16, eval_n=32, meter=m_star)
+    c_legacy = runner.run_scheme("inl", views, labels, CFG, epochs=2,
+                                 batch_size=16, eval_n=32)
+    assert [p.gbits for p in c_star] == [p.gbits for p in c_legacy]
+    assert len(m_star.edge_bits) == CFG.num_clients
+
+
+@pytest.mark.parametrize("name", ["fl", "sl"])
+def test_star_only_schemes_reject_graphs(name):
+    scheme = schemes.get(name)
+    with pytest.raises(ValueError, match="star topology only"):
+        scheme.make_round(CFG, topology=CHAIN)
+    with pytest.raises(ValueError, match="star topology only"):
+        scheme.bits_per_round(CFG, None, BATCH, topology=CHAIN)
+    # the explicit star is fine
+    assert scheme.bits_per_round(CFG, trajectory(name)["state"], BATCH,
+                                 topology=T.star(CFG.num_clients)) > 0
+
+
+# ---------------------------------------------------------------------------
+# Sharded graph execution (forced 2-device CI leg)
+# ---------------------------------------------------------------------------
+
+multi_device = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=2")
+
+
+def _sharded_trajectory(cfg, topo, mesh, views, labels, wire="dense"):
+    scheme = schemes.get("inl")
+    state = scheme.init(cfg, jax.random.PRNGKey(0))
+    state = jax.device_put(state, scheme.state_shardings(cfg, state, mesh))
+    round_fn = scheme.make_sharded_round(cfg, mesh, wire=wire,
+                                         topology=topo)
+    v = views[None, :, :BATCH]
+    lab = labels[None, :BATCH]
+    losses = []
+    for i in range(ROUNDS):
+        state, metrics = round_fn(state, v, lab, jax.random.PRNGKey(i))
+        losses.append(float(metrics["loss"]))
+    return losses
+
+
+@multi_device
+def test_sharded_chain_matches_single_device():
+    """Graph rounds on the ('client','data') mesh track the single-device
+    trajectory at the same rtol as the star — both mesh layouts."""
+    import warnings
+    from jax.sharding import Mesh
+    from repro.launch import mesh as mesh_lib
+    views, labels = fixture_data()
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        mesh_d = mesh_lib.make_inl_host_mesh(CFG.num_clients)  # data axis
+    want, _ = _inl_trajectory(CFG, CHAIN)
+    got = _sharded_trajectory(CFG, CHAIN, mesh_d, views, labels)
+    np.testing.assert_allclose(got, want, rtol=1e-4)
+
+    # client-sharded: J=4 divides the 2-device client axis; heterogeneous
+    # first hops exercise the SPMD group masks
+    cfg4 = dataclasses.replace(CFG, num_clients=4,
+                               noise_stds=(0.4, 1.0, 2.0, 3.0))
+    from repro.data import multiview
+    imgs, labs4 = multiview.make_base_dataset(
+        128, image_shape=CFG.image_shape, seed=0)
+    views4 = jnp.asarray(multiview.make_views(imgs, cfg4.noise_stds))
+    mesh_c = Mesh(np.array(jax.devices()[:2]).reshape(2, 1),
+                  ("client", "data"))
+    for topo in (T.chain(4), T.chain(4, link_bits=(2, 4, 8, 8))):
+        scheme = schemes.get("inl")
+        state = scheme.init(cfg4, jax.random.PRNGKey(0))
+        round_fn = scheme.make_round(cfg4, topology=topo)
+        v, lab = views4[None, :, :BATCH], jnp.asarray(labs4)[None, :BATCH]
+        want = []
+        for i in range(ROUNDS):
+            state, m = round_fn(state, v, lab, jax.random.PRNGKey(i))
+            want.append(float(m["loss"]))
+        got = _sharded_trajectory(cfg4, topo, mesh_c, views4,
+                                  jnp.asarray(labs4))
+        np.testing.assert_allclose(got, want, rtol=1e-4,
+                                   err_msg=f"{topo.describe()}")
