@@ -11,6 +11,10 @@
 #   topology  topology_bench     star vs chain vs tree: per-edge bytes
 #                                (asserted == closed forms) + round
 #                                wall-clock per topology
+#   links     links_bench        unreliable links: accuracy-vs-erasure per
+#                                scheme (asserted: INL's partial fusion
+#                                beats the single-uplink schemes at 0.3)
+#                                + delivered-vs-offered training bandwidth
 #   throughput throughput_bench  end-to-end runner throughput: per-round
 #                                dispatch vs whole-epoch scan+prefetch vs
 #                                shard_map (forced 2-device subprocess)
@@ -26,7 +30,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma list: table1,curves,kernels,wire,topology,"
-                         "throughput,roofline")
+                         "links,throughput,roofline")
     ap.add_argument("--epochs", type=int, default=3,
                     help="epochs for the accuracy curves (CPU-sized)")
     args = ap.parse_args()
@@ -51,6 +55,10 @@ def main() -> None:
     if want("topology"):
         from benchmarks import topology_bench
         topology_bench.main([])
+        sys.stdout.flush()
+    if want("links"):
+        from benchmarks import links_bench
+        links_bench.main([])
         sys.stdout.flush()
     if want("curves"):
         from benchmarks import accuracy_curves

@@ -40,6 +40,17 @@ class PaperExperimentConfig:
     # to the pre-topology star; explicit `topology=` arguments to the
     # Scheme API override this field per call.
     topology: object = None
+    # unreliable-network training (core/linkfault.py): per-round
+    # probability that each view node's transmission is dropped during
+    # TRAINING on top of any per-edge LinkModel erasures — the node-dropout
+    # curriculum that teaches the fusion center to degrade gracefully.
+    # 0.0 (default) keeps every code path bit-identical to the pre-fault
+    # graph unless an edge carries a LinkModel.
+    edge_dropout: float = 0.0
+    # straggler deadline: when set (milliseconds) and edges carry latency/
+    # bandwidth models, the fusion center fuses whatever arrived within
+    # the deadline and masks the rest (fuse-what-arrived semantics).
+    fusion_deadline_ms: object = None
     # experiment 1 partitions data per scheme; experiment 2 shares it
     experiment: int = 1
     dataset_size: int = 50_000

@@ -80,11 +80,23 @@ class BandwidthMeter:
     (core/topology.py): `add_edge` charges one named link on both ledgers
     at once, accumulating `edge_bits` / `edge_measured_bytes` alongside the
     totals — for `star(J)` the per-edge charges sum to exactly the Table-I
-    totals the scalar `add` path produces."""
+    totals the scalar `add` path produces.
+
+    Unreliable links (core/linkfault.py) split each ledger further into
+    OFFERED vs DELIVERED: `add` / `add_measured` / `add_edge` charge what
+    the schedule put on the links (SL's bounded retries re-offer the
+    round's exchange per attempt), while `add_delivered` accrues what the
+    consumer actually used (the latent chunks that reached the fusion in
+    time, the FedAvg uploads that arrived, the SL rounds that ran).  On a
+    fault-free run the runner credits delivered == offered, so
+    `delivery_ratio` is exactly 1.0 and drops with the network."""
     total_bits: float = 0.0
     measured_bytes: float = 0.0
     edge_bits: Dict[str, float] = field(default_factory=dict)
     edge_measured_bytes: Dict[str, float] = field(default_factory=dict)
+    delivered_bits: float = 0.0
+    delivered_measured_bytes: float = 0.0
+    edge_delivered_bits: Dict[str, float] = field(default_factory=dict)
 
     def add(self, bits: float) -> None:
         self.total_bits += float(bits)
@@ -101,6 +113,16 @@ class BandwidthMeter:
         self.add(bits)
         self.add_measured(nbytes)
 
+    def add_delivered(self, *, bits: float = 0.0, nbytes: float = 0.0,
+                      edge: str = None) -> None:
+        """Credit traffic the consumer actually used (<= the offered
+        charge of the same transmission; per edge when named)."""
+        self.delivered_bits += float(bits)
+        self.delivered_measured_bytes += float(nbytes)
+        if edge is not None:
+            self.edge_delivered_bits[edge] = \
+                self.edge_delivered_bits.get(edge, 0.0) + float(bits)
+
     @property
     def gbits(self) -> float:
         return self.total_bits / GBIT
@@ -112,6 +134,17 @@ class BandwidthMeter:
     @property
     def measured_gbits(self) -> float:
         return self.measured_bits / GBIT
+
+    @property
+    def delivered_gbits(self) -> float:
+        return self.delivered_bits / GBIT
+
+    @property
+    def delivery_ratio(self) -> float:
+        """Delivered / offered accounted bits; 1.0 on an idle meter (and
+        on any fault-free run — the runner credits both ledgers equally)."""
+        return (self.delivered_bits / self.total_bits
+                if self.total_bits else 1.0)
 
 
 # the ISSUE/roadmap name for the measured meter

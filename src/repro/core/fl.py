@@ -74,22 +74,53 @@ def make_one_client(optimizer, *, compute_dtype: str = "fp32"):
     return one_client
 
 
-def make_round(cfg, optimizer, local_steps: int):
+def make_round(cfg, optimizer, local_steps: int, *, faulty: bool = False):
     """One FedAvg round, jitted: local_steps on all J clients in parallel,
     then weight averaging.  client_data: (J, local_steps, B, J, H*W*C-shaped
-    views...) — see examples/compare_schemes.py for the packing helper."""
+    views...) — see examples/compare_schemes.py for the packing helper.
+
+    faulty=True returns a round_fn taking an extra (J,) boolean `mask`
+    (core/linkfault.client_delivery_mask): clients whose uplink dropped
+    are masked out of the average (the server averages the weights that
+    ARRIVED and re-broadcasts); when every upload is lost the round keeps
+    the previous global model.  With an all-ones mask the masked average
+    is sum(x)/J — bitwise the unfaulted jnp.mean."""
     one_client = make_one_client(
         optimizer, compute_dtype=getattr(cfg, "compute_dtype", "fp32"))
 
+    if not faulty:
+        @jax.jit
+        def round_fn(stacked_params, stacked_state, stacked_opt, views,
+                     labels, rngs):
+            """views: (J, local_steps, J, B, H, W, C); labels: (J, local_steps, B)."""
+            p, s, o, m = jax.vmap(one_client)(stacked_params, stacked_state,
+                                              stacked_opt, views, labels,
+                                              rngs)
+            # ---- server aggregation: plain parameter average, re-broadcast
+            avg = jax.tree.map(lambda x: jnp.mean(x, axis=0), p)
+            J = labels.shape[0]
+            p_new = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (J,) + x.shape).copy(), avg)
+            return p_new, s, o, jax.tree.map(jnp.mean, m)
+        return round_fn
+
     @jax.jit
     def round_fn(stacked_params, stacked_state, stacked_opt, views, labels,
-                 rngs):
-        """views: (J, local_steps, J, B, H, W, C); labels: (J, local_steps, B)."""
+                 rngs, mask):
         p, s, o, m = jax.vmap(one_client)(stacked_params, stacked_state,
                                           stacked_opt, views, labels, rngs)
-        # ---- server aggregation: plain parameter average, re-broadcast
-        avg = jax.tree.map(lambda x: jnp.mean(x, axis=0), p)
         J = labels.shape[0]
+        w = mask.astype(jnp.float32)
+        n = jnp.sum(w)
+
+        def masked_avg(x, old):
+            wx = w.reshape((J,) + (1,) * (x.ndim - 1))
+            avg = jnp.sum(x * wx, axis=0) / jnp.maximum(n, 1.0)
+            # all uploads lost: the server re-broadcasts the previous
+            # global model (every incoming replica holds it identically)
+            return jnp.where(n > 0, avg, old[0].astype(avg.dtype))
+
+        avg = jax.tree.map(masked_avg, p, stacked_params)
         p_new = jax.tree.map(
             lambda x: jnp.broadcast_to(x, (J,) + x.shape).copy(), avg)
         return p_new, s, o, jax.tree.map(jnp.mean, m)

@@ -22,7 +22,8 @@ from typing import Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import bottleneck, linkmodel, losses, paper_model, wirefmt
+from repro.core import (bottleneck, linkfault, linkmodel, losses,
+                        paper_model, wirefmt)
 from repro.core import topology as topology_lib
 
 
@@ -144,7 +145,18 @@ def loss_fn(params: INLParams, state, views, labels, rng, cfg, *,
     width and route the latents through the edges' re-encoding hops in
     topological order before the eq.-(5) concatenation at the fuse node
     (graph_cut_and_ship); the default star keeps this function's
-    pre-topology graph bit for bit."""
+    pre-topology graph bit for bit.
+
+    Unreliable links (core/linkfault.py): when any edge carries a
+    LinkModel, cfg.edge_dropout > 0, or cfg.fusion_deadline_ms is set,
+    a deterministic per-(round, edge) delivery mask drops the views whose
+    route failed this round and the fusion center fuses what arrived
+    (mask + renormalise, `linkfault.partial_fuse`) — eq.-(10) error
+    chunks then flow back only over the surviving reverse edges.  Branch
+    heads and rate terms stay local and unmasked: a cut-off node keeps
+    training its own head."""
+    topo_full = topology_lib.resolve(topology, cfg)
+    faulty = linkfault.active(topo_full, cfg, train=train)
     topo = topology_lib.nontrivial(topology, cfg)
     dt = paper_model.compute_dtype(cfg)
     params_c = paper_model.cast_compute(params, dt)
@@ -162,6 +174,10 @@ def loss_fn(params: INLParams, state, views, labels, rng, cfg, *,
         u, rate, u_joint = topology_lib.graph_cut_and_ship(
             topo, cfg, mu, logvar, eps, rate_estimator=rate_estimator,
             wire=wire, prior=params_c.priors, backend=backend)
+    if faulty:
+        mask = linkfault.round_delivery_mask(rng, topo_full, cfg,
+                                             labels.shape[0], train=train)
+        u_joint = linkfault.partial_fuse(u_joint, mask)
     new_state = {"encoders": new_enc}
     joint, branch = decode(params_c, u, train=train, rng=r_dec,
                            u_joint=u_joint)
@@ -197,8 +213,15 @@ def make_train_step(cfg, optimizer, *, rate_estimator: str = "sample",
     return step
 
 
-def predict(params: INLParams, state, views, *, cfg=None, topology=None):
+def predict(params: INLParams, state, views, *, cfg=None, topology=None,
+            delivery=None):
     """Inference phase (§III-B): deterministic latents (u = mu), soft output.
+
+    delivery — an optional (J,) or (J, B) boolean delivery mask
+    (core/linkfault.py): views whose route dropped or missed the fusion
+    deadline are masked out of the concatenation and the survivors
+    renormalised (fuse-what-arrived).  None is the perfect network —
+    bit-identical to the pre-fault path.
 
     A non-star `topology` (needs `cfg` for the edge widths) routes the
     deterministic latents through the same multi-hop re-encoding the
@@ -216,12 +239,16 @@ def predict(params: INLParams, state, views, *, cfg=None, topology=None):
     if topo is None:
         u, _, _, _ = encode(params, state, views, train=False,
                             sample_latent=False)
-        joint, _ = decode(params, u, train=False)
+        u_joint = None if delivery is None else linkfault.partial_fuse(
+            u, delivery)
+        joint, _ = decode(params, u, train=False, u_joint=u_joint)
         return jax.nn.softmax(joint, axis=-1)
     (mu, logvar), _ = _encode_mu_logvar(params, state, views, train=False)
     u, _, u_fused = topology_lib.graph_cut_and_ship(
         topo, cfg, mu, logvar, jnp.zeros(mu.shape, jnp.float32),
         rate_estimator="none")
+    if delivery is not None:
+        u_fused = linkfault.partial_fuse(u_fused, delivery)
     joint, _ = decode(params, u, train=False, u_joint=u_fused)
     return jax.nn.softmax(joint, axis=-1)
 

@@ -1,0 +1,401 @@
+"""Per-edge link models and graceful degradation under unreliable networks.
+
+The paper's comparison (and our reproduction up to PR 5) assumes every
+latent arrives intact — the wireless/IoT setting it targets never does
+(Gao et al., arXiv:2003.13376 and the hybrid FL/SL wireless optimisation
+literature both evaluate under lossy, heterogeneous links).  This module
+attaches a fault model to `core/topology.Edge` and gives every scheme a
+degrade-gracefully path instead of a crash or silent divergence:
+
+    LinkModel — per-edge unreliability: erasure probability (the whole
+        payload of a (round, edge) transmission is lost), a latency
+        distribution (latency_ms + jitter_ms * Exp(1) per draw), and a
+        bandwidth cap (transmission time = payload bits / bandwidth_bps)
+        for straggler modelling against a fusion deadline.
+
+    Delivery masks — deterministic per-(round, edge) fault draws from
+        FOLDED PRNG keys: every draw is a pure function of (round rng,
+        edge index), so the sharded shard_map rounds, the whole-epoch
+        scan, the per-round dispatch loop and host-side metering all see
+        the SAME faults (sharded == single-device stays bit-identical).
+
+    partial_fuse — the fusion center's fuse-what-arrived semantics: the
+        missing latent chunks are masked out of the eq.-(5) concatenation
+        and the surviving ones renormalised by J / n_delivered, so the
+        decoder input keeps its magnitude statistics.  Backward, AD then
+        routes eq.-(10) error chunks ONLY over the surviving reverse
+        edges (a dropped chunk's cotangent is exactly zero) — the paper's
+        error-vector split restricted to the links that exist this round.
+
+Activation rule: attaching ANY LinkModel to an edge switches the schemes
+onto the fault-aware code paths — a default `LinkModel()` is a modelled
+PERFECT link (its masks are constantly all-ones), which the property
+tests use to pin the fault path bitwise against the baseline.  A
+topology with no LinkModel on any edge (and cfg.edge_dropout == 0, no
+fusion deadline) takes the pre-existing code paths untouched, so the
+golden trajectories cannot move.
+
+Scheme semantics (wired in core/inl.py, core/sharded.py and
+core/schemes/{inl,fl,sl}.py):
+
+    INL  partial fusion as above; node-dropout TRAINING via
+         `cfg.edge_dropout` (each view additionally dropped per round
+         with that probability, so robustness is learned); stragglers
+         via `cfg.fusion_deadline_ms` — views whose route's cumulative
+         latency + transmission time misses the deadline are fused as
+         missing.
+    FL   a dropped client uplink masks that client's weights out of the
+         FedAvg average (the server averages the deltas that arrived and
+         re-broadcasts; if every upload is lost the round keeps the
+         previous model).
+    SL   its single client->server boundary either works or the round is
+         SKIPPED after `max_link_retries` bounded retries (state carried
+         through unchanged) — split learning has no partial-fusion
+         reading.
+
+Delivered-vs-offered: `round_fault_charges` splits one round's bandwidth
+between what the schedule put on the links (offered — SL retries charge
+per attempt) and what the fusion center actually consumed (delivered),
+feeding `BandwidthMeter.add_delivered` in the runner.
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, replace
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# Distinct fold_in salts so fault draws can never collide with the round's
+# own key consumption (loss_fn splits rng; fold_in derives independently).
+_SALT_FAULTS = 0x11_4bed      # per-edge erasure / latency draws
+_SALT_DROPOUT = 0x22_4bed     # cfg.edge_dropout training curriculum
+_SALT_RETRY = 0x33_4bed       # SL bounded-retry attempt draws
+
+FORCE_ERASURE_ENV = "REPRO_FORCE_ERASURE"
+
+
+@dataclass(frozen=True)
+class LinkModel:
+    """Unreliability of one directed link.  Hashable (rides inside the
+    frozen `topology.Edge`, which jit treats as a static).
+
+    erasure        P(the whole (round, edge) payload is lost in flight)
+    latency_ms     mean propagation latency per traversal
+    jitter_ms      scale of the exponential latency tail (stragglers)
+    bandwidth_bps  serialisation cap: tx time = payload bits / cap
+                   (None = infinitely fast link, latency only)
+    """
+    erasure: float = 0.0
+    latency_ms: float = 0.0
+    jitter_ms: float = 0.0
+    bandwidth_bps: Optional[float] = None
+
+    def __post_init__(self):
+        if not 0.0 <= self.erasure < 1.0:
+            raise ValueError(f"erasure must be in [0, 1), got {self.erasure}")
+        if self.latency_ms < 0 or self.jitter_ms < 0:
+            raise ValueError("latency_ms/jitter_ms must be >= 0, got "
+                             f"({self.latency_ms}, {self.jitter_ms})")
+        if self.bandwidth_bps is not None and self.bandwidth_bps <= 0:
+            raise ValueError(f"bandwidth_bps must be > 0, got "
+                             f"{self.bandwidth_bps}")
+
+
+def forced_erasure(default: float = 0.0) -> float:
+    """The REPRO_FORCE_ERASURE override (CI's forced-erasure smoke leg).
+    Unset or empty (matrix legs export it blank) means `default`."""
+    raw = os.environ.get(FORCE_ERASURE_ENV, "")
+    return float(raw) if raw else default
+
+
+def with_links(topo, link) -> "Topology":
+    """A copy of `topo` with LinkModels attached: `link` is one LinkModel
+    for every edge, or a {edge_key: LinkModel} dict (missing keys keep the
+    edge's current model)."""
+    if isinstance(link, LinkModel):
+        link = {e.key: link for e in topo.edges}
+    unknown = set(link) - {e.key for e in topo.edges}
+    if unknown:
+        raise ValueError(f"with_links got models for unknown edge(s) "
+                         f"{sorted(unknown)}; edges: "
+                         f"{[e.key for e in topo.edges]}")
+    edges = tuple(replace(e, link=link.get(e.key, e.link))
+                  for e in topo.edges)
+    return type(topo)(topo.nodes, edges)
+
+
+# ---------------------------------------------------------------------------
+# Activation: which cfg/topology combinations take the fault-aware paths
+# ---------------------------------------------------------------------------
+
+def has_link_models(topo) -> bool:
+    """True when ANY edge carries a LinkModel — even a perfect one (the
+    all-ones-mask property tests rely on a modelled-but-perfect link
+    exercising the fault path)."""
+    return any(e.link is not None for e in topo.edges)
+
+
+def deadline_ms(cfg) -> Optional[float]:
+    return getattr(cfg, "fusion_deadline_ms", None)
+
+
+def edge_dropout(cfg) -> float:
+    return float(getattr(cfg, "edge_dropout", 0.0) or 0.0)
+
+
+def active(topo, cfg, *, train: bool) -> bool:
+    """Whether a round on (topo, cfg) must run the fault-aware path.  False
+    keeps the caller on the pre-fault code bit for bit (goldens)."""
+    if has_link_models(topo):
+        return True
+    return train and edge_dropout(cfg) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Deterministic draws: pure functions of (round rng, edge index)
+# ---------------------------------------------------------------------------
+
+def fault_key(rng):
+    """The per-round fault stream, derived WITHOUT disturbing the round's
+    own key consumption (loss_fn's split(rng) chain is untouched)."""
+    return jax.random.fold_in(rng, _SALT_FAULTS)
+
+
+def _edge_tx_ms(link: Optional[LinkModel], payload_bits: float) -> float:
+    if link is None or link.bandwidth_bps is None:
+        return 0.0
+    return 1e3 * payload_bits / link.bandwidth_bps
+
+
+def _edge_draws(key, i: int, link: Optional[LinkModel], shape=()):
+    """(erased, latency_ms) draws for edge index `i`: both are deterministic
+    in (key, i) — any shard, dispatch mode, or host-side meter folding the
+    same round key reproduces them exactly."""
+    if link is None:
+        return jnp.zeros(shape, bool), jnp.zeros(shape, jnp.float32)
+    ke = jax.random.fold_in(key, 2 * i)
+    kl = jax.random.fold_in(key, 2 * i + 1)
+    erased = (jax.random.uniform(ke, shape) < link.erasure) \
+        if link.erasure > 0 else jnp.zeros(shape, bool)
+    lat = jnp.full(shape, link.latency_ms, jnp.float32)
+    if link.jitter_ms > 0:
+        lat = lat + link.jitter_ms * jax.random.exponential(kl, shape)
+    return erased, lat
+
+
+def _route(topo, name: str):
+    """Edges from view node `name` to the fuse node, with their declaration
+    indices (the fault-draw index space)."""
+    idx = {e.key: i for i, e in enumerate(topo.edges)}
+    out = []
+    cur = name
+    while cur != topo.fuse_node:
+        e = topo.out_edge(cur)
+        out.append((idx[e.key], e))
+        cur = e.dst
+    return out
+
+
+def delivery_mask(key, topo, cfg, *, payload_scale: float = 1.0,
+                  deadline: Optional[float] = None, dropout: float = 0.0,
+                  dropout_key=None, shape=()):
+    """The (J,) + shape boolean delivery mask of one fusion: view j is True
+    iff every edge on its route survived erasure, its cumulative
+    latency + transmission time met `deadline` (store-and-forward per hop;
+    None disables the deadline), and it survived the training `dropout`
+    draw.  `payload_scale` multiplies each edge's closed-form payload bits
+    (batch size for a training round, 1 for a per-request fusion) when a
+    bandwidth cap converts them to transmission time."""
+    from repro.core import topology as topology_lib
+    draws = {}
+    for i, e in enumerate(topo.edges):
+        erased, lat = _edge_draws(key, i, e.link, shape)
+        bits = (payload_scale * len(topo.payload(e))
+                * cfg.d_bottleneck * topology_lib.edge_bits(e, cfg))
+        draws[i] = (erased, lat + _edge_tx_ms(e.link, bits))
+    masks = []
+    for j, name in enumerate(topo.view_nodes()):
+        ok = jnp.ones(shape, bool)
+        t = jnp.zeros(shape, jnp.float32)
+        for i, _e in _route(topo, name):
+            erased, time_ms = draws[i]
+            ok = ok & ~erased
+            t = t + time_ms
+        if deadline is not None:
+            ok = ok & (t <= deadline)
+        if dropout > 0.0:
+            kd = jax.random.fold_in(
+                jax.random.fold_in(dropout_key if dropout_key is not None
+                                   else key, _SALT_DROPOUT), j)
+            ok = ok & (jax.random.uniform(kd, shape) >= dropout)
+        masks.append(ok)
+    return jnp.stack(masks)
+
+
+def round_delivery_mask(rng, topo, cfg, batch_size: int, *, train: bool):
+    """The (J,) per-ROUND mask the training paths consume: link erasures +
+    the fusion deadline (cfg.fusion_deadline_ms) + the cfg.edge_dropout
+    training curriculum.  Pure in (rng, statics) — see module docstring."""
+    return delivery_mask(
+        fault_key(rng), topo, cfg, payload_scale=float(batch_size),
+        deadline=deadline_ms(cfg),
+        dropout=edge_dropout(cfg) if train else 0.0)
+
+
+def sample_delivery_mask(key, topo, cfg, n: int, *,
+                         deadline: Optional[float] = None):
+    """Per-REQUEST masks for inference under faults: (J, n) — each of the
+    n requests draws its own erasures and latencies per edge (payload = a
+    single latent per view), judged against `deadline` (defaults to
+    cfg.fusion_deadline_ms)."""
+    return delivery_mask(fault_key(key), topo, cfg, payload_scale=1.0,
+                         deadline=deadline if deadline is not None
+                         else deadline_ms(cfg), shape=(n,))
+
+
+# ---------------------------------------------------------------------------
+# Partial fusion: mask the missing chunks, renormalise the survivors
+# ---------------------------------------------------------------------------
+
+def partial_fuse(u, mask):
+    """Fuse-what-arrived: u (J, B, d) latents as the fusion center would
+    receive them, mask (J,) per-round or (J, B) per-sample delivery.
+    Missing chunks are zeroed and the survivors scaled by J / n_delivered,
+    preserving the eq.-(5) concatenation's magnitude statistics.
+
+    With an all-ones mask this is multiplication by exactly 1.0 — bitwise
+    the identity (pinned by tests/test_linkfault.py), so a modelled
+    perfect network cannot perturb a trajectory.  Backward, the masked
+    multiply zeroes the dropped chunks' cotangents: eq.-(10) error vectors
+    flow only over the surviving reverse edges, scaled like the forward.
+    An all-dropped fusion yields the zero vector (the decoder sees an
+    empty concatenation) — honest, not special-cased."""
+    J = u.shape[0]
+    m = mask.astype(u.dtype)
+    while m.ndim < u.ndim:
+        m = m[..., None]                       # (J,1,1) or (J,B,1)
+    n = jnp.sum(mask.astype(jnp.float32), axis=0)        # () or (B,)
+    scale = (J / jnp.maximum(n, 1.0)).astype(u.dtype)
+    if scale.ndim:
+        scale = scale[:, None]                 # (B,1) broadcasts over d
+    return u * m * scale
+
+
+# ---------------------------------------------------------------------------
+# FL / SL semantics: one client<->server uplink
+# ---------------------------------------------------------------------------
+
+def uplink_model(topo) -> LinkModel:
+    """FL's weight exchange and SL's cut boundary ride ONE physical
+    client<->server uplink; its model is the worst case over the star's
+    edges (max erasure / latency / jitter, min bandwidth cap)."""
+    links = [e.link for e in topo.edges if e.link is not None]
+    if not links:
+        return LinkModel()
+    caps = [l.bandwidth_bps for l in links if l.bandwidth_bps is not None]
+    return LinkModel(
+        erasure=max(l.erasure for l in links),
+        latency_ms=max(l.latency_ms for l in links),
+        jitter_ms=max(l.jitter_ms for l in links),
+        bandwidth_bps=min(caps) if caps else None)
+
+
+def client_delivery_mask(rng, topo, cfg, *, train: bool):
+    """FL: which of the J client uploads reached the server this round —
+    each client's own uplink erasure plus the training dropout curriculum
+    (the weight exchange has no fusion deadline: FedAvg rounds are
+    synchronous barriers, not deadline fusions)."""
+    return delivery_mask(fault_key(rng), topo, cfg,
+                         dropout=edge_dropout(cfg) if train else 0.0)
+
+
+def attempt_successes(rng, topo, cfg, attempts: int):
+    """SL's bounded retry: (attempts,) independent survival draws of the
+    single uplink (erasure only — a retry re-sends the same payload).
+    The round runs iff ANY attempt succeeds."""
+    link = uplink_model(topo)
+    key = jax.random.fold_in(fault_key(rng), _SALT_RETRY)
+    if link.erasure <= 0:
+        return jnp.ones((attempts,), bool)
+    return jax.random.uniform(key, (attempts,)) >= link.erasure
+
+
+def round_success(rng, topo, cfg, attempts: int):
+    return jnp.any(attempt_successes(rng, topo, cfg, attempts))
+
+
+def request_survival(key, topo, cfg, n: int, *,
+                     deadline: Optional[float] = None):
+    """(n,) per-request survival of the single client->server uplink
+    (FL/SL inference): erasure draw + latency-vs-deadline when a deadline
+    is configured.  Requests that fail yield no prediction — callers fall
+    back to the uninformative uniform distribution."""
+    link = uplink_model(topo)
+    erased, lat = _edge_draws(fault_key(key), 0, link, (n,))
+    ok = ~erased
+    dl = deadline if deadline is not None else deadline_ms(cfg)
+    if dl is not None:
+        bits = cfg.num_clients * cfg.d_bottleneck * cfg.link_bits
+        ok = ok & (lat + _edge_tx_ms(link, float(bits)) <= dl)
+    return ok
+
+
+def degrade_probs(probs, ok):
+    """Replace failed requests' predictions with the uniform distribution
+    (the server answers, but not from this request's data)."""
+    C = probs.shape[-1]
+    return jnp.where(ok[:, None], probs, jnp.full_like(probs, 1.0 / C))
+
+
+# ---------------------------------------------------------------------------
+# Delivered-vs-offered bandwidth: host-side per-round charges
+# ---------------------------------------------------------------------------
+
+def _np(x) -> float:
+    return float(jax.device_get(x))
+
+
+def round_fault_charges(rng, scheme_name: str, topo, cfg, batch_size: int,
+                        charges: Dict) -> Tuple[Dict, Dict]:
+    """One faulty round's (offered, delivered) bandwidth, mirroring the
+    static `charges` structure {edge_key_or_None: (bits, nbytes)}.
+
+    offered — what the schedule put on the links: the nominal charges,
+    except SL where every retry re-offers the round's exchange.
+    delivered — what the consumer actually used: INL charges each edge the
+    fraction of its payload views that reached the fusion on time (their
+    eq.-(10) error chunks return over the same surviving edges, so the
+    fraction applies to both directions); FL counts the full broadcast
+    down plus only the surviving uploads; SL delivers its exchange only
+    when an attempt succeeded.  Draws replay the SAME folded keys the
+    in-graph masks consume, so the meter and the execution agree round by
+    round."""
+    if scheme_name == "inl":
+        mask = jax.device_get(round_delivery_mask(
+            rng, topo, cfg, batch_size, train=True))
+        dlv = {}
+        for e in topo.edges:
+            pay = topo.payload(e)
+            frac = sum(bool(mask[v]) for v in pay) / len(pay)
+            bits, nbytes = charges[e.key]
+            dlv[e.key] = (bits * frac, nbytes * frac)
+        return dict(charges), dlv
+    if scheme_name == "fl":
+        mask = jax.device_get(client_delivery_mask(rng, topo, cfg,
+                                                   train=True))
+        J = cfg.num_clients
+        frac = (J + int(mask.sum())) / (2.0 * J)   # down full, up masked
+        dlv = {k: (b * frac, n * frac) for k, (b, n) in charges.items()}
+        return dict(charges), dlv
+    if scheme_name == "sl":
+        from repro.core import schemes
+        attempts = getattr(schemes.get("sl"), "max_link_retries", 2) + 1
+        oks = jax.device_get(attempt_successes(rng, topo, cfg, attempts))
+        used = int(oks.argmax()) + 1 if oks.any() else attempts
+        ok = bool(oks.any())
+        off = {k: (b * used, n * used) for k, (b, n) in charges.items()}
+        dlv = {k: (b * ok, n * ok) for k, (b, n) in charges.items()}
+        return off, dlv
+    return dict(charges), dict(charges)

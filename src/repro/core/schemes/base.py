@@ -119,6 +119,27 @@ class Scheme:
         the average-quality view; SL: client forward + server decoder)."""
         raise NotImplementedError
 
+    def predict_under_faults(self, state, views, key, topology=None,
+                             cfg=None) -> Any:
+        """`predict` when the topology's links are unreliable
+        (core/linkfault.py): per-request fault draws from `key` decide what
+        the decoding side actually receives.
+
+        Default (FL's central model, SL's client->server boundary): the
+        answer rides ONE uplink — requests whose erasure/deadline draw
+        fails get the uninformative uniform distribution (the server
+        answers, but not from this request's data).  INL overrides with
+        per-sample partial fusion: only the views that failed are masked,
+        the survivors still vote — the graceful-degradation gap the
+        links benchmark measures.  A topology with no LinkModels (and no
+        deadline) reduces to plain `predict` for every scheme."""
+        from repro.core import linkfault
+        from repro.core import topology as topology_lib
+        probs = self.predict(state, views, topology=topology, cfg=cfg)
+        topo = topology_lib.resolve(topology, cfg)
+        ok = linkfault.request_survival(key, topo, cfg, views.shape[1])
+        return linkfault.degrade_probs(probs, ok)
+
     def bits_per_round(self, cfg, state, batch_size: int, *,
                        topology=None) -> float:
         """Bits moved by ONE round, via core/bandwidth.py closed forms (a
@@ -197,4 +218,25 @@ def evaluate_accuracy(scheme: Scheme, state, views, labels,
     while len(_PREDICT_JIT) > _PREDICT_JIT_CAP:
         _PREDICT_JIT.pop(next(iter(_PREDICT_JIT)))
     probs = jitted(state, views)
+    return float((jnp.argmax(probs, axis=-1) == labels).mean())
+
+
+def evaluate_accuracy_under_faults(scheme: Scheme, state, views, labels,
+                                   key, topology=None, cfg=None) -> float:
+    """Top-1 accuracy through `predict_under_faults`: the per-request fault
+    draws come from `key` (a PRNG key — vary it to average over network
+    realisations).  Jitted per (scheme, topology, cfg) like
+    evaluate_accuracy, with the key a traced argument."""
+    import jax.numpy as jnp
+    cache_key = ("faults", scheme.name, topology, cfg)
+    jitted = _PREDICT_JIT.pop(cache_key, None)
+    if jitted is None:
+        def _predict(st, v, k):
+            return scheme.predict_under_faults(st, v, k, topology=topology,
+                                               cfg=cfg)
+        jitted = jax.jit(_predict)
+    _PREDICT_JIT[cache_key] = jitted
+    while len(_PREDICT_JIT) > _PREDICT_JIT_CAP:
+        _PREDICT_JIT.pop(next(iter(_PREDICT_JIT)))
+    probs = jitted(state, views, key)
     return float((jnp.argmax(probs, axis=-1) == labels).mean())

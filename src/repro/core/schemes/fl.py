@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import optim
-from repro.core import bandwidth, fl, paper_model
+from repro.core import bandwidth, fl, linkfault, paper_model
 from repro.core import schemes as _schemes
 from repro.core import topology as topology_lib
 from repro.core.schemes import base
@@ -42,10 +42,16 @@ class FLScheme(base.Scheme):
         # (quantized FedAvg would be a different algorithm), so `wire` is
         # accepted for interface parity and ignored; the weight exchange is
         # a client<->server star by definition, so non-star topologies are
-        # rejected up front.
+        # rejected up front.  A star whose edges carry LinkModels (or
+        # cfg.edge_dropout > 0) IS accepted: dropped uplinks mask their
+        # client's weights out of the FedAvg average
+        # (core/linkfault.client_delivery_mask; all lost keeps the
+        # previous global model).
         topology_lib.require_star(topology, cfg, scheme=self.name)
+        topo_full = topology_lib.resolve(topology, cfg)
+        faulty = linkfault.active(topo_full, cfg, train=True)
         opt = optim.adam(lr)
-        round_impl = fl.make_round(cfg, opt, self.local_steps)
+        round_impl = fl.make_round(cfg, opt, self.local_steps, faulty=faulty)
         J, ls = cfg.num_clients, self.local_steps
 
         @jax.jit
@@ -61,9 +67,14 @@ class FLScheme(base.Scheme):
                 own[:, :, None], (J, ls, J) + own.shape[2:])
             lab = labels.reshape(J, ls, B)
             rngs = jax.random.split(rng, J)
-            params, st, opt_state, metrics = round_impl(
-                state["params"], state["state"], state["opt"],
-                packed, lab, rngs)
+            args = (state["params"], state["state"], state["opt"],
+                    packed, lab, rngs)
+            if faulty:
+                mask = linkfault.client_delivery_mask(rng, topo_full, cfg,
+                                                      train=True)
+                params, st, opt_state, metrics = round_impl(*args, mask)
+            else:
+                params, st, opt_state, metrics = round_impl(*args)
             return ({"params": params, "state": st, "opt": opt_state},
                     metrics)
         return round_fn
@@ -73,7 +84,8 @@ class FLScheme(base.Scheme):
         from repro.core import sharded
         topology_lib.require_star(topology, cfg, scheme=self.name)
         return sharded.make_fl_sharded_round(cfg, mesh, optim.adam(lr),
-                                             self.local_steps)
+                                             self.local_steps,
+                                             topology=topology)
 
     def state_shardings(self, cfg, state, mesh):
         # every FL state leaf is a stacked per-client replica (leading J):

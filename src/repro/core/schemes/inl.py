@@ -16,7 +16,7 @@ the pre-topology code.
 from __future__ import annotations
 
 from repro import optim
-from repro.core import bandwidth, inl, paper_model, wirefmt
+from repro.core import bandwidth, inl, linkfault, paper_model, wirefmt
 from repro.core import schemes as _schemes
 from repro.core import topology as topology_lib
 from repro.core.schemes import base
@@ -74,6 +74,18 @@ class INLScheme(base.Scheme):
     def predict(self, state, views, topology=None, cfg=None):
         return inl.predict(state["params"], state["state"], views,
                            cfg=cfg, topology=topology)
+
+    def predict_under_faults(self, state, views, key, topology=None,
+                             cfg=None):
+        # INL degrades per VIEW, not per request: each sample draws its own
+        # (J,) route-survival mask and the fusion center renormalises over
+        # the latents that arrived (linkfault.partial_fuse) — a lost link
+        # costs one vote, not the prediction
+        topo_full = topology_lib.resolve(topology, cfg)
+        delivery = linkfault.sample_delivery_mask(key, topo_full, cfg,
+                                                  views.shape[1])
+        return inl.predict(state["params"], state["state"], views,
+                           cfg=cfg, topology=topology, delivery=delivery)
 
     def bits_per_round(self, cfg, state, batch_size: int, *,
                        topology=None) -> float:

@@ -31,7 +31,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import bandwidth
+from repro.core import bandwidth, linkfault
+from repro.core import topology as topology_lib
 from repro.core.schemes import base
 from repro.data import multiview, prefetch
 
@@ -41,6 +42,7 @@ class CurvePoint(NamedTuple):
     accuracy: float
     gbits: float                 # cumulative ACCOUNTED bits (§III-C), Gbit
     measured_gbits: float = 0.0  # cumulative MEASURED wire-buffer bits, Gbit
+    delivered_gbits: float = 0.0  # what actually reached its consumer, Gbit
 
 
 @partial(jax.jit, static_argnums=1)
@@ -71,13 +73,43 @@ def _round_charges(scheme, cfg, state, batch_size, *, wire, topology):
                                                topology=topology))}
 
 
-def _meter_rounds(meter, charges, rounds=1):
+def _meter_rounds(meter, charges, rounds=1, delivered=None):
+    """Charge `rounds` rounds of `charges` as offered traffic, and
+    `delivered` (defaults to the same charges — the fault-free case where
+    everything offered arrives) on the delivered ledger."""
     for edge, (bits, nbytes) in charges.items():
         if edge is None:
             meter.add(rounds * bits)
             meter.add_measured(rounds * nbytes)
         else:
             meter.add_edge(edge, bits=rounds * bits, nbytes=rounds * nbytes)
+    for edge, (bits, nbytes) in (charges if delivered is None
+                                 else delivered).items():
+        meter.add_delivered(bits=rounds * bits, nbytes=rounds * nbytes,
+                            edge=edge)
+
+
+def _meter_fault_rounds(meter, scheme, topo_full, cfg, batch_size, charges,
+                        round_keys):
+    """Per-round fault metering: replay each round key's fault draws
+    (linkfault.round_fault_charges folds the SAME keys the in-graph masks
+    consume) and split the round between the offered and delivered
+    ledgers."""
+    for sub in round_keys:
+        off, dlv = linkfault.round_fault_charges(
+            jnp.asarray(sub), scheme.name, topo_full, cfg, batch_size,
+            charges)
+        _meter_rounds(meter, off, delivered=dlv)
+
+
+def _meter_overheads(meter, scheme, cfg, state):
+    """Once-per-epoch charges (SL's weight hand-offs ride a reliable
+    control channel here — charged and delivered in full)."""
+    bits = scheme.epoch_overhead_bits(cfg, state)
+    nbytes = scheme.epoch_overhead_wire_bytes(cfg, state)
+    meter.add(bits)
+    meter.add_measured(nbytes)
+    meter.add_delivered(bits=bits, nbytes=nbytes)
 
 
 def run_scheme(name: str, views, labels, cfg, *, epochs: int,
@@ -153,6 +185,8 @@ def run_scheme(name: str, views, labels, cfg, *, epochs: int,
     meter = bandwidth.BandwidthMeter() if meter is None else meter
     charges = _round_charges(scheme, cfg, state, batch_size, wire=wire,
                              topology=topology)
+    topo_full = topology_lib.resolve(topology, cfg)
+    faulty = linkfault.active(topo_full, cfg, train=True)
     n_eval = min(eval_n, n)
     ev = jnp.asarray(views_np[:, :n_eval])
     el = jnp.asarray(labels_np[:n_eval])
@@ -165,14 +199,20 @@ def run_scheme(name: str, views, labels, cfg, *, epochs: int,
         if rounds:
             ep_views, ep_labels, ep_rngs = next(items)
             state, _ = epoch_fn(state, ep_views, ep_labels, ep_rngs)
-            _meter_rounds(meter, charges, rounds)
-        meter.add(scheme.epoch_overhead_bits(cfg, state))
-        meter.add_measured(scheme.epoch_overhead_wire_bytes(cfg, state))
+            if faulty:
+                # the scan's per-round subkeys ARE the round rngs — replay
+                # their folded fault draws host-side for the two ledgers
+                _meter_fault_rounds(meter, scheme, topo_full, cfg,
+                                    batch_size, charges,
+                                    jax.device_get(ep_rngs))
+            else:
+                _meter_rounds(meter, charges, rounds)
+        _meter_overheads(meter, scheme, cfg, state)
         eval_state = jax.device_get(state) if mesh is not None else state
         acc = base.evaluate_accuracy(scheme, eval_state, ev, el,
                                      topology=topology, cfg=cfg)
         curve.append(CurvePoint(ep + 1, acc, meter.gbits,
-                                meter.measured_gbits))
+                                meter.measured_gbits, meter.delivered_gbits))
     return curve
 
 
@@ -188,6 +228,8 @@ def _run_per_round(scheme, views, labels, cfg, *, epochs, batch_size, lr,
     meter = bandwidth.BandwidthMeter() if meter is None else meter
     charges = _round_charges(scheme, cfg, state, batch_size, wire=wire,
                              topology=topology)
+    topo_full = topology_lib.resolve(topology, cfg)
+    faulty = linkfault.active(topo_full, cfg, train=True)
     rng = jax.random.PRNGKey(seed + 1)
     n_eval = min(eval_n, labels.shape[0])
     ev = jnp.asarray(views[:, :n_eval])
@@ -206,14 +248,17 @@ def _run_per_round(scheme, views, labels, cfg, *, epochs, batch_size, lr,
             state, metrics = round_fn(
                 state, jnp.asarray(np.stack(group_v)),
                 jnp.asarray(np.stack(group_l)), sub)
-            _meter_rounds(meter, charges)
+            if faulty:
+                _meter_fault_rounds(meter, scheme, topo_full, cfg,
+                                    batch_size, charges, [sub])
+            else:
+                _meter_rounds(meter, charges)
             group_v, group_l = [], []
-        meter.add(scheme.epoch_overhead_bits(cfg, state))
-        meter.add_measured(scheme.epoch_overhead_wire_bytes(cfg, state))
+        _meter_overheads(meter, scheme, cfg, state)
         acc = base.evaluate_accuracy(scheme, state, ev, el,
                                      topology=topology, cfg=cfg)
         curve.append(CurvePoint(ep + 1, acc, meter.gbits,
-                                meter.measured_gbits))
+                                meter.measured_gbits, meter.delivered_gbits))
     return curve
 
 

@@ -12,7 +12,7 @@ from __future__ import annotations
 import jax
 
 from repro import optim
-from repro.core import bandwidth, paper_model, sl, wirefmt
+from repro.core import bandwidth, linkfault, paper_model, sl, wirefmt
 from repro.core import schemes as _schemes
 from repro.core import topology as topology_lib
 from repro.core.schemes import base
@@ -21,12 +21,38 @@ from repro.core.schemes import base
 @_schemes.register
 class SLScheme(base.Scheme):
     name = "sl"
+    # bounded retry on the single client->server uplink: a round runs iff
+    # one of (1 + max_link_retries) attempts survives the link's erasure
+    # draw; otherwise the round is SKIPPED (state carried unchanged) — SL
+    # has no partial-fusion reading.  Every attempt is charged as offered
+    # bandwidth (linkfault.round_fault_charges).
+    max_link_retries = 2
 
     def init(self, cfg, key, *, lr: float = 2e-3):
         (client, server), state = sl.init(cfg, key)
         oc, osrv = optim.adam(lr), optim.adam(lr)
         return {"client": client, "server": server, "state": state,
                 "opt_c": oc.init(client), "opt_s": osrv.init(server)}
+
+    def _skip_failed_round(self, cfg, topology, round_fn):
+        """Wrap a round: when the (star) topology models unreliable links,
+        draw the bounded-retry survival from the round rng and carry the
+        state through UNCHANGED on total failure.  A perfect link draws
+        success with certainty, so jnp.where(True, new, old) keeps the
+        legacy trajectory bitwise."""
+        import jax.numpy as jnp
+        topo_full = topology_lib.resolve(topology, cfg)
+        if not linkfault.active(topo_full, cfg, train=True):
+            return round_fn
+        attempts = self.max_link_retries + 1
+
+        def faulty_round(state, views, labels, rng):
+            new_state, metrics = round_fn(state, views, labels, rng)
+            ok = linkfault.round_success(rng, topo_full, cfg, attempts)
+            new_state = jax.tree.map(lambda n, o: jnp.where(ok, n, o),
+                                     new_state, state)
+            return new_state, metrics
+        return faulty_round
 
     def make_round(self, cfg, *, lr: float = 2e-3, wire: str = "dense",
                    topology=None):
@@ -44,7 +70,7 @@ class SLScheme(base.Scheme):
                 state["opt_c"], state["opt_s"], views[0], labels[0], rng)
             return ({"client": client, "server": server, "state": st,
                      "opt_c": opt_c, "opt_s": opt_s}, metrics)
-        return round_fn
+        return self._skip_failed_round(cfg, topology, round_fn)
 
     def make_sharded_round(self, cfg, mesh, *, lr: float = 2e-3,
                            wire: str = "dense", topology=None):
@@ -52,8 +78,9 @@ class SLScheme(base.Scheme):
         # over 'data' (params replicated — the base state_shardings default)
         from repro.core import sharded
         topology_lib.require_star(topology, cfg, scheme=self.name)
-        return sharded.make_sl_sharded_round(cfg, mesh, optim.adam(lr),
-                                             optim.adam(lr), wire=wire)
+        inner = sharded.make_sl_sharded_round(cfg, mesh, optim.adam(lr),
+                                              optim.adam(lr), wire=wire)
+        return self._skip_failed_round(cfg, topology, inner)
 
     def predict(self, state, views, topology=None, cfg=None):
         return sl.predict(state["client"], state["server"], state["state"],

@@ -59,7 +59,7 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
-from repro.core import linkmodel, losses, paper_model, wirefmt
+from repro.core import linkfault, linkmodel, losses, paper_model, wirefmt
 from repro.core import topology as topology_lib
 from repro.core.inl import INLParams
 from repro.kernels import ops
@@ -118,6 +118,8 @@ def make_inl_sharded_round(cfg, mesh, optimizer, *, wire: str = "dense",
     check_mesh(mesh, cfg.num_clients)
     wirefmt.resolve_wire(wire, cfg.link_bits)        # fail at build time
     topo = topology_lib.nontrivial(topology, cfg)
+    topo_full = topology_lib.resolve(topology, cfg)
+    faulty = linkfault.active(topo_full, cfg, train=True)
     J, s = cfg.num_clients, cfg.s
     n_c, n_d = axis_size(mesh, "client"), axis_size(mesh, "data")
     d_ax = "data"
@@ -127,7 +129,8 @@ def make_inl_sharded_round(cfg, mesh, optimizer, *, wire: str = "dense",
     else:
         _, gid_of_view = topology_lib.first_hop_groups(topo, cfg)
 
-    def local_grads(params, enc_state, views, labels, eps, masks, gids):
+    def local_grads(params, enc_state, views, labels, eps, masks, gids,
+                    fmask):
         def obj_fn(p):
             p = paper_model.cast_compute(p, dt)
             (mu, logvar), new_st = jax.vmap(
@@ -147,6 +150,11 @@ def make_inl_sharded_round(cfg, mesh, optimizer, *, wire: str = "dense",
                     wire=wire, prior=p.priors or {}, axis_name="client",
                     group_ids=gids)
             b_l = u.shape[1]
+            if faulty:
+                # fuse-what-arrived: the (J,) mask is replicated (drawn at
+                # global scope from the round rng), so every shard fuses
+                # the same survivors the single-device round does
+                u_all = linkfault.partial_fuse(u_all, fmask)
             u_cat = jnp.moveaxis(u_all, 0, 1).reshape(b_l, J * u.shape[-1])
             joint = paper_model.decoder_apply(p.decoder, u_cat, train=True,
                                               drop_masks=masks)
@@ -191,17 +199,22 @@ def make_inl_sharded_round(cfg, mesh, optimizer, *, wire: str = "dense",
         r_enc, r_dec = jax.random.split(rng)
         eps = jax.random.normal(r_enc, (J, B, cfg.d_bottleneck), jnp.float32)
         masks = paper_model.decoder_dropout_masks(r_dec, cfg.dense_units, B)
+        # delivery mask from the round rng's FOLDED fault stream — the same
+        # draw core/inl.loss_fn and the host-side meter replay
+        fmask = (linkfault.round_delivery_mask(rng, topo_full, cfg, B,
+                                               train=True)
+                 if faulty else jnp.ones((J,), bool))
 
         c = P("client")
         p_specs = INLParams(c, {"dense": P(), "branch_heads": c}, c)
         grads, metrics, new_enc_st = shard_map(
             local_grads, mesh=mesh,
             in_specs=(p_specs, c, P("client", "data"), P("data"),
-                      P("client", "data"), P("data"), c),
+                      P("client", "data"), P("data"), c, P()),
             out_specs=(p_specs, P(), c),
             check_rep=False,
         )(params, mstate["encoders"], views, labels, eps, masks,
-          jnp.asarray(gid_of_view, jnp.int32))
+          jnp.asarray(gid_of_view, jnp.int32), fmask)
         new_params, new_opt = optimizer.update(grads, opt_state, params)
         if topo is None:
             p_total = J * cfg.d_bottleneck
@@ -219,25 +232,47 @@ def make_inl_sharded_round(cfg, mesh, optimizer, *, wire: str = "dense",
 # FL: the J client replicas (params, opt state, local steps) over 'client'
 # ---------------------------------------------------------------------------
 
-def make_fl_sharded_round(cfg, mesh, optimizer, local_steps: int):
+def make_fl_sharded_round(cfg, mesh, optimizer, local_steps: int, *,
+                          topology=None):
     """FedAvg round with the per-client local-step scans running in parallel
     across the 'client' axis; server aggregation is one psum.  The weight
     exchange stays fp32 whatever the wire format (quantizing FedAvg updates
     changes the algorithm); cfg.compute_dtype still applies inside each
-    client's local steps."""
+    client's local steps.
+
+    When the (star) topology carries LinkModels or cfg.edge_dropout > 0,
+    each round draws the same (J,) client delivery mask the single-device
+    round does (core/linkfault.client_delivery_mask on the round rng) and
+    the psum average runs over the uploads that arrived — all lost keeps
+    the previous global model.  An all-ones mask divides by exactly J, so
+    a modelled-perfect network stays bitwise on the legacy trajectory."""
     from repro.core import fl
     check_mesh(mesh, cfg.num_clients)
     J = cfg.num_clients
+    topo_full = topology_lib.resolve(topology, cfg)
+    faulty = linkfault.active(topo_full, cfg, train=True)
     one_client = fl.make_one_client(
         optimizer, compute_dtype=getattr(cfg, "compute_dtype", "fp32"))
 
-    def local_round(params, mstate, opt_state, views, labels, rngs):
+    def local_round(params, mstate, opt_state, views, labels, rngs, mask):
         p, st, opt, m = jax.vmap(one_client)(params, mstate, opt_state,
                                              views, labels, rngs)
-        # server aggregation: mean over ALL J clients = psum of local sums
-        avg = jax.tree.map(
-            lambda x: jax.lax.psum(jnp.sum(x, axis=0), "client") / J, p)
         j_l = labels.shape[0]
+        if not faulty:
+            # server aggregation: mean over ALL J clients = psum of local sums
+            avg = jax.tree.map(
+                lambda x: jax.lax.psum(jnp.sum(x, axis=0), "client") / J, p)
+        else:
+            w = mask.astype(jnp.float32)
+            n = jax.lax.psum(jnp.sum(w), "client")
+
+            def masked_avg(x, old):
+                wx = w.reshape((j_l,) + (1,) * (x.ndim - 1))
+                s = jax.lax.psum(jnp.sum(x * wx, axis=0), "client")
+                return jnp.where(n > 0, s / jnp.maximum(n, 1.0),
+                                 old[0].astype(x.dtype))
+
+            avg = jax.tree.map(masked_avg, p, params)
         p_new = jax.tree.map(
             lambda x: jnp.broadcast_to(x, (j_l,) + x.shape), avg)
         metrics = jax.tree.map(
@@ -247,7 +282,7 @@ def make_fl_sharded_round(cfg, mesh, optimizer, local_steps: int):
     sharded = shard_map(
         local_round, mesh=mesh,
         in_specs=(P("client"), P("client"), P("client"), P("client"),
-                  P("client"), P("client")),
+                  P("client"), P("client"), P("client")),
         out_specs=(P("client"), P("client"), P("client"), P()),
         check_rep=False)
 
@@ -262,8 +297,11 @@ def make_fl_sharded_round(cfg, mesh, optimizer, local_steps: int):
                                   (J, ls, J) + own.shape[2:])
         lab = labels.reshape(J, ls, B)
         rngs = jax.random.split(rng, J)
+        mask = (linkfault.client_delivery_mask(rng, topo_full, cfg,
+                                               train=True)
+                if faulty else jnp.ones((J,), bool))
         p, st, opt, metrics = sharded(state["params"], state["state"],
-                                      state["opt"], packed, lab, rngs)
+                                      state["opt"], packed, lab, rngs, mask)
         return ({"params": p, "state": st, "opt": opt}, metrics)
     return jax.jit(round_fn)
 

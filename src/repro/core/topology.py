@@ -78,6 +78,12 @@ class Edge:
     link_bits: Optional[int] = None     # None -> cfg.link_bits
     wire: Optional[str] = None          # None -> the round's wire=
     dtype: Optional[str] = None         # None -> cfg compute dtype
+    # unreliability model (core/linkfault.LinkModel); None is a PERFECT,
+    # unmodelled link.  Attaching any LinkModel — even a perfect default
+    # one — routes rounds through the fault-aware scheme paths (delivery
+    # masks, partial fusion); it does not change the wire execution, so a
+    # star with link models stays on the legacy transport paths.
+    link: Optional[object] = None
 
     @property
     def key(self) -> str:
@@ -94,7 +100,10 @@ class Topology:
     def __post_init__(self):
         names = [n.name for n in self.nodes]
         if len(set(names)) != len(names):
-            raise ValueError(f"duplicate node names in {names}")
+            dupes = sorted({n for n in names if names.count(n) > 1})
+            raise ValueError(f"duplicate node name(s) {dupes} in {names}; "
+                             "every node needs a unique name — edge keys "
+                             "and the per-view payload map are keyed on it")
         for n in self.nodes:
             if n.role not in ROLES:
                 raise ValueError(f"node {n.name!r} has unknown role "
@@ -103,15 +112,19 @@ class Topology:
                 raise ValueError("node names must be non-empty")
         fuse = [n.name for n in self.nodes if n.role == "fuse"]
         if len(fuse) != 1:
+            roles = {n.name: n.role for n in self.nodes}
             raise ValueError(f"a topology needs exactly ONE fuse node "
-                             f"(the single sink); got {fuse or 'none'}")
+                             f"(the single sink); got "
+                             f"{fuse or 'none'} among nodes {roles}")
         known = set(names)
         seen = set()
         out: Dict[str, Edge] = {}
         for e in self.edges:
             if e.src not in known or e.dst not in known:
-                raise ValueError(f"edge {e.key} references unknown node(s); "
-                                 f"nodes: {sorted(known)}")
+                missing = sorted({e.src, e.dst} - known)
+                raise ValueError(f"edge {e.key} references unknown node(s) "
+                                 f"{missing}; declared nodes: "
+                                 f"{sorted(known)}")
             if e.src == e.dst:
                 raise ValueError(f"self-loop {e.key}")
             if e.key in seen:
@@ -229,7 +242,10 @@ class Topology:
         paths assume: every view node a measure node wired straight into
         the fuse node, in declaration order, every edge at the inherited
         (cfg-level) width/wire/dtype.  Those paths stay bit-identical, so
-        resolvers dispatch them to the pre-topology code."""
+        resolvers dispatch them to the pre-topology code.  LinkModels
+        (`Edge.link`) are deliberately NOT considered: they only produce
+        delivery masks (core/linkfault.py), so a faulty star still runs
+        the legacy transport paths — with partial fusion layered on."""
         fuse = self.fuse_node
         if any(n.role == "relay" for n in self.nodes):
             return False
@@ -331,9 +347,10 @@ def resolve(topology: Optional[Topology], cfg) -> Topology:
         return star(cfg.num_clients)
     if topo.num_views() != cfg.num_clients:
         raise ValueError(
-            f"topology has {topo.num_views()} view nodes but "
-            f"cfg.num_clients == {cfg.num_clients}; every measure/relay "
-            "node observes one of the J views")
+            f"topology has {topo.num_views()} view nodes "
+            f"{list(topo.view_nodes())} but cfg.num_clients == "
+            f"{cfg.num_clients}; every measure/relay node observes one of "
+            "the J views")
     return topo
 
 
@@ -349,11 +366,24 @@ def require_star(topology: Optional[Topology], cfg, *, scheme: str):
     """Schemes whose exchange has no multi-hop reading (FL's weight
     transfer, SL's single client->server boundary) accept `topology=` for
     interface parity but only run the star."""
-    if nontrivial(topology, cfg) is not None:
+    topo = nontrivial(topology, cfg)
+    if topo is not None:
+        relays = [n.name for n in topo.nodes if n.role == "relay"]
+        custom = [e.key for e in topo.edges
+                  if (e.link_bits, e.wire, e.dtype) != (None, None, None)]
+        detail = []
+        if relays:
+            detail.append(f"relay node(s) {relays}")
+        if custom:
+            detail.append(f"per-edge transport override(s) on {custom}")
+        if not detail:
+            detail.append(f"non-star edge(s) "
+                          f"{[e.key for e in topo.edges]}")
         raise ValueError(
             f"scheme {scheme!r} runs the star topology only (its exchange "
-            "is a single client<->server transaction); multi-hop graphs "
-            "are an INL execution concept")
+            f"is a single client<->server transaction) but the given "
+            f"topology has {'; '.join(detail)}; multi-hop graphs are an "
+            "INL execution concept")
 
 
 def edge_bits(edge: Edge, cfg) -> int:

@@ -3,18 +3,36 @@
 The whole-epoch scan (`Scheme.make_epoch`, `launch/steps.make_scan_train_step`)
 turns an epoch into ONE dispatch — which moves the bottleneck to the
 host->device transfer of the epoch's stacked batches.  This module overlaps
-that transfer with the previous epoch's compute: the iterator is pulled
-``size`` items ahead and each item is `jax.device_put` immediately (async on
-accelerators), so by the time the consumer asks for epoch e+1 its buffers are
-already resident — and already laid out with the batch sharding when a mesh
-is in play (`shardings`), so the jitted epoch never re-shards its inputs.
+that transfer with the previous epoch's compute: a producer THREAD pulls the
+iterator up to ``size`` items ahead and `jax.device_put`s each immediately
+(async on accelerators), so by the time the consumer asks for epoch e+1 its
+buffers are already resident — and already laid out with the batch sharding
+when a mesh is in play (`shardings`), so the jitted epoch never re-shards its
+inputs.
+
+Failure containment: an exception anywhere in the producer (the source
+iterator, host-side batch assembly, `device_put`) is captured and RE-RAISED
+on the consumer side at the next pull — the consumer never hangs on a dead
+producer, and the traceback points at the real data-pipeline fault rather
+than a queue timeout.
 """
 from __future__ import annotations
 
-import collections
+import queue
+import threading
 from typing import Any, Iterable, Iterator
 
 import jax
+
+# queue sentinels: exhaustion vs producer fault (the exception rides along)
+_DONE = object()
+
+
+class _Failure:
+    __slots__ = ("exc",)
+
+    def __init__(self, exc: BaseException):
+        self.exc = exc
 
 
 def prefetch_to_device(iterator: Iterable, *, size: int = 2,
@@ -28,9 +46,12 @@ def prefetch_to_device(iterator: Iterable, *, size: int = 2,
     shardings matching the item structure — the layout the jitted consumer
     expects, so no resharding happens at dispatch.
 
-    Pulling the source iterator ahead also overlaps any host-side batch
-    assembly it performs (index/stack) with device compute of the current
-    item — the data-loading boundary the whole-epoch scan needs hidden.
+    The producer runs in a daemon thread, overlapping host-side batch
+    assembly (index/stack) AND the device transfer with device compute of
+    the current item.  If the producer raises, the exception is re-raised
+    here — from the generator, on the consumer's thread — instead of the
+    consumer blocking forever on an empty queue.  Dropping the generator
+    early (``close()``/GC) signals the producer to stop.
     """
     if size < 1:
         raise ValueError(f"prefetch size must be >= 1, got {size}")
@@ -40,15 +61,40 @@ def prefetch_to_device(iterator: Iterable, *, size: int = 2,
             return jax.device_put(item)
         return jax.device_put(item, shardings)
 
-    buf = collections.deque()
-    it = iter(iterator)
-    done = False
-    while True:
-        while not done and len(buf) < size:
+    # maxsize bounds host+device memory: at most `size` items buffered plus
+    # the one the producer is transferring
+    buf: "queue.Queue" = queue.Queue(maxsize=size)
+    stop = threading.Event()
+
+    def _offer(item) -> bool:
+        """put() that gives up when the consumer dropped the generator."""
+        while not stop.is_set():
             try:
-                buf.append(_put(next(it)))
-            except StopIteration:
-                done = True
-        if not buf:
-            return
-        yield buf.popleft()
+                buf.put(item, timeout=0.1)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def _producer():
+        try:
+            for item in iterator:
+                if not _offer(_put(item)):
+                    return
+            _offer(_DONE)
+        except BaseException as exc:  # re-raised consumer-side, never lost
+            _offer(_Failure(exc))
+
+    thread = threading.Thread(target=_producer, name="prefetch_to_device",
+                              daemon=True)
+    thread.start()
+    try:
+        while True:
+            got = buf.get()
+            if got is _DONE:
+                return
+            if isinstance(got, _Failure):
+                raise got.exc
+            yield got
+    finally:
+        stop.set()

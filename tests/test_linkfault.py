@@ -1,0 +1,443 @@
+"""Unreliable-link suite (core/linkfault.py).
+
+The load-bearing property: attaching a PERFECT LinkModel() to every edge
+routes execution through the fault-aware paths, and those paths are
+bit-identical to the legacy fault-free code — all-ones delivery masks
+multiply by exactly 1.0, the masked FedAvg average is exactly jnp.mean,
+SL's jnp.where(True, new, old) is new.  The goldens therefore never need
+to know faults exist.
+
+The CI forced-erasure leg re-runs this file with REPRO_FORCE_ERASURE=0.3;
+the lossy-training tests read `linkfault.forced_erasure(0.3)` so the env
+var genuinely parameterises them (the bitwise-identity tests use explicit
+perfect links and are immune by construction).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _schemes_common import BATCH, CFG, ROUNDS, fixture_data, round_inputs, \
+    trajectory
+
+from repro.core import bandwidth, linkfault, schemes
+from repro.core import topology as T
+from repro.core.schemes import base as schemes_base
+from repro.data import multiview
+
+multi_device = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=2")
+
+RTOL = 1e-4
+PERFECT = linkfault.LinkModel()
+LOSSY = linkfault.LinkModel(erasure=linkfault.forced_erasure(0.3))
+
+
+def _views_for(cfg):
+    views, labels = fixture_data()
+    if cfg.num_clients <= views.shape[0]:
+        return views[:cfg.num_clients], labels
+    imgs, _ = multiview.make_base_dataset(128, image_shape=cfg.image_shape,
+                                          seed=0)
+    return jnp.asarray(multiview.make_views(imgs, cfg.noise_stds)), labels
+
+
+def _run(name, cfg, topo, rounds=3):
+    """`rounds` deterministic rounds; returns (losses, final state)."""
+    views, labels = _views_for(cfg)
+    scheme = schemes.get(name)
+    state = scheme.init(cfg, jax.random.PRNGKey(0))
+    round_fn = scheme.make_round(cfg, topology=topo)
+    v, lab = round_inputs(scheme, cfg, views, labels)
+    losses = []
+    for i in range(rounds):
+        state, metrics = round_fn(state, v, lab, jax.random.PRNGKey(i))
+        losses.append(float(metrics["loss"]))
+    return losses, state
+
+
+def _assert_states_equal(got, want, name):
+    for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_array_equal(
+            np.asarray(g), np.asarray(w),
+            err_msg=f"{name}: perfect links perturbed the state")
+
+
+# ---------------------------------------------------------------------------
+# LinkModel / with_links construction
+# ---------------------------------------------------------------------------
+
+def test_linkmodel_validation():
+    with pytest.raises(ValueError, match="erasure"):
+        linkfault.LinkModel(erasure=1.0)
+    with pytest.raises(ValueError, match="erasure"):
+        linkfault.LinkModel(erasure=-0.1)
+    with pytest.raises(ValueError, match="latency"):
+        linkfault.LinkModel(latency_ms=-1.0)
+    with pytest.raises(ValueError, match="bandwidth"):
+        linkfault.LinkModel(bandwidth_bps=0.0)
+
+
+def test_with_links_attaches_and_names_unknown_edges():
+    star = T.star(3)
+    lossy = linkfault.with_links(star, LOSSY)
+    assert all(e.link == LOSSY for e in lossy.edges)
+    assert linkfault.has_link_models(lossy)
+    assert not linkfault.has_link_models(star)       # original untouched
+    with pytest.raises(ValueError, match=r"\['nope->fuse'\]"):
+        linkfault.with_links(star, {"nope->fuse": LOSSY})
+    # dict form touches only the named edge
+    one = linkfault.with_links(star, {"m0->fuse": LOSSY})
+    assert one.edges[0].link == LOSSY
+    assert one.edges[1].link is None
+
+
+def test_activation_rule():
+    star = T.star(CFG.num_clients)
+    assert not linkfault.active(star, CFG, train=True)
+    assert linkfault.active(linkfault.with_links(star, PERFECT), CFG,
+                            train=True)
+    drop = dataclasses.replace(CFG, edge_dropout=0.2)
+    assert linkfault.active(star, drop, train=True)
+    assert not linkfault.active(star, drop, train=False)   # inference clean
+
+
+# ---------------------------------------------------------------------------
+# Bitwise identity: a modelled-but-perfect network cannot move a trajectory
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ("inl", "fl", "sl"))
+def test_perfect_star_bitwise_identity(name):
+    """Fault path with all-ones masks == the legacy path, bit for bit —
+    against the SAME cached trajectories the golden regression pins."""
+    want = trajectory(name)
+    perfect = linkfault.with_links(T.star(CFG.num_clients), PERFECT)
+    losses, state = _run(name, CFG, perfect, rounds=ROUNDS)
+    np.testing.assert_array_equal(np.asarray(losses),
+                                  np.asarray(want["losses"]),
+                                  err_msg=f"{name}: losses moved")
+    _assert_states_equal(state, want["state"], name)
+
+
+@pytest.mark.parametrize("make_topo", [
+    lambda: T.chain(CFG.num_clients),
+    lambda: T.tree(2, 2),
+], ids=["chain", "tree(2,2)"])
+def test_perfect_graph_bitwise_identity(make_topo):
+    """Same identity on INL's multi-hop graphs (relay-hop path)."""
+    topo = make_topo()
+    cfg = CFG if topo.num_views() == CFG.num_clients else \
+        dataclasses.replace(CFG, num_clients=topo.num_views(),
+                            noise_stds=CFG.noise_stds + (1.5,))
+    want_losses, want_state = _run("inl", cfg, topo)
+    losses, state = _run("inl", cfg, linkfault.with_links(topo, PERFECT))
+    np.testing.assert_array_equal(np.asarray(losses),
+                                  np.asarray(want_losses))
+    _assert_states_equal(state, want_state, "inl/" + topo.edges[0].key)
+
+
+def test_lossy_links_do_change_the_trajectory():
+    star = T.star(CFG.num_clients)
+    want_losses, _ = _run("inl", CFG, star)
+    losses, _ = _run("inl", CFG, linkfault.with_links(star, LOSSY))
+    assert losses != want_losses, \
+        "0.3-erasure links left the trajectory untouched"
+
+
+# ---------------------------------------------------------------------------
+# partial_fuse
+# ---------------------------------------------------------------------------
+
+def test_partial_fuse_all_ones_is_exact_identity():
+    u = jax.random.normal(jax.random.PRNGKey(0), (5, 4, 8))
+    np.testing.assert_array_equal(
+        np.asarray(linkfault.partial_fuse(u, jnp.ones((5,), bool))),
+        np.asarray(u))
+
+
+def test_partial_fuse_renormalises_survivors():
+    J = 4
+    u = jnp.ones((J, 2, 3))
+    mask = jnp.asarray([True, True, False, False])
+    out = np.asarray(linkfault.partial_fuse(u, mask))
+    np.testing.assert_allclose(out[:2], 2.0, rtol=1e-6)  # J/n = 4/2
+    np.testing.assert_array_equal(out[2:], 0.0)
+    # all dropped: the honest zero vector, no NaN from the 0/0 guard
+    zero = np.asarray(linkfault.partial_fuse(u, jnp.zeros((J,), bool)))
+    np.testing.assert_array_equal(zero, 0.0)
+
+
+def test_partial_fuse_per_sample_mask():
+    J, B, d = 3, 4, 2
+    u = jnp.ones((J, B, d))
+    mask = jnp.zeros((J, B), bool).at[:, 0].set(True).at[0, :].set(True)
+    out = np.asarray(linkfault.partial_fuse(u, mask))
+    np.testing.assert_allclose(out[:, 0], 1.0, rtol=1e-6)  # 3 of 3: scale 1
+    np.testing.assert_allclose(out[0, 1:], 3.0, rtol=1e-6)  # 1 of 3 arrived
+    np.testing.assert_array_equal(out[1:, 1:], 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic draws, deadlines, stragglers
+# ---------------------------------------------------------------------------
+
+def test_fault_draws_deterministic_and_key_disjoint():
+    topo = linkfault.with_links(T.star(4), LOSSY)
+    rng = jax.random.PRNGKey(7)
+    a = linkfault.round_delivery_mask(rng, topo, CFG, BATCH, train=True)
+    b = linkfault.round_delivery_mask(rng, topo, CFG, BATCH, train=True)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # a fresh round key draws fresh faults
+    masks = [np.asarray(linkfault.round_delivery_mask(
+        jax.random.PRNGKey(k), topo, CFG, BATCH, train=True))
+        for k in range(32)]
+    assert any(not np.array_equal(masks[0], m) for m in masks[1:])
+
+
+def test_deadline_cuts_stragglers():
+    cfg = CFG
+    slow = linkfault.with_links(
+        T.star(3), linkfault.LinkModel(latency_ms=100.0))
+    # deterministic latency 100ms: a 50ms deadline kills every view, 200ms
+    # passes every view
+    key = jax.random.PRNGKey(0)
+    dead = linkfault.sample_delivery_mask(key, slow, cfg, 8, deadline=50.0)
+    assert not bool(np.asarray(dead).any())
+    ok = linkfault.sample_delivery_mask(key, slow, cfg, 8, deadline=200.0)
+    assert bool(np.asarray(ok).all())
+    # a bandwidth cap converts payload bits into transmission time: 1 bps
+    # cannot ship a latent inside any sane deadline
+    capped = linkfault.with_links(
+        T.star(3), linkfault.LinkModel(bandwidth_bps=1.0))
+    late = linkfault.sample_delivery_mask(key, capped, cfg, 8,
+                                          deadline=1000.0)
+    assert not bool(np.asarray(late).any())
+
+
+def test_chain_routes_compound_erasure():
+    """A view's delivery needs EVERY edge on its route: the chain head
+    (longest route) must fail at least as often as the last hop."""
+    topo = linkfault.with_links(T.chain(4),
+                                linkfault.LinkModel(erasure=0.3))
+    rates = np.mean([np.asarray(linkfault.round_delivery_mask(
+        jax.random.PRNGKey(k), topo, CFG, BATCH, train=False))
+        for k in range(400)], axis=0)
+    assert rates[0] < rates[-1], \
+        f"head view survived {rates[0]:.2f} >= tail {rates[-1]:.2f}"
+    # the tail's single hop should sit near 1 - 0.3
+    assert abs(rates[-1] - 0.7) < 0.1
+
+
+# ---------------------------------------------------------------------------
+# FL: masked FedAvg
+# ---------------------------------------------------------------------------
+
+def _fl_round_with_mask(monkeypatch, mask):
+    cfg = dataclasses.replace(CFG, num_clients=2, noise_stds=(0.4, 2.0))
+    lossy = linkfault.with_links(T.star(2), LOSSY)
+    monkeypatch.setattr(
+        linkfault, "client_delivery_mask",
+        lambda rng, topo, c, train: jnp.asarray(mask))
+    _, state = _run("fl", cfg, lossy, rounds=1)
+    return jax.tree.leaves(state["params"])
+
+
+def test_fl_masked_average_is_linear_in_the_mask(monkeypatch):
+    """With J=2: avg(mask=[1,0]) + avg(mask=[0,1]) == 2 * avg(mask=[1,1])
+    leaf by leaf — the masked average really averages the survivors."""
+    p0 = _fl_round_with_mask(monkeypatch, [True, False])
+    p1 = _fl_round_with_mask(monkeypatch, [False, True])
+    both = _fl_round_with_mask(monkeypatch, [True, True])
+    assert any(not np.allclose(a, b) for a, b in zip(p0, p1)), \
+        "the two clients trained identical params — test is vacuous"
+    for a, b, m in zip(p0, p1, both):
+        np.testing.assert_allclose(np.asarray(a) + np.asarray(b),
+                                   2.0 * np.asarray(m), rtol=1e-5,
+                                   atol=1e-6)
+
+
+def test_fl_all_dropped_keeps_previous_model(monkeypatch):
+    cfg = dataclasses.replace(CFG, num_clients=2, noise_stds=(0.4, 2.0))
+    lossy = linkfault.with_links(T.star(2), LOSSY)
+    monkeypatch.setattr(
+        linkfault, "client_delivery_mask",
+        lambda rng, topo, c, train: jnp.zeros((2,), bool))
+    views, labels = _views_for(cfg)
+    scheme = schemes.get("fl")
+    state = scheme.init(cfg, jax.random.PRNGKey(0))
+    before = jax.tree.map(np.asarray, state["params"])
+    round_fn = scheme.make_round(cfg, topology=lossy)
+    v, lab = round_inputs(scheme, cfg, views, labels)
+    state, _ = round_fn(state, v, lab, jax.random.PRNGKey(0))
+    for g, w in zip(jax.tree.leaves(state["params"]),
+                    jax.tree.leaves(before)):
+        np.testing.assert_array_equal(np.asarray(g), w)
+
+
+# ---------------------------------------------------------------------------
+# SL: bounded retry, round skip
+# ---------------------------------------------------------------------------
+
+def test_sl_round_skip_keeps_state_bitwise():
+    cfg = CFG
+    # erasure 0.999: find a round key whose 3 attempts all fail (virtually
+    # all of them) and one that succeeds, deterministically
+    topo = linkfault.with_links(T.star(cfg.num_clients),
+                                linkfault.LinkModel(erasure=0.999))
+    attempts = schemes.get("sl").max_link_retries + 1
+    assert attempts == 3
+    keys = {bool(linkfault.round_success(jax.random.PRNGKey(k), topo, cfg,
+                                         attempts)): k for k in range(64)}
+    assert False in keys, "no failing key in 64 draws at erasure 0.999?!"
+    views, labels = _views_for(cfg)
+    scheme = schemes.get("sl")
+    state = scheme.init(cfg, jax.random.PRNGKey(0))
+    before = jax.tree.map(np.asarray, state)
+    round_fn = scheme.make_round(cfg, topology=topo)
+    v, lab = round_inputs(scheme, cfg, views, labels)
+    after, _ = round_fn(state, v, lab, jax.random.PRNGKey(keys[False]))
+    for g, w in zip(jax.tree.leaves(after), jax.tree.leaves(before)):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+    if True in keys:        # a surviving round does train
+        trained, _ = round_fn(state, v, lab,
+                              jax.random.PRNGKey(keys[True]))
+        assert any(not np.array_equal(np.asarray(g), np.asarray(w))
+                   for g, w in zip(jax.tree.leaves(trained),
+                                   jax.tree.leaves(before)))
+
+
+def test_sl_retry_accounting():
+    cfg = CFG
+    charges = {None: (1000.0, 125.0)}
+    clean = linkfault.with_links(T.star(cfg.num_clients), PERFECT)
+    off, dlv = linkfault.round_fault_charges(
+        jax.random.PRNGKey(0), "sl", clean, cfg, BATCH, charges)
+    assert off == charges and dlv == charges       # one attempt, delivered
+    lossy = linkfault.with_links(T.star(cfg.num_clients),
+                                 linkfault.LinkModel(erasure=0.9))
+    attempts = schemes.get("sl").max_link_retries + 1
+    for k in range(256):
+        oks = np.asarray(linkfault.attempt_successes(
+            jax.random.PRNGKey(k), lossy, cfg, attempts))
+        if not oks[0] and oks[1]:                  # fail, retry, succeed
+            off, dlv = linkfault.round_fault_charges(
+                jax.random.PRNGKey(k), "sl", lossy, cfg, BATCH, charges)
+            assert off[None][0] == 2000.0          # two attempts offered
+            assert dlv[None][0] == 1000.0          # one exchange delivered
+            return
+    pytest.fail("no fail-then-succeed key found at erasure 0.9")
+
+
+# ---------------------------------------------------------------------------
+# Delivered-vs-offered metering
+# ---------------------------------------------------------------------------
+
+def test_meter_delivery_ratio():
+    m = bandwidth.BandwidthMeter()
+    assert m.delivery_ratio == 1.0                 # idle
+    m.add_edge("m0->fuse", bits=100.0, nbytes=10.0)
+    m.add_delivered(bits=100.0, nbytes=10.0, edge="m0->fuse")
+    assert m.delivery_ratio == 1.0                 # clean round
+    m.add_edge("m1->fuse", bits=100.0, nbytes=10.0)
+    m.add_delivered(bits=40.0, edge="m1->fuse")
+    assert m.delivery_ratio == pytest.approx(0.7)
+    assert m.edge_delivered_bits["m1->fuse"] == 40.0
+
+
+def test_inl_fault_charges_track_the_mask():
+    topo = linkfault.with_links(T.star(3), LOSSY)
+    cfg = dataclasses.replace(CFG, num_clients=3,
+                              noise_stds=CFG.noise_stds[:3])
+    charges = {e.key: (90.0, 9.0) for e in topo.edges}
+    rng = jax.random.PRNGKey(5)
+    off, dlv = linkfault.round_fault_charges(rng, "inl", topo, cfg, BATCH,
+                                             charges)
+    assert off == charges
+    mask = np.asarray(linkfault.round_delivery_mask(rng, topo, cfg, BATCH,
+                                                    train=True))
+    for j, e in enumerate(topo.edges):
+        want = (90.0, 9.0) if mask[j] else (0.0, 0.0)
+        assert dlv[e.key] == want
+
+
+# ---------------------------------------------------------------------------
+# Inference under faults
+# ---------------------------------------------------------------------------
+
+def test_predict_under_faults_clean_equals_predict():
+    views, labels = fixture_data()
+    scheme = schemes.get("inl")
+    state = trajectory("inl")["state"]
+    clean = linkfault.with_links(T.star(CFG.num_clients), PERFECT)
+    a = schemes_base.evaluate_accuracy(scheme, state, views[:, :BATCH],
+                                       labels[:BATCH], cfg=CFG)
+    b = schemes_base.evaluate_accuracy_under_faults(
+        scheme, state, views[:, :BATCH], labels[:BATCH],
+        jax.random.PRNGKey(0), topology=clean, cfg=CFG)
+    assert a == b
+
+
+def test_degraded_requests_fall_back_to_uniform():
+    probs = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(0), (4, 10)))
+    ok = jnp.asarray([True, False, True, False])
+    out = np.asarray(linkfault.degrade_probs(probs, ok))
+    np.testing.assert_array_equal(out[0], np.asarray(probs)[0])
+    np.testing.assert_allclose(out[1], 0.1, rtol=1e-6)
+    np.testing.assert_allclose(out.sum(-1), 1.0, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Training under loss: end-to-end smoke + sharded parity
+# ---------------------------------------------------------------------------
+
+def test_inl_trains_through_lossy_links():
+    """Six rounds over 0.3-erasure links + the dropout curriculum still
+    learn (the e2e smoke the forced-erasure CI leg re-runs at its rate)."""
+    cfg = dataclasses.replace(CFG, edge_dropout=0.2)
+    lossy = linkfault.with_links(T.star(cfg.num_clients), LOSSY)
+    losses, _ = _run("inl", cfg, lossy, rounds=ROUNDS)
+    assert losses[-1] < losses[0], \
+        f"loss did not improve under faults: {losses}"
+
+
+CFG_J2 = dataclasses.replace(CFG, num_clients=2, noise_stds=(0.4, 2.0))
+
+
+@multi_device
+@pytest.mark.parametrize("name", ("inl", "fl"))
+def test_sharded_parity_under_forced_erasure(name):
+    """Fault draws are pure functions of the round rng, so the 2-device
+    shard_map round sees the SAME faults as single-device — trajectories
+    match at the suite's standard rtol despite the lossy network."""
+    from repro.launch import mesh as mesh_lib
+    cfg = CFG_J2 if name == "inl" else \
+        dataclasses.replace(CFG_J2, edge_dropout=0.0)
+    lossy = linkfault.with_links(T.star(2), LOSSY)
+    views, labels = _views_for(cfg)
+    scheme = schemes.get(name)
+    v, lab = round_inputs(scheme, cfg, views, labels)
+
+    def run(round_fn, state):
+        losses = []
+        for i in range(ROUNDS):
+            state, metrics = round_fn(state, v, lab, jax.random.PRNGKey(i))
+            losses.append(float(metrics["loss"]))
+        state = jax.device_get(state)
+        probs = scheme.predict(state, views[:, :BATCH])
+        acc = float((jnp.argmax(probs, -1) == labels[:BATCH]).mean())
+        return np.asarray(losses), acc
+
+    want_losses, want_acc = run(scheme.make_round(cfg, topology=lossy),
+                                scheme.init(cfg, jax.random.PRNGKey(0)))
+    mesh = mesh_lib.make_inl_host_mesh(2)
+    assert mesh.shape["client"] == 2
+    state = scheme.init(cfg, jax.random.PRNGKey(0))
+    state = jax.device_put(state, scheme.state_shardings(cfg, state, mesh))
+    got_losses, got_acc = run(
+        scheme.make_sharded_round(cfg, mesh, topology=lossy), state)
+    np.testing.assert_allclose(
+        got_losses, want_losses, rtol=RTOL,
+        err_msg=f"{name}: sharded faulty trajectory drifted")
+    np.testing.assert_allclose(got_acc, want_acc, rtol=RTOL, atol=1e-6)

@@ -215,3 +215,43 @@ def test_prefetch_preserves_order_and_values():
     for i, it in enumerate(out):
         np.testing.assert_array_equal(np.asarray(it["a"]), items[i]["a"])
         assert int(it["b"]) == i
+
+
+def test_prefetch_reraises_producer_exception():
+    """A fault in the source iterator surfaces on the CONSUMER side — with
+    the good items already buffered still delivered first and the consumer
+    never blocking on the dead producer thread."""
+    from repro.data import prefetch
+
+    def flaky():
+        yield np.zeros((2,))
+        yield np.ones((2,))
+        raise RuntimeError("disk fell over")
+
+    it = prefetch.prefetch_to_device(flaky(), size=2)
+    np.testing.assert_array_equal(np.asarray(next(it)), np.zeros((2,)))
+    np.testing.assert_array_equal(np.asarray(next(it)), np.ones((2,)))
+    with pytest.raises(RuntimeError, match="disk fell over"):
+        next(it)
+
+
+def test_prefetch_reraises_immediate_exception():
+    # producer dies before yielding anything: first pull must raise, not hang
+    from repro.data import prefetch
+
+    def dead():
+        raise ValueError("bad shard spec")
+        yield  # pragma: no cover
+
+    with pytest.raises(ValueError, match="bad shard spec"):
+        next(prefetch.prefetch_to_device(dead()))
+
+
+def test_prefetch_consumer_can_stop_early():
+    # dropping the generator mid-stream releases the producer (no deadlock
+    # on the bounded queue) and keeps already-buffered items correct
+    from repro.data import prefetch
+    items = [np.full((2,), i) for i in range(100)]
+    it = prefetch.prefetch_to_device(iter(items), size=2)
+    assert int(np.asarray(next(it))[0]) == 0
+    it.close()

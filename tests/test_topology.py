@@ -94,6 +94,30 @@ def test_validation_rejects(bad, match):
         bad()
 
 
+def test_validation_errors_name_the_offenders():
+    """The messages are actionable: they carry the exact node/edge that is
+    wrong, not just the rule that was broken."""
+    with pytest.raises(ValueError, match=r"\['dup'\]"):
+        T.Topology((T.Node("dup", "measure"), T.Node("dup", "measure"),
+                    T.Node("f", "fuse")),
+                   (T.Edge("dup", "f"),))
+    with pytest.raises(ValueError, match=r"ghost->f.*\['ghost'\]"):
+        T.Topology((T.Node("f", "fuse"),), (T.Edge("ghost", "f"),))
+    with pytest.raises(ValueError, match="'a'.*two outgoing.*a->r.*a->f"):
+        T.Topology(
+            (T.Node("a", "measure"), T.Node("r", "relay"),
+             T.Node("f", "fuse")),
+            (T.Edge("a", "r"), T.Edge("a", "f"), T.Edge("r", "f")))
+    with pytest.raises(ValueError, match="'stranded'.*dead-ends at 'loner'"):
+        T.Topology(
+            (T.Node("stranded", "measure"), T.Node("loner", "relay"),
+             T.Node("m", "measure"), T.Node("f", "fuse")),
+            (T.Edge("stranded", "loner"), T.Edge("m", "f")))
+    with pytest.raises(ValueError, match="'orphan' receives nothing"):
+        T.Topology((T.Node("orphan", "relay"), T.Node("f", "fuse")),
+                   (T.Edge("orphan", "f"),))
+
+
 def test_resolution_against_cfg():
     assert T.resolve(None, CFG) == T.star(CFG.num_clients)
     assert T.nontrivial(None, CFG) is None
