@@ -15,6 +15,10 @@
 #                                scheme (asserted: INL's partial fusion
 #                                beats the single-uplink schemes at 0.3)
 #                                + delivered-vs-offered training bandwidth
+#   serve     serve_bench        serving plane: p50/p99 latency + goodput
+#                                vs Poisson offered load per topology/wire
+#                                (asserted: continuous batching >= 2x the
+#                                serial baseline, one compile per bucket)
 #   throughput throughput_bench  end-to-end runner throughput: per-round
 #                                dispatch vs whole-epoch scan+prefetch vs
 #                                shard_map (forced 2-device subprocess)
@@ -30,7 +34,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma list: table1,curves,kernels,wire,topology,"
-                         "links,throughput,roofline")
+                         "links,serve,throughput,roofline")
     ap.add_argument("--epochs", type=int, default=3,
                     help="epochs for the accuracy curves (CPU-sized)")
     args = ap.parse_args()
@@ -59,6 +63,10 @@ def main() -> None:
     if want("links"):
         from benchmarks import links_bench
         links_bench.main([])
+        sys.stdout.flush()
+    if want("serve"):
+        from benchmarks import serve_bench
+        serve_bench.main([])
         sys.stdout.flush()
     if want("curves"):
         from benchmarks import accuracy_curves

@@ -214,7 +214,7 @@ def make_train_step(cfg, optimizer, *, rate_estimator: str = "sample",
 
 
 def predict(params: INLParams, state, views, *, cfg=None, topology=None,
-            delivery=None):
+            delivery=None, wire: str = "dense"):
     """Inference phase (§III-B): deterministic latents (u = mu), soft output.
 
     delivery — an optional (J,) or (J, B) boolean delivery mask
@@ -222,6 +222,14 @@ def predict(params: INLParams, state, views, *, cfg=None, topology=None,
     deadline are masked out of the concatenation and the survivors
     renormalised (fuse-what-arrived).  None is the perfect network —
     bit-identical to the pre-fault path.
+
+    wire — the per-hop link encoding for graph topologies
+    (core/wirefmt.py): "packed" moves each hop's payload as bit-packed
+    codeword lanes.  Hop values are already on the edge's quantizer grid,
+    so packing is a lossless re-encoding — graph predictions are
+    bit-identical across wire formats; only the measured bytes ledger
+    moves.  The star path ships unquantized latents (the golden-pinned
+    seed convention, see NOTE below) and ignores `wire`.
 
     A non-star `topology` (needs `cfg` for the edge widths) routes the
     deterministic latents through the same multi-hop re-encoding the
@@ -246,7 +254,7 @@ def predict(params: INLParams, state, views, *, cfg=None, topology=None,
     (mu, logvar), _ = _encode_mu_logvar(params, state, views, train=False)
     u, _, u_fused = topology_lib.graph_cut_and_ship(
         topo, cfg, mu, logvar, jnp.zeros(mu.shape, jnp.float32),
-        rate_estimator="none")
+        rate_estimator="none", wire=wire)
     if delivery is not None:
         u_fused = linkfault.partial_fuse(u_fused, delivery)
     joint, _ = decode(params, u, train=False, u_joint=u_fused)

@@ -255,6 +255,26 @@ def sample_delivery_mask(key, topo, cfg, n: int, *,
                          else deadline_ms(cfg), shape=(n,))
 
 
+def request_delivery_mask(key, topo, cfg, request_ids, *,
+                          deadline: Optional[float] = None):
+    """Delivery masks keyed PER REQUEST ID: (J, n) for `request_ids` (n,)
+    int32.  Request r's draws are a pure function of (key, r, edge) — unlike
+    `sample_delivery_mask`, whose draws depend on the request's POSITION in
+    the batch — so a request fused inside a padded 64-wide serving bucket
+    sees exactly the faults it would see served alone.  This is the
+    bit-exactness contract the continuous-batching serving plane
+    (repro/serving) relies on: batch composition and bucket padding cannot
+    move any request's fault draw."""
+    base = fault_key(key)
+    dl = deadline if deadline is not None else deadline_ms(cfg)
+
+    def one(rid):
+        return delivery_mask(jax.random.fold_in(base, rid), topo, cfg,
+                             payload_scale=1.0, deadline=dl)
+
+    return jnp.moveaxis(jax.vmap(one)(jnp.asarray(request_ids)), 0, 1)
+
+
 # ---------------------------------------------------------------------------
 # Partial fusion: mask the missing chunks, renormalise the survivors
 # ---------------------------------------------------------------------------

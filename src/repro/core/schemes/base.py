@@ -119,6 +119,33 @@ class Scheme:
         the average-quality view; SL: client forward + server decoder)."""
         raise NotImplementedError
 
+    # serving bucket sizes (repro/serving): in-flight requests are padded
+    # to the smallest bucket, so the engine jits at most ONE predict per
+    # bucket size — no retracing under request churn
+    serve_buckets: Tuple[int, ...] = (1, 4, 16, 64)
+
+    def predict_batched(self, state, views, *, delivery=None, topology=None,
+                        cfg=None, wire: str = "dense") -> Any:
+        """The serving plane's batched inference entry (repro/serving):
+        `predict` plus an optional (J,) or (J, B) per-request delivery mask
+        and the serving wire format.
+
+        delivery=None is the clean network and MUST equal `predict` bit for
+        bit — the engine's bucket-padding parity test pins it.  Default
+        masked semantics (single-uplink schemes: FL's central model, SL's
+        one boundary): a request answers only if its whole uplink payload
+        arrived — any dropped view degrades it to the uniform distribution.
+        INL overrides with per-request partial fusion (a lost view costs
+        one vote, not the request) and threads `wire` through its graph
+        hops."""
+        import jax.numpy as jnp
+        from repro.core import linkfault
+        probs = self.predict(state, views, topology=topology, cfg=cfg)
+        if delivery is None:
+            return probs
+        ok = jnp.all(delivery, axis=0)
+        return linkfault.degrade_probs(probs, ok)
+
     def predict_under_faults(self, state, views, key, topology=None,
                              cfg=None) -> Any:
         """`predict` when the topology's links are unreliable

@@ -75,6 +75,15 @@ class INLScheme(base.Scheme):
         return inl.predict(state["params"], state["state"], views,
                            cfg=cfg, topology=topology)
 
+    def predict_batched(self, state, views, *, delivery=None, topology=None,
+                        cfg=None, wire: str = "dense"):
+        # the serving-plane entry: per-request partial fusion (delivery is
+        # the (J, B) fuse-what-arrived mask) with the engine's wire format
+        # threaded through the graph hops.  delivery=None reproduces
+        # `predict` bit for bit — the bucket-padding parity contract.
+        return inl.predict(state["params"], state["state"], views, cfg=cfg,
+                           topology=topology, delivery=delivery, wire=wire)
+
     def predict_under_faults(self, state, views, key, topology=None,
                              cfg=None):
         # INL degrades per VIEW, not per request: each sample draws its own

@@ -277,6 +277,11 @@ def run_all(names: Sequence[str], views, labels, cfg, *, epochs: int,
 
 
 def efficiency(curve: Sequence[CurvePoint]) -> float:
-    """Final accuracy per Gbit exchanged (the paper's headline metric)."""
+    """Final accuracy per Gbit exchanged (the paper's headline metric).
+
+    An empty curve (epochs=0, or a rounds == 0 run that never evaluated)
+    has no final point — 0.0, not an IndexError."""
+    if not curve:
+        return 0.0
     last = curve[-1]
     return last.accuracy / max(last.gbits, 1e-9)

@@ -85,6 +85,15 @@ def prefetch_to_device(iterator: Iterable, *, size: int = 2,
         except BaseException as exc:  # re-raised consumer-side, never lost
             _offer(_Failure(exc))
 
+    def _drain():
+        """Release every buffered item (each pins a device buffer until
+        dropped) and unblock a producer stuck in put()."""
+        while True:
+            try:
+                buf.get_nowait()
+            except queue.Empty:
+                return
+
     thread = threading.Thread(target=_producer, name="prefetch_to_device",
                               daemon=True)
     thread.start()
@@ -97,4 +106,13 @@ def prefetch_to_device(iterator: Iterable, *, size: int = 2,
                 raise got.exc
             yield got
     finally:
+        # A consumer that drops the generator early (close()/GC) used to
+        # leave the producer thread alive and up to `size` device_put items
+        # queued, pinning their device buffers until GC.  Drain + join: the
+        # producer observes `stop` within its 0.1 s put timeout, so the
+        # bounded join only trips if an item's device_put itself hangs —
+        # in which case the daemon thread cannot block interpreter exit.
         stop.set()
+        _drain()
+        thread.join(timeout=5.0)
+        _drain()

@@ -108,14 +108,32 @@ def make_prefill_step(cfg):
     return prefill_step
 
 
-def make_decode_step(cfg):
+def make_decode_step(cfg, *, greedy: bool = False, trace_log: list = None):
     """(params, batch, cache) -> (logits, new_cache).  batch carries the new
     token(s) + cache_len; serve_step semantics per the assignment: ONE new
-    token against a cache of seq_len entries."""
+    token against a cache of seq_len entries.
+
+    greedy=True returns the argmax TOKEN ids (B,) int32 instead of logits —
+    the sampling folds into the jitted step, so a serving decode loop never
+    dispatches an eager per-token argmax against the in-flight logits (the
+    host round trip the old `serve.py` loop paid every generated token).
+    Audio (multi-codebook) logits argmax per codebook and keep the first —
+    the same flattening the serve loop applied host-side.
+
+    trace_log — optional list appended to at TRACE time (not per call);
+    tests assert the serving loop compiles this step exactly once."""
     def decode_step(params, batch, cache):
+        if trace_log is not None:
+            trace_log.append(jax.tree.map(jnp.shape, batch))
         logits, new_cache, _ = zoo.forward(params, cfg, batch, mode="decode",
                                            cache=cache)
-        return logits[:, -1], new_cache
+        logits = logits[:, -1]
+        if not greedy:
+            return logits, new_cache
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if tok.ndim > 1:                     # audio: (B, K) -> first codebook
+            tok = tok[:, 0]
+        return tok, new_cache
     return decode_step
 
 

@@ -1,0 +1,23 @@
+"""INL serving plane: continuous-batching inference over a topology.
+
+    engine    per-node request queues, bucketed jitted predict (one compile
+              per bucket size), per-request fuse-what-arrived fault draws,
+              two-ledger bandwidth metering.
+    batching  the pad-to-bucket grid ({1, 4, 16, 64} by default).
+    metering  per-request per-edge bit/byte charges (forward direction).
+    loadgen   seeded Poisson offered-load runs + serial-capacity anchor.
+
+`launch/serve.py` is the CLI front end; `benchmarks/serve_bench.py` sweeps
+offered load per topology and wire format into BENCH_serve.json.
+"""
+from repro.serving.batching import BUCKETS, pad_to_bucket, pick_bucket
+from repro.serving.engine import ServedRequest, ServeStats, ServingEngine
+from repro.serving.loadgen import measure_serial_capacity, run_poisson
+from repro.serving.metering import request_bits, request_edge_bits
+
+__all__ = [
+    "BUCKETS", "pad_to_bucket", "pick_bucket",
+    "ServedRequest", "ServeStats", "ServingEngine",
+    "measure_serial_capacity", "run_poisson",
+    "request_bits", "request_edge_bits",
+]

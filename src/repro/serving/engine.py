@@ -1,0 +1,337 @@
+"""The INL serving plane: continuous batching over a network topology.
+
+The training side of this repo ends at a trained scheme state; this module
+is the inference side the paper actually argues for (§III): distributively
+extracted features travel as narrow quantized latents over the topology's
+edges to the fusion center, which answers requests.  The engine turns that
+into a serving loop shaped like an inference platform:
+
+    per-node request queues   a request fans its J views out to one queue
+                              per view node (`submit` enqueues all J
+                              fragments atomically, so the queues stay
+                              aligned); the fusion-side scheduler pops the
+                              oldest coalescible prefix of every queue.
+    continuous batching       the scheduler thread loops: grab EVERYTHING
+                              queued (up to the largest bucket), launch,
+                              complete, repeat — new arrivals coalesce into
+                              the next launch instead of waiting behind a
+                              fixed-size batch barrier.
+    pad-to-bucket             batches pad to the smallest bucket in
+                              `Scheme.serve_buckets` ({1, 4, 16, 64}), so
+                              the engine compiles AT MOST one predict per
+                              bucket size — no retracing under churn
+                              (`trace_counts` exposes the proof).
+    fuse-what-arrived         per REQUEST: fault draws are keyed by request
+                              id (`linkfault.request_delivery_mask`), so a
+                              straggling view misses only its own fusion,
+                              never its batchmates' — and a request's mask
+                              is identical whether it rides a full bucket
+                              or is served alone.
+    packed-wire hops          the engine's `wire=` threads through
+                              `Scheme.predict_batched` into the topology's
+                              relay hops (`wirefmt` / `graph_cut_and_ship`)
+                              and into the per-request bytes ledger.
+    two-ledger metering       every completed request charges the offered /
+                              delivered `BandwidthMeter` ledgers per edge
+                              (serving/metering.py).
+
+Numerics contract (pinned by tests/test_serving.py, asserted in
+benchmarks/serve_bench.py): WITHIN a bucket executable, padding and batch
+composition cannot move any request's output — bit for bit, clean or
+faulty (padding is row-inert and fault draws are request-id-keyed).
+ACROSS bucket sizes — and against a jit(scheme.predict) reference at a
+different batch shape — outputs agree to tight float tolerance with
+identical argmax decisions: XLA compiles each batch shape separately and
+the executables may round the last ulp differently.  The EAGER
+scheme.predict is one more step removed (~1e-7: jit fuses op chains — the
+graph hops' re-quantization especially — differently from op-by-op
+dispatch).  Boolean delivery masks are exact everywhere: a request's mask
+is a pure function of (seed, request id, edge), whatever rides alongside.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+import time
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bandwidth, linkfault
+from repro.core import topology as topology_lib
+from repro.serving import batching, metering
+
+
+@dataclass(frozen=True)
+class ServedRequest:
+    """One completed request, as its Future resolves it."""
+    rid: int
+    probs: np.ndarray            # (C,) class probabilities
+    views_fused: int             # how many of the J views made the fusion
+    latency_ms: float            # submit -> completion (queue + batch + run)
+    t_done: float                # perf_counter stamp at completion
+
+
+@dataclass
+class ServeStats:
+    """Aggregates the engine accumulates while serving."""
+    completed: int = 0
+    latencies_ms: List[float] = field(default_factory=list)
+    views_fused: List[int] = field(default_factory=list)
+    launches: int = 0
+    launched_rows: int = 0       # bucket rows launched (padding included)
+
+    @property
+    def pad_fraction(self) -> float:
+        """Fraction of launched rows that were padding — the price of the
+        bucket grid (0.0 when every batch lands exactly on a bucket)."""
+        if not self.launched_rows:
+            return 0.0
+        return 1.0 - self.completed / self.launched_rows
+
+
+class ServingEngine:
+    """Continuous-batching inference over one trained scheme state.
+
+    scheme/state/cfg — a registered Scheme, its trained state pytree, and
+    the experiment config.  topology (None = the implicit star) may carry
+    LinkModels; any link model — or an explicit `deadline_ms` — switches
+    serving onto per-request fuse-what-arrived masks.  `wire` is the hop
+    encoding AND the measured-bytes convention.  `buckets` overrides the
+    scheme's grid (a serial baseline is `buckets=(1,)`).
+
+    Thread model: `submit` is called from any thread; one scheduler thread
+    (started by `start()` / the context manager) runs the collect -> pad ->
+    launch -> complete loop.  `stop()` drains everything queued before
+    joining.  The engine also works fully synchronously: `serve()` submits
+    a block and waits, and `step()` runs one scheduler iteration inline —
+    tests use the inline mode for determinism.
+    """
+
+    def __init__(self, scheme, state, cfg, *, topology=None,
+                 wire: str = "dense", buckets: Sequence[int] = None,
+                 deadline_ms: Optional[float] = None, seed: int = 0,
+                 meter: Optional[bandwidth.BandwidthMeter] = None):
+        self.scheme, self.state, self.cfg = scheme, state, cfg
+        self.topology = topology
+        self.topo = topology_lib.resolve(topology, cfg)
+        self.wire = wire
+        self.deadline_ms = deadline_ms
+        self.buckets = batching.validate_buckets(
+            buckets if buckets is not None else scheme.serve_buckets)
+        # any link model (or an explicit deadline) switches serving onto
+        # per-request delivery masks; a bare topology stays on the plain
+        # predict path — bit-identical to scheme.predict
+        self.faulty = (linkfault.has_link_models(self.topo)
+                       or deadline_ms is not None)
+        self._key = jax.random.PRNGKey(seed)
+        self._queues: Dict[str, collections.deque] = {
+            name: collections.deque() for name in self.topo.view_nodes()}
+        self._futures: Dict[int, Future] = {}
+        self._submit_t: Dict[int, float] = {}
+        self._next_rid = 0
+        self._work = threading.Condition()
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        # one jitted predict per bucket; the list inside each closure is
+        # appended to at TRACE time only, so trace_counts[b] is the number
+        # of compilations bucket b ever paid (the no-retracing contract)
+        self.trace_counts: Dict[int, int] = {b: 0 for b in self.buckets}
+        self._predict = {b: self._make_bucket_predict(b)
+                         for b in self.buckets}
+        self.meter = bandwidth.BandwidthMeter() if meter is None else meter
+        self._edge_bits = metering.request_edge_bits(self.topo, cfg)
+        self._edge_nbytes = metering.request_edge_wire_bytes(
+            self.topo, cfg, wire=wire)
+        self.stats = ServeStats()
+
+    # -- the bucketed predict ---------------------------------------------
+
+    def _make_bucket_predict(self, bucket: int):
+        scheme, cfg = self.scheme, self.cfg
+        topo_arg, topo = self.topology, self.topo
+        wire, deadline, faulty = self.wire, self.deadline_ms, self.faulty
+        counts = self.trace_counts
+
+        def fn(state, views, rids, key):
+            counts[bucket] += 1          # trace-time side effect only
+            if faulty:
+                delivery = linkfault.request_delivery_mask(
+                    key, topo, cfg, rids, deadline=deadline)
+                probs = scheme.predict_batched(
+                    state, views, delivery=delivery, topology=topo_arg,
+                    cfg=cfg, wire=wire)
+            else:
+                # clean network: no masks at all — the plain predict graph,
+                # bit-identical to scheme.predict on the same rows
+                delivery = jnp.ones((topo.num_views(), bucket), bool)
+                probs = scheme.predict_batched(
+                    state, views, topology=topo_arg, cfg=cfg, wire=wire)
+            return probs, delivery
+        return jax.jit(fn)
+
+    def warmup(self) -> None:
+        """Pay every bucket's compile up front (latency measurements then
+        never include a trace)."""
+        J = self.topo.num_views()
+        H, W, C = self.cfg.image_shape
+        for b in self.buckets:
+            views = jnp.zeros((J, b, H, W, C), jnp.float32)
+            rids = jnp.zeros((b,), jnp.int32)
+            out, _ = self._predict[b](self.state, views, rids, self._key)
+            out.block_until_ready()
+
+    # -- request intake ----------------------------------------------------
+
+    def submit(self, views) -> Tuple[int, Future]:
+        """Enqueue one request's (J, H, W, C) views — one fragment per
+        measure/relay node queue, atomically, so the per-node queues always
+        pop aligned.  Returns (request id, Future resolving to a
+        ServedRequest)."""
+        views = np.asarray(views)
+        if views.shape[0] != self.topo.num_views():
+            raise ValueError(
+                f"request has {views.shape[0]} views; topology "
+                f"{self.topo.describe()} expects {self.topo.num_views()}")
+        fut: Future = Future()
+        with self._work:
+            rid = self._next_rid
+            self._next_rid += 1
+            for j, name in enumerate(self.topo.view_nodes()):
+                self._queues[name].append((rid, views[j]))
+            self._futures[rid] = fut
+            self._submit_t[rid] = time.perf_counter()
+            self._work.notify()
+        return rid, fut
+
+    def pending(self) -> int:
+        with self._work:
+            return len(self._futures)
+
+    # -- the scheduler -----------------------------------------------------
+
+    def _collect(self):
+        """Pop the oldest <= max-bucket requests off every node queue
+        (caller holds the lock).  Returns ((n,) rids, (J, n, ...) views)
+        or None when idle."""
+        names = self.topo.view_nodes()
+        m = min(len(self._queues[nm]) for nm in names)
+        m = min(m, self.buckets[-1])
+        if m == 0:
+            return None
+        rids, frags = None, []
+        for nm in names:
+            row = [self._queues[nm].popleft() for _ in range(m)]
+            got = [r for r, _ in row]
+            if rids is None:
+                rids = got
+            # submit() appends to every queue under the lock, so the
+            # aligned-prefix invariant cannot break
+            assert got == rids, (got, rids)
+            frags.append(np.stack([f for _, f in row]))
+        return np.asarray(rids, np.int32), np.stack(frags)
+
+    def _execute(self, rids: np.ndarray, views: np.ndarray) -> None:
+        n = len(rids)
+        bucket = batching.pick_bucket(n, self.buckets)
+        pviews, prids = batching.pad_to_bucket(views, rids, bucket)
+        probs, delivery = self._predict[bucket](
+            self.state, jnp.asarray(pviews), jnp.asarray(prids), self._key)
+        probs_np = np.asarray(probs)[:n]          # blocks until ready
+        mask_np = np.asarray(delivery)[:, :n]
+        t_done = time.perf_counter()
+        metering.meter_served_batch(self.meter, self.topo, self.cfg,
+                                    mask_np, edge_bits=self._edge_bits,
+                                    edge_nbytes=self._edge_nbytes)
+        self.stats.launches += 1
+        self.stats.launched_rows += bucket
+        for i, rid in enumerate(rids):
+            rid = int(rid)
+            with self._work:
+                fut = self._futures.pop(rid)
+                t_sub = self._submit_t.pop(rid)
+            lat = (t_done - t_sub) * 1e3
+            fused = int(mask_np[:, i].sum())
+            self.stats.completed += 1
+            self.stats.latencies_ms.append(lat)
+            self.stats.views_fused.append(fused)
+            fut.set_result(ServedRequest(rid=rid, probs=probs_np[i],
+                                         views_fused=fused, latency_ms=lat,
+                                         t_done=t_done))
+
+    def step(self, timeout: float = 0.0) -> int:
+        """One scheduler iteration inline: collect -> launch -> complete.
+        Returns the number of requests completed (0 when idle past
+        `timeout`)."""
+        with self._work:
+            batch = self._collect()
+            if batch is None and timeout > 0:
+                self._work.wait(timeout)
+                batch = self._collect()
+        if batch is None:
+            return 0
+        rids, views = batch
+        self._execute(rids, views)
+        return len(rids)
+
+    def _loop(self) -> None:
+        while True:
+            with self._work:
+                batch = self._collect()
+                if batch is None:
+                    if self._stop.is_set():
+                        return                     # queues drained: done
+                    self._work.wait(timeout=0.05)
+                    continue
+            rids, views = batch
+            self._execute(rids, views)
+
+    def start(self) -> "ServingEngine":
+        if self._thread is not None:
+            raise RuntimeError("engine already started")
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._loop,
+                                        name="inl-serving-engine",
+                                        daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self, timeout: float = 60.0) -> None:
+        """Drain the queues, complete everything in flight, join."""
+        if self._thread is None:
+            return
+        self._stop.set()
+        with self._work:
+            self._work.notify()
+        self._thread.join(timeout=timeout)
+        if self._thread.is_alive():
+            raise RuntimeError("serving engine failed to drain and stop")
+        self._thread = None
+
+    def __enter__(self) -> "ServingEngine":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- synchronous conveniences -----------------------------------------
+
+    def serve(self, views, timeout: float = 120.0):
+        """Submit a (J, n, ...) block and wait for all n answers.
+
+        Returns ((n, C) probabilities, list of ServedRequest in submit
+        order).  Runs through the live scheduler thread when started, else
+        inline."""
+        n = views.shape[1]
+        futs = [self.submit(views[:, i])[1] for i in range(n)]
+        if self._thread is None:
+            while any(not f.done() for f in futs):
+                if self.step() == 0:
+                    break
+        results = [f.result(timeout=timeout) for f in futs]
+        return np.stack([r.probs for r in results]), results

@@ -1,0 +1,337 @@
+"""The serving plane's contracts (repro/serving + launch/serve.py).
+
+The load-bearing claims, each pinned here:
+
+  * one compile per bucket size, never a retrace under churn;
+  * within a bucket, padding and batch composition cannot move ANY
+    request's output — bit for bit (same executable, row-inert rows),
+    clean or faulty;
+  * across bucket sizes the same request agrees to float tolerance with
+    IDENTICAL decisions (different XLA executables may round the last
+    ulp differently at different batch shapes), and fault masks — booleans
+    — agree EXACTLY (request-id-keyed draws);
+  * clean serving matches jit(scheme.predict) to the same standard, and
+    served accuracy equals evaluate_accuracy;
+  * the scheduler drains FIFO and completes everything before stop();
+
+plus the request-path fix sweep that rode along: loud clamping of
+--requests past the dataset, the greedy argmax folded into the jitted
+decode step (one compile, no per-token device->host transfer), the
+prefetcher joining its producer thread on early drop, and
+runner.efficiency([]) returning 0.0.
+"""
+import dataclasses
+import threading
+import time
+import warnings
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import linkfault, schemes
+from repro.core import topology as topology_lib
+from repro.core.schemes import runner
+from repro.serving import ServingEngine, batching
+from tests._schemes_common import CFG, fixture_data, trajectory
+
+
+def _inl():
+    scheme = schemes.get("inl")
+    state = trajectory("inl")["state"]
+    views, labels = fixture_data()
+    return scheme, state, np.asarray(views), np.asarray(labels)
+
+
+def _lossy_star(erasure=0.3):
+    return linkfault.with_links(
+        topology_lib.star(CFG.num_clients),
+        linkfault.LinkModel(erasure=erasure))
+
+
+# ---------------------------------------------------------------------------
+# bucket grid
+# ---------------------------------------------------------------------------
+
+def test_bucket_helpers():
+    assert batching.validate_buckets([16, 1, 4, 4]) == (1, 4, 16)
+    assert batching.pick_bucket(1, (1, 4, 16)) == 1
+    assert batching.pick_bucket(5, (1, 4, 16)) == 16
+    with pytest.raises(ValueError):
+        batching.pick_bucket(17, (1, 4, 16))
+    with pytest.raises(ValueError):
+        batching.validate_buckets([])
+    v = np.arange(2 * 3 * 5, dtype=np.float32).reshape(2, 3, 5)
+    pv, pr = batching.pad_to_bucket(v, np.arange(3, dtype=np.int32), 4)
+    assert pv.shape == (2, 4, 5) and pr.tolist() == [0, 1, 2, 2]
+    assert np.array_equal(pv[:, 3], v[:, 2])      # pad repeats the last row
+
+
+# ---------------------------------------------------------------------------
+# clean serving == jitted predict, one compile per bucket
+# ---------------------------------------------------------------------------
+
+def test_clean_serving_matches_jitted_predict():
+    scheme, state, views, labels = _inl()
+    engine = ServingEngine(scheme, state, CFG, seed=5)
+    engine.warmup()
+    assert all(c == 1 for c in engine.trace_counts.values())
+    with engine:
+        probs, results = engine.serve(views[:, :23])
+    # warmup paid every compile; serving 23 requests (bucket 64, padded)
+    # must not add a single trace
+    assert all(c == 1 for c in engine.trace_counts.values()), \
+        engine.trace_counts
+    ref = np.asarray(jax.jit(
+        lambda st, vv: scheme.predict(st, vv, cfg=CFG)
+    )(state, jnp.asarray(views[:, :23])))
+    assert np.allclose(probs, ref, atol=2e-6, rtol=0)
+    assert np.array_equal(np.argmax(probs, -1), np.argmax(ref, -1))
+    assert all(r.views_fused == CFG.num_clients for r in results)
+    # clean meter: delivered == offered exactly
+    assert engine.meter.total_bits > 0
+    assert engine.meter.delivery_ratio == 1.0
+
+
+def test_padding_and_composition_bit_exact_within_bucket():
+    """Two batches that land in the SAME bucket executable must give every
+    shared request a bitwise identical answer, however much padding or
+    however many other requests ride along — clean AND faulty (the
+    per-request-id fault draws are what make the faulty half true)."""
+    scheme, state, views, labels = _inl()
+    for topo in (None, _lossy_star()):
+        # 7 requests padded to 16 ...
+        a = ServingEngine(scheme, state, CFG, topology=topo, seed=5)
+        with a:
+            pa, _ = a.serve(views[:, :7])
+        # ... vs the same 7 (same rids 0..6) plus 6 more, padded to 16
+        b = ServingEngine(scheme, state, CFG, topology=topo, seed=5)
+        with b:
+            pb, _ = b.serve(views[:, :13])
+        assert a.trace_counts[16] == b.trace_counts[16] == 1
+        assert np.array_equal(pa, pb[:7]), \
+            "batch composition moved a request's output inside one bucket"
+
+
+def test_cross_bucket_agreement_and_exact_masks():
+    """Across bucket sizes, outputs agree to float tolerance with identical
+    decisions (different-shape XLA executables may differ in the last
+    ulp), and the boolean delivery masks agree EXACTLY."""
+    scheme, state, views, labels = _inl()
+    for topo in (None, _lossy_star()):
+        outs, fused = [], []
+        for split in ((7,), (1,) * 7, (3, 4)):
+            engine = ServingEngine(scheme, state, CFG, topology=topo,
+                                   seed=5)
+            got, nv, i = [], [], 0
+            with engine:
+                for k in split:
+                    p, rs = engine.serve(views[:, i:i + k])
+                    got.append(p)
+                    nv += [r.views_fused for r in rs]
+                    i += k
+            outs.append(np.concatenate(got))
+            fused.append(nv)
+        for other, nv in zip(outs[1:], fused[1:]):
+            assert np.allclose(outs[0], other, atol=2e-6, rtol=0)
+            assert np.array_equal(np.argmax(outs[0], -1),
+                                  np.argmax(other, -1))
+            assert nv == fused[0]      # masks are exact, bucket regardless
+
+
+# ---------------------------------------------------------------------------
+# per-request fault semantics
+# ---------------------------------------------------------------------------
+
+def test_faulty_serving_matches_request_delivery_mask_reference():
+    """Served probabilities under faults == predict_batched with the
+    request-id-keyed masks, computed independently of the engine."""
+    scheme, state, views, labels = _inl()
+    topo = _lossy_star()
+    seed = 11
+    engine = ServingEngine(scheme, state, CFG, topology=topo, seed=seed)
+    n = 9
+    with engine:
+        probs, results = engine.serve(views[:, :n])
+
+    key = jax.random.PRNGKey(seed)
+    rids = jnp.arange(n, dtype=jnp.int32)
+
+    def ref_fn(st, vv, rr):
+        delivery = linkfault.request_delivery_mask(key, topo, CFG, rr)
+        return scheme.predict_batched(st, vv, delivery=delivery,
+                                      topology=topo, cfg=CFG), delivery
+    ref, mask = jax.jit(ref_fn)(state, jnp.asarray(views[:, :n]), rids)
+    # engine ran at bucket 16, the reference at batch 9 — different
+    # executables, so float tolerance; the masks themselves are exact
+    assert np.allclose(probs, np.asarray(ref), atol=2e-6, rtol=0)
+    assert np.array_equal(np.argmax(probs, -1), np.argmax(ref, -1))
+    assert [r.views_fused for r in results] == \
+        np.asarray(mask).sum(axis=0).tolist()
+    # the faulty meter delivered strictly less than it offered
+    assert 0.0 < engine.meter.delivery_ratio < 1.0
+
+
+def test_request_mask_independent_of_batch_composition():
+    key = jax.random.PRNGKey(3)
+    topo = _lossy_star()
+    full = np.asarray(linkfault.request_delivery_mask(
+        key, topo, CFG, jnp.arange(16, dtype=jnp.int32)))
+    alone = np.asarray(linkfault.request_delivery_mask(
+        key, topo, CFG, jnp.asarray([11], jnp.int32)))
+    assert np.array_equal(full[:, 11], alone[:, 0])
+    # and requests actually draw DIFFERENT faults from one another
+    assert not all(np.array_equal(full[:, i], full[:, 0])
+                   for i in range(16))
+
+
+def test_all_ones_mask_is_identity():
+    """A modelled-but-perfect link keeps the faulty path bit-identical to
+    the clean engine (partial_fuse's all-ones contract, served end-to-end)."""
+    scheme, state, views, labels = _inl()
+    perfect = linkfault.with_links(topology_lib.star(CFG.num_clients),
+                                   linkfault.LinkModel(erasure=0.0))
+    e1 = ServingEngine(scheme, state, CFG, topology=perfect, seed=5)
+    assert e1.faulty
+    e2 = ServingEngine(scheme, state, CFG, seed=5)
+    assert not e2.faulty
+    with e1:
+        p1, _ = e1.serve(views[:, :6])
+    with e2:
+        p2, _ = e2.serve(views[:, :6])
+    assert np.array_equal(p1, p2)
+
+
+# ---------------------------------------------------------------------------
+# scheduler behaviour
+# ---------------------------------------------------------------------------
+
+def test_queue_drain_fifo_under_seeded_arrival_stream():
+    """Requests submitted in a seeded arrival stream complete in FIFO
+    batches, every future resolves by stop(), and each answer is the right
+    request's answer."""
+    scheme, state, views, labels = _inl()
+    rng = np.random.default_rng(0)
+    n = 20
+    engine = ServingEngine(scheme, state, CFG, seed=5)
+    engine.warmup()
+    futs = []
+    with engine:
+        for i in range(n):
+            rid, fut = engine.submit(views[:, i])
+            assert rid == i
+            futs.append(fut)
+            if rng.random() < 0.3:
+                time.sleep(float(rng.exponential(0.002)))
+    # context exit == stop(): drains everything already queued
+    assert all(f.done() for f in futs)
+    assert engine.pending() == 0 and engine.stats.completed == n
+    results = [f.result(timeout=1.0) for f in futs]
+    assert [r.rid for r in results] == list(range(n))
+    # completion stamps never go backwards in submit order (FIFO batches)
+    t = [r.t_done for r in results]
+    assert all(a <= b + 1e-9 for a, b in zip(t, t[1:]))
+    ref = np.asarray(jax.jit(
+        lambda st, vv: scheme.predict(st, vv, cfg=CFG)
+    )(state, jnp.asarray(views[:, :n])))
+    got = np.stack([r.probs for r in results])
+    assert np.allclose(got, ref, atol=2e-6, rtol=0)
+    assert np.array_equal(np.argmax(got, -1), np.argmax(ref, -1))
+
+
+def test_submit_rejects_wrong_view_count():
+    scheme, state, views, labels = _inl()
+    engine = ServingEngine(scheme, state, CFG, seed=0)
+    with pytest.raises(ValueError, match="views"):
+        engine.submit(views[:3, 0])
+
+
+# ---------------------------------------------------------------------------
+# satellite: --requests clamp
+# ---------------------------------------------------------------------------
+
+def test_clamp_requests_warns_and_clamps():
+    from repro.launch.serve import clamp_requests
+    assert clamp_requests(8, 100) == 8
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        assert clamp_requests(1000, 640) == 640
+    assert any(issubclass(x.category, RuntimeWarning)
+               and "exceeds" in str(x.message) for x in w)
+    with pytest.raises(ValueError, match="strict"):
+        clamp_requests(1000, 640, strict=True)
+
+
+# ---------------------------------------------------------------------------
+# satellite: greedy decode folded into the jitted step
+# ---------------------------------------------------------------------------
+
+def test_serve_batch_one_compile_no_device_to_host_transfer():
+    from repro.configs import get_smoke_config
+    from repro.launch.serve import serve_batch
+    from repro.models import zoo
+
+    cfg = dataclasses.replace(get_smoke_config("llama3.2-1b"),
+                              dtype="float32")
+    params = zoo.init_params(cfg, jax.random.PRNGKey(0))
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                 cfg.vocab_size, dtype=jnp.int32)
+    trace_log = []
+    # the decode loop must neither retrace per token nor block on a
+    # device->host transfer of in-flight logits (the old eager greedy())
+    with jax.transfer_guard_device_to_host("disallow"):
+        gen = serve_batch(cfg, params, prompts, 5, trace_log=trace_log)
+        gen.block_until_ready()
+    assert len(trace_log) == 1, f"decode step traced {len(trace_log)}x"
+    gen = np.asarray(gen)
+    assert gen.shape == (2, 5) and gen.dtype == np.int32
+    assert (gen >= 0).all() and (gen < cfg.vocab_size).all()
+
+
+# ---------------------------------------------------------------------------
+# satellite: prefetch producer thread exits on early drop
+# ---------------------------------------------------------------------------
+
+def test_prefetch_producer_thread_exits_on_early_drop():
+    from repro.data.prefetch import prefetch_to_device
+
+    def slow_src():
+        for i in range(100):
+            yield np.full((4,), i, np.float32)
+
+    before = {t.ident for t in threading.enumerate()}
+    it = prefetch_to_device(slow_src(), size=2)
+    first = next(it)
+    assert float(np.asarray(first)[0]) == 0.0
+    it.close()                                 # early drop mid-stream
+    leftover = [t for t in threading.enumerate()
+                if t.ident not in before and t.name == "prefetch_to_device"]
+    for t in leftover:
+        t.join(timeout=2.0)
+    assert not any(t.is_alive() for t in leftover), \
+        "producer thread still alive after generator close"
+
+
+# ---------------------------------------------------------------------------
+# satellite: empty-curve efficiency + zero-round runs
+# ---------------------------------------------------------------------------
+
+def test_efficiency_empty_curve_is_zero():
+    assert runner.efficiency([]) == 0.0
+
+
+def test_run_scheme_zero_epochs_and_zero_rounds():
+    views, labels = fixture_data()
+    # epochs=0: no training, empty curve, efficiency 0.0 — not IndexError
+    curve = runner.run_scheme("inl", views, labels, CFG, epochs=0,
+                              batch_size=32)
+    assert curve == []
+    assert runner.efficiency(curve) == 0.0
+    # a batch size so large that rounds-per-epoch floors to 0: the epoch
+    # trains nothing but still evaluates — no crash, a well-formed point
+    curve = runner.run_scheme("inl", views, labels, CFG, epochs=1,
+                              batch_size=10_000)
+    assert len(curve) == 1 and 0.0 <= curve[0].accuracy <= 1.0
+    assert runner.efficiency(curve) >= 0.0
