@@ -1,0 +1,301 @@
+"""Deterministic chaos: scripted process/link faults + the crash-resume rig.
+
+The transport layer (repro/transport/) consults a `ChaosSchedule` on every
+transmission: the schedule answers three pure queries over TICK time (a
+training round index, or a serving request id) —
+
+    edge_down(key, tick)     the edge drops every attempt in the window
+    slow_factor(key, tick)   latency multiplier (a 10x-slowed client)
+    node_dead(name, tick)    the node is killed: it sends nothing, and
+                             every route THROUGH it fails
+
+Windows are half-open [start, stop) in ticks; `stop=None` means forever.
+Because the queries are pure functions of (schedule, tick) and every
+transport fault draw is already counter-seeded, a chaos run replays
+bit-identically — the property every assertion in benchmarks/chaos_bench.py
+stands on.  `ChaosSchedule.seeded` scripts a reproducible random schedule
+from an integer seed; the builder methods (`kill_node`, `down_edge`,
+`flap_edge`, `slow_edge`) script exact scenarios.
+
+The second half of this module is the CRASH-RESUME rig the CI leg runs:
+`crash_resume_check` trains `launch/train.py` in a subprocess, SIGKILLs it
+mid-run at a scripted step, reruns with `--resume`, and asserts the resumed
+trajectory (the per-group metric lines AND the final checkpoint arrays)
+matches an uninterrupted golden run bit for bit.
+
+    PYTHONPATH=src python -m repro.chaos --arch llama3.2-1b --steps 12 \
+        --scan-steps 2 --kill-after-step 6
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import signal
+import subprocess
+import sys
+from dataclasses import dataclass, replace
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+EVENT_KINDS = ("edge_down", "edge_flap", "edge_slow", "node_kill")
+
+
+@dataclass(frozen=True)
+class ChaosEvent:
+    """One scripted fault window over tick time, [start, stop)."""
+    kind: str                     # one of EVENT_KINDS
+    target: str                   # edge key ("m0->fuse") or node name
+    start: int = 0
+    stop: Optional[int] = None    # None = never recovers
+    factor: float = 1.0           # edge_slow: latency multiplier
+    period: int = 2               # edge_flap: down `duty` of every `period`
+    duty: int = 1
+
+    def __post_init__(self):
+        if self.kind not in EVENT_KINDS:
+            raise ValueError(f"unknown chaos event kind {self.kind!r}; "
+                             f"one of {EVENT_KINDS}")
+        if self.stop is not None and self.stop <= self.start:
+            raise ValueError(f"empty window [{self.start}, {self.stop})")
+        if self.kind == "edge_flap" and not 0 < self.duty <= self.period:
+            raise ValueError(f"flap needs 0 < duty <= period, got "
+                             f"duty={self.duty} period={self.period}")
+
+    def active(self, tick: int) -> bool:
+        return tick >= self.start and (self.stop is None or tick < self.stop)
+
+
+@dataclass(frozen=True)
+class ChaosSchedule:
+    """An immutable script of fault windows; builders return new schedules
+    so scenarios compose fluently:
+
+        ChaosSchedule().kill_node("m1", at=4, duration=3) \\
+                       .flap_edge("m0->fuse", start=2, stop=10, period=2)
+    """
+    events: Tuple[ChaosEvent, ...] = ()
+
+    # -- the three transport queries --------------------------------------
+
+    def edge_down(self, key: str, tick: int) -> bool:
+        for e in self.events:
+            if e.target != key or not e.active(tick):
+                continue
+            if e.kind == "edge_down":
+                return True
+            if e.kind == "edge_flap" and \
+                    (tick - e.start) % e.period < e.duty:
+                return True
+        return False
+
+    def slow_factor(self, key: str, tick: int) -> float:
+        f = 1.0
+        for e in self.events:
+            if e.kind == "edge_slow" and e.target == key and e.active(tick):
+                f *= e.factor
+        return f
+
+    def node_dead(self, name: str, tick: int) -> bool:
+        return any(e.kind == "node_kill" and e.target == name
+                   and e.active(tick) for e in self.events)
+
+    # -- builders ----------------------------------------------------------
+
+    def _with(self, ev: ChaosEvent) -> "ChaosSchedule":
+        return ChaosSchedule(self.events + (ev,))
+
+    def kill_node(self, name: str, at: int,
+                  duration: Optional[int] = None) -> "ChaosSchedule":
+        """SIGKILL node `name` at tick `at`; it rejoins after `duration`
+        ticks (None: never — a permanent client leave)."""
+        return self._with(ChaosEvent(
+            "node_kill", name, start=at,
+            stop=None if duration is None else at + duration))
+
+    def down_edge(self, key: str, at: int, duration: int = 1):
+        return self._with(ChaosEvent("edge_down", key, start=at,
+                                     stop=at + duration))
+
+    def flap_edge(self, key: str, start: int, stop: int, period: int = 2,
+                  duty: int = 1):
+        """The edge goes down for `duty` of every `period` ticks in
+        [start, stop) — the breaker-exercising pattern."""
+        return self._with(ChaosEvent("edge_flap", key, start=start,
+                                     stop=stop, period=period, duty=duty))
+
+    def slow_edge(self, key: str, start: int, stop: Optional[int],
+                  factor: float = 10.0):
+        """Multiply the edge's latency by `factor` — the 10x-slowed client
+        whose payloads turn into deadline stragglers."""
+        return self._with(ChaosEvent("edge_slow", key, start=start,
+                                     stop=stop, factor=factor))
+
+    @classmethod
+    def seeded(cls, seed: int, *, edge_keys: Sequence[str] = (),
+               nodes: Sequence[str] = (), ticks: int = 64,
+               p_edge_down: float = 0.1, p_node_kill: float = 0.02,
+               max_outage: int = 4) -> "ChaosSchedule":
+        """A reproducible random schedule: per tick, each edge goes down
+        with `p_edge_down` and each node dies with `p_node_kill`, for an
+        outage of 1..max_outage ticks — same seed, same script."""
+        rng = np.random.default_rng((seed, 0xC4A05))
+        sched = cls()
+        for key in edge_keys:
+            for t in range(ticks):
+                if rng.random() < p_edge_down:
+                    sched = sched.down_edge(
+                        key, t, int(rng.integers(1, max_outage + 1)))
+        for name in nodes:
+            for t in range(ticks):
+                if rng.random() < p_node_kill:
+                    sched = sched.kill_node(
+                        name, t, int(rng.integers(1, max_outage + 1)))
+        return sched
+
+    def describe(self) -> str:
+        if not self.events:
+            return "ChaosSchedule(empty)"
+        spans = [f"{e.kind}:{e.target}@[{e.start},"
+                 f"{'inf' if e.stop is None else e.stop})"
+                 for e in self.events]
+        return f"ChaosSchedule({len(self.events)} events: " \
+               f"{'; '.join(spans[:8])}{'...' if len(spans) > 8 else ''})"
+
+
+# ---------------------------------------------------------------------------
+# Crash-resume rig: SIGKILL a real training process, resume, compare
+# ---------------------------------------------------------------------------
+
+def _train_argv(args, ckpt_dir: str, resume: bool):
+    argv = [sys.executable, "-m", "repro.launch.train",
+            "--arch", args.arch, "--smoke", "--scheme", args.scheme,
+            "--steps", str(args.steps), "--batch", str(args.batch),
+            "--seq", str(args.seq), "--scan-steps", str(args.scan_steps),
+            "--seed", str(args.seed), "--prefetch", "1",
+            "--ckpt-dir", ckpt_dir, "--ckpt-every", str(args.ckpt_every)]
+    if resume:
+        argv.append("--resume")
+    return argv
+
+
+def _run_until_kill(argv, kill_after_step: Optional[int]):
+    """Run the training subprocess, streaming its JSON metric lines; when
+    `kill_after_step` is reached, SIGKILL the process mid-run (the crash
+    under test — no atexit, no flush, no goodbye).  Returns (metric lines,
+    killed?)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in ["src", env.get("PYTHONPATH", "")] if p)
+    proc = subprocess.Popen(argv, stdout=subprocess.PIPE,
+                            stderr=subprocess.STDOUT, text=True, env=env)
+    lines, killed = [], False
+    assert proc.stdout is not None
+    for line in proc.stdout:
+        line = line.strip()
+        if not line.startswith("{"):
+            continue
+        try:
+            m = json.loads(line)
+        except json.JSONDecodeError:
+            continue
+        if "step" in m:
+            lines.append(m)
+            if kill_after_step is not None and not killed \
+                    and m["step"] >= kill_after_step:
+                proc.send_signal(signal.SIGKILL)
+                killed = True
+                break
+    proc.stdout.read()
+    proc.wait()
+    if not killed and proc.returncode != 0:
+        raise RuntimeError(f"training run failed (rc={proc.returncode}); "
+                           f"argv={argv}")
+    return lines, killed
+
+
+def _final_arrays(ckpt_dir: str):
+    from repro import checkpoint
+    step = checkpoint.latest_step(ckpt_dir)
+    path = os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
+    with np.load(path) as data:
+        return step, {k: data[k].copy() for k in data.files}
+
+
+def crash_resume_check(args) -> dict:
+    """The CI crash-resume assertion, end to end:
+
+      1. GOLDEN: an uninterrupted run, metrics + final checkpoint kept;
+      2. CRASH:  the same run SIGKILLed once step `kill_after_step` prints;
+      3. RESUME: rerun with --resume — it restores the last checkpoint,
+         fast-forwards the data/rng streams, finishes the schedule;
+      4. assert every post-resume metric line equals the golden line for
+         the same step, and the final checkpoints match BIT FOR BIT.
+
+    Returns the comparison record (chaos_bench.py embeds it)."""
+    golden_dir = os.path.join(args.workdir, "golden")
+    crash_dir = os.path.join(args.workdir, "crash")
+    golden, killed = _run_until_kill(
+        _train_argv(args, golden_dir, resume=False), None)
+    assert golden, "golden run produced no metric lines"
+
+    partial, killed = _run_until_kill(
+        _train_argv(args, crash_dir, resume=False), args.kill_after_step)
+    assert killed, (f"run finished before step {args.kill_after_step}; "
+                    f"raise --steps or lower --kill-after-step")
+    from repro import checkpoint
+    resume_from = checkpoint.latest_step(crash_dir)
+    assert resume_from is not None, \
+        "crash left no checkpoint; lower --ckpt-every"
+
+    resumed, _ = _run_until_kill(_train_argv(args, crash_dir, resume=True),
+                                 None)
+    assert resumed, "resumed run produced no metric lines"
+
+    by_step = {m["step"]: m for m in golden}
+    mismatches = []
+    for m in resumed:
+        g = by_step.get(m["step"])
+        if g is None or any(g.get(k) != v for k, v in m.items()
+                            if k != "wall_s"):
+            mismatches.append((m, g))
+    assert not mismatches, \
+        f"resumed trajectory diverged from golden: {mismatches[:3]}"
+
+    gstep, garr = _final_arrays(golden_dir)
+    rstep, rarr = _final_arrays(crash_dir)
+    assert gstep == rstep, (gstep, rstep)
+    assert set(garr) == set(rarr)
+    diff = [k for k in garr if not np.array_equal(garr[k], rarr[k])]
+    assert not diff, f"final checkpoints differ bitwise on {diff[:5]}"
+    return {"resume_from_step": resume_from,
+            "final_step": gstep,
+            "metric_lines_compared": len(resumed),
+            "tensors_compared": len(garr),
+            "bitwise_identical": True}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="crash-resume chaos check over launch/train.py")
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--scheme", default="inl",
+                    choices=["standard", "inl"])
+    ap.add_argument("--steps", type=int, default=12)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--scan-steps", type=int, default=2)
+    ap.add_argument("--ckpt-every", type=int, default=2)
+    ap.add_argument("--kill-after-step", type=int, default=5)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--workdir", default="chaos_workdir")
+    args = ap.parse_args(argv)
+    os.makedirs(args.workdir, exist_ok=True)
+    record = crash_resume_check(args)
+    print(json.dumps({"crash_resume": record}, indent=2))
+    return record
+
+
+if __name__ == "__main__":
+    main()

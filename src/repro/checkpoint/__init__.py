@@ -1,9 +1,16 @@
 """Checkpointing: numpy-archive based pytree save/restore with step metadata.
 
 No orbax dependency — flattens a pytree to path-keyed arrays inside a single
-``.npz`` plus a JSON sidecar recording the treedef, step, and config name.
-Restore validates structure/shape/dtype against a template pytree so a
-mismatched config fails loudly instead of silently mis-assigning tensors.
+``.npz`` plus a JSON sidecar recording the treedef, step, config name, and
+every leaf's ORIGINAL dtype.  Restore validates structure/shape/dtype
+against a template pytree so a mismatched config fails loudly instead of
+silently mis-assigning (or silently casting) tensors.
+
+bf16 leaves are stored as fp32 — npz has no native bf16, and fp32 holds
+every bf16 value exactly, so the bf16 -> fp32 -> bf16 round trip is
+bitwise lossless (tests/test_checkpoint.py pins it).  The sidecar records
+the leaf as "bfloat16", so restoring into a non-bf16 template still fails
+loudly.
 """
 from __future__ import annotations
 
@@ -17,68 +24,120 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def _path_part(p) -> str:
+    # DictKey/FlattenedIndexKey carry .key, SequenceKey .idx, GetAttrKey
+    # (NamedTuple fields, e.g. optimizer state) .name
+    for attr in ("key", "idx", "name"):
+        if hasattr(p, attr):
+            return str(getattr(p, attr))
+    return str(p)
+
+
 def _flatten_with_paths(tree):
+    """Path-keyed leaves, npz-storable: (arrays, original dtype per key)."""
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
-    out = {}
+    out, dtypes = {}, {}
     for path, leaf in flat:
-        key = "/".join(
-            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path)
+        key = "/".join(_path_part(p) for p in path)
         arr = np.asarray(leaf)
+        dtypes[key] = str(arr.dtype)
         if arr.dtype == jnp.bfloat16:
             # npz has no native bf16; fp32 round-trips bf16 losslessly
             arr = arr.astype(np.float32)
         out[key] = arr
-    return out
+    return out, dtypes
 
 
 def save(directory: str, step: int, params, *, extra: Optional[dict] = None,
          name: str = "ckpt") -> str:
+    """CRASH-ATOMIC: both files are written to a temp name and os.replace'd
+    into place, npz first and the JSON sidecar LAST — a SIGKILL mid-save
+    (the repro/chaos.py scenario) leaves either the previous complete
+    checkpoint or the new one, never a torn npz.  `latest_step` keys on the
+    sidecar, so a checkpoint without one (the replace window) is invisible
+    to resume."""
     os.makedirs(directory, exist_ok=True)
-    arrays = _flatten_with_paths(params)
+    arrays, dtypes = _flatten_with_paths(params)
     path = os.path.join(directory, f"{name}_{step:08d}.npz")
-    np.savez(path, **arrays)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+    os.replace(tmp, path)
     meta = {"step": step, "num_tensors": len(arrays),
-            "total_params": int(sum(a.size for a in arrays.values()))}
+            "total_params": int(sum(a.size for a in arrays.values())),
+            "dtypes": dtypes}
     if extra:
         meta.update(extra)
-    with open(path.replace(".npz", ".json"), "w") as f:
+    meta_path = path.replace(".npz", ".json")
+    with open(meta_path + ".tmp", "w") as f:
         json.dump(meta, f, indent=2)
+    os.replace(meta_path + ".tmp", meta_path)
     return path
 
 
 def latest_step(directory: str, name: str = "ckpt") -> Optional[int]:
+    """The newest COMPLETE checkpoint: the npz counts only once its JSON
+    sidecar (written last, atomically) is in place."""
     if not os.path.isdir(directory):
         return None
     steps = []
     for fn in os.listdir(directory):
         m = re.match(rf"{name}_(\d+)\.npz$", fn)
-        if m:
+        if m and os.path.exists(os.path.join(
+                directory, fn.replace(".npz", ".json"))):
             steps.append(int(m.group(1)))
     return max(steps) if steps else None
 
 
+def load_meta(directory: str, step: Optional[int] = None,
+              name: str = "ckpt") -> dict:
+    """The JSON sidecar of one checkpoint (latest when `step` is None) —
+    the place runners keep their resume context (epoch/curve/meter)."""
+    if step is None:
+        step = latest_step(directory, name)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"{name}_{step:08d}.json")
+    with open(path) as f:
+        return json.load(f)
+
+
 def restore(directory: str, template, *, step: Optional[int] = None,
             name: str = "ckpt"):
-    """Restore into the structure of `template` (shape/dtype validated)."""
+    """Restore into the structure of `template`.
+
+    Structure, shape AND dtype are validated: a leaf whose recorded dtype
+    differs from the template's raises instead of silently casting — a
+    checkpoint from a bf16 run cannot quietly load into an fp32 config
+    (and vice versa).  Checkpoints written before dtypes were recorded
+    skip the dtype check (nothing to compare against)."""
     if step is None:
         step = latest_step(directory, name)
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {directory}")
     path = os.path.join(directory, f"{name}_{step:08d}.npz")
     data = np.load(path)
-    want = _flatten_with_paths(template)
+    want, want_dtypes = _flatten_with_paths(template)
     missing = set(want) - set(data.files)
     extra_keys = set(data.files) - set(want)
     if missing or extra_keys:
         raise ValueError(f"checkpoint mismatch: missing={sorted(missing)[:5]} "
                          f"extra={sorted(extra_keys)[:5]}")
+    try:
+        saved_dtypes = load_meta(directory, step, name).get("dtypes")
+    except FileNotFoundError:
+        saved_dtypes = None
     flat, treedef = jax.tree_util.tree_flatten_with_path(template)
     leaves = []
     for p, leaf in flat:
-        key = "/".join(str(q.key) if hasattr(q, "key") else str(q.idx)
-                       for q in p)
+        key = "/".join(_path_part(q) for q in p)
         arr = data[key]
-        if arr.shape != leaf.shape:
-            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
-        leaves.append(jnp.asarray(arr, leaf.dtype))
+        if arr.shape != np.shape(leaf):
+            raise ValueError(f"{key}: shape {arr.shape} != {np.shape(leaf)}")
+        if saved_dtypes is not None and key in saved_dtypes \
+                and saved_dtypes[key] != want_dtypes[key]:
+            raise ValueError(
+                f"{key}: checkpoint dtype {saved_dtypes[key]} != template "
+                f"dtype {want_dtypes[key]} — refusing the silent cast")
+        leaves.append(jnp.asarray(arr, np.asarray(leaf).dtype))
     return jax.tree_util.tree_unflatten(treedef, leaves), step

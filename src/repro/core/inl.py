@@ -125,7 +125,8 @@ def decode(params: INLParams, u, *, train: bool, rng=None, u_joint=None):
 
 def loss_fn(params: INLParams, state, views, labels, rng, cfg, *,
             train: bool = True, rate_estimator: str = "sample",
-            backend: str = "auto", wire: str = "dense", topology=None):
+            backend: str = "auto", wire: str = "dense", topology=None,
+            delivery=None):
     """Full eq.-(6) loss.  Returns (loss, (metrics, new_state)).
 
     The encode side runs the fused cut-layer megakernel, which also emits
@@ -154,9 +155,17 @@ def loss_fn(params: INLParams, state, views, labels, rng, cfg, *,
     (mask + renormalise, `linkfault.partial_fuse`) — eq.-(10) error
     chunks then flow back only over the surviving reverse edges.  Branch
     heads and rate terms stay local and unmasked: a cut-off node keeps
-    training its own head."""
+    training its own head.
+
+    delivery — an EXPLICIT (J,) or (J, B) delivery mask that overrides the
+    in-graph fault draw entirely: the transport layer
+    (repro/transport/NetworkTransport) measures which views actually
+    arrived this round — after retries, circuit breakers and chaos — and
+    feeds the outcome in as data.  None keeps the legacy in-graph draws
+    (or the perfect network) bit for bit."""
     topo_full = topology_lib.resolve(topology, cfg)
-    faulty = linkfault.active(topo_full, cfg, train=train)
+    faulty = delivery is None and linkfault.active(topo_full, cfg,
+                                                   train=train)
     topo = topology_lib.nontrivial(topology, cfg)
     dt = paper_model.compute_dtype(cfg)
     params_c = paper_model.cast_compute(params, dt)
@@ -174,7 +183,9 @@ def loss_fn(params: INLParams, state, views, labels, rng, cfg, *,
         u, rate, u_joint = topology_lib.graph_cut_and_ship(
             topo, cfg, mu, logvar, eps, rate_estimator=rate_estimator,
             wire=wire, prior=params_c.priors, backend=backend)
-    if faulty:
+    if delivery is not None:
+        u_joint = linkfault.partial_fuse(u_joint, delivery)
+    elif faulty:
         mask = linkfault.round_delivery_mask(rng, topo_full, cfg,
                                              labels.shape[0], train=train)
         u_joint = linkfault.partial_fuse(u_joint, mask)
@@ -200,8 +211,25 @@ def loss_fn(params: INLParams, state, views, labels, rng, cfg, *,
 
 
 def make_train_step(cfg, optimizer, *, rate_estimator: str = "sample",
-                    wire: str = "dense", topology=None):
-    """jit-able train step closed over the experiment config + optimizer."""
+                    wire: str = "dense", topology=None,
+                    explicit_delivery: bool = False):
+    """jit-able train step closed over the experiment config + optimizer.
+
+    explicit_delivery=True returns the TRANSPORT-mode step: it takes a
+    trailing (J,) / (J, B) delivery-mask argument (the measured transport
+    outcome) instead of drawing faults in-graph."""
+    if explicit_delivery:
+        @jax.jit
+        def step_d(params, state, opt_state, views, labels, rng, delivery):
+            (loss, (metrics, new_state)), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(
+                    params, state, views, labels, rng, cfg, train=True,
+                    rate_estimator=rate_estimator, wire=wire,
+                    topology=topology, delivery=delivery)
+            new_params, new_opt = optimizer.update(grads, opt_state, params)
+            return new_params, new_state, new_opt, metrics
+        return step_d
+
     @jax.jit
     def step(params, state, opt_state, views, labels, rng):
         (loss, (metrics, new_state)), grads = jax.value_and_grad(

@@ -63,6 +63,24 @@ class Scheme:
         star keeps the pre-topology round bit for bit."""
         raise NotImplementedError
 
+    def make_transport_round(self, cfg, *, lr: float = 2e-3,
+                             wire: str = "dense", topology=None):
+        """Return round_fn(state, views, labels, rng, delivery) ->
+        (new_state, metrics): `make_round` with the fault outcome as an
+        EXPLICIT (J,) boolean argument instead of an in-graph draw.
+
+        `delivery` is the transport layer's measured verdict for this
+        round (repro/transport.NetworkTransport.round_outcome — retries,
+        circuit breakers and chaos already applied).  Each scheme applies
+        its own degradation semantics to the same mask: INL partial-fuses
+        the surviving views (one vote lost per failed route), FL drops the
+        missing clients from the FedAvg average (their whole round of
+        local work lost), SL carries the state through unchanged unless
+        every link delivered (the whole round lost) — the comparison the
+        chaos bench quantifies."""
+        raise NotImplementedError(f"scheme {self.name!r} has no "
+                                  "transport round")
+
     def make_sharded_round(self, cfg, mesh, *, lr: float = 2e-3,
                            wire: str = "dense", topology=None):
         """Round with the same signature/semantics as make_round's, executed

@@ -22,6 +22,19 @@ from repro.core.schemes import base
 from repro.data import multiview
 
 
+def _pack_exp2_views(views, labels, J: int, ls: int):
+    """(R, J, B, ...) round views -> FedAvg packing: client j takes
+    minibatches [j*ls, (j+1)*ls) and sees only ITS view of them, broadcast
+    to the model's J branch inputs (paper Exp-2).  Returns
+    ((J, ls, J, B, ...) views, (J, ls, B) labels)."""
+    B = views.shape[2]
+    v5 = views.reshape((J, ls) + views.shape[1:])
+    own = v5[jnp.arange(J)[:, None], jnp.arange(ls)[None, :],
+             jnp.arange(J)[:, None]]               # (J, ls, B, ...)
+    packed = jnp.broadcast_to(own[:, :, None], (J, ls, J) + own.shape[2:])
+    return packed, labels.reshape(J, ls, B)
+
+
 @_schemes.register
 class FLScheme(base.Scheme):
     name = "fl"
@@ -56,16 +69,7 @@ class FLScheme(base.Scheme):
 
         @jax.jit
         def round_fn(state, views, labels, rng):
-            # views (R, J, B, ...) with R == J * local_steps: client j takes
-            # minibatches [j*ls, (j+1)*ls) and sees only ITS view of them,
-            # broadcast to the model's J branch inputs (paper Exp-2).
-            R, Jv, B = views.shape[:3]
-            v5 = views.reshape((J, ls) + views.shape[1:])
-            own = v5[jnp.arange(J)[:, None], jnp.arange(ls)[None, :],
-                     jnp.arange(J)[:, None]]               # (J, ls, B, ...)
-            packed = jnp.broadcast_to(
-                own[:, :, None], (J, ls, J) + own.shape[2:])
-            lab = labels.reshape(J, ls, B)
+            packed, lab = _pack_exp2_views(views, labels, J, ls)
             rngs = jax.random.split(rng, J)
             args = (state["params"], state["state"], state["opt"],
                     packed, lab, rngs)
@@ -75,6 +79,30 @@ class FLScheme(base.Scheme):
                 params, st, opt_state, metrics = round_impl(*args, mask)
             else:
                 params, st, opt_state, metrics = round_impl(*args)
+            return ({"params": params, "state": st, "opt": opt_state},
+                    metrics)
+        return round_fn
+
+    def make_transport_round(self, cfg, *, lr: float = 2e-3,
+                             wire: str = "dense", topology=None):
+        # FL under a transport: the (J,) delivery verdict is the set of
+        # client uploads that ARRIVED — missing clients are dropped from
+        # the FedAvg average and their whole round of local work is lost
+        # (all-lost keeps the previous global model).  The whole-round
+        # granularity is the FL half of the one-vote-vs-whole-round
+        # comparison the chaos bench quantifies.
+        topology_lib.require_star(topology, cfg, scheme=self.name)
+        opt = optim.adam(lr)
+        round_impl = fl.make_round(cfg, opt, self.local_steps, faulty=True)
+        J, ls = cfg.num_clients, self.local_steps
+
+        @jax.jit
+        def round_fn(state, views, labels, rng, delivery):
+            packed, lab = _pack_exp2_views(views, labels, J, ls)
+            rngs = jax.random.split(rng, J)
+            params, st, opt_state, metrics = round_impl(
+                state["params"], state["state"], state["opt"],
+                packed, lab, rngs, delivery)
             return ({"params": params, "state": st, "opt": opt_state},
                     metrics)
         return round_fn

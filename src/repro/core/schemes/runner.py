@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import checkpoint as checkpoint_lib
 from repro.core import bandwidth, linkfault
 from repro.core import topology as topology_lib
 from repro.core.schemes import base
@@ -102,6 +103,56 @@ def _meter_fault_rounds(meter, scheme, topo_full, cfg, batch_size, charges,
         _meter_rounds(meter, off, delivered=dlv)
 
 
+def _meter_dump(meter) -> dict:
+    """The meter's full ledger state, JSON-serialisable (resume context)."""
+    return {"total_bits": meter.total_bits,
+            "measured_bytes": meter.measured_bytes,
+            "delivered_bits": meter.delivered_bits,
+            "delivered_measured_bytes": meter.delivered_measured_bytes,
+            "edge_bits": dict(meter.edge_bits),
+            "edge_measured_bytes": dict(meter.edge_measured_bytes),
+            "edge_delivered_bits": dict(meter.edge_delivered_bits)}
+
+
+def _meter_load(meter, d: dict) -> None:
+    meter.total_bits = float(d["total_bits"])
+    meter.measured_bytes = float(d["measured_bytes"])
+    meter.delivered_bits = float(d["delivered_bits"])
+    meter.delivered_measured_bytes = float(d["delivered_measured_bytes"])
+    meter.edge_bits = {k: float(v) for k, v in d["edge_bits"].items()}
+    meter.edge_measured_bytes = {k: float(v) for k, v
+                                 in d["edge_measured_bytes"].items()}
+    meter.edge_delivered_bits = {k: float(v) for k, v
+                                 in d["edge_delivered_bits"].items()}
+
+
+def _save_epoch(ckpt_dir, name, ep, state, curve, meter) -> None:
+    """One epoch-granular checkpoint: the FULL training state (params,
+    model state, optimizer) plus the curve and both meter ledgers in the
+    sidecar — everything a bit-identical resume needs (fp32/int leaves are
+    npz-lossless; bf16 stores as fp32 and round-trips bitwise)."""
+    checkpoint_lib.save(ckpt_dir, ep, jax.device_get(state),
+                        extra={"scheme": name, "epoch": ep,
+                               "curve": [list(map(float, p)) for p in curve],
+                               "meter": _meter_dump(meter)})
+
+
+def _try_resume(ckpt_dir, state, meter):
+    """Restore the latest epoch checkpoint when one exists: returns
+    (state, curve-so-far, epochs-already-done).  A fresh directory resumes
+    from nothing — epoch 0 with the given init state."""
+    step = checkpoint_lib.latest_step(ckpt_dir) if ckpt_dir else None
+    if step is None:
+        return state, [], 0
+    restored, _ = checkpoint_lib.restore(ckpt_dir, jax.device_get(state),
+                                         step=step)
+    meta = checkpoint_lib.load_meta(ckpt_dir, step)
+    curve = [CurvePoint(int(p[0]), *map(float, p[1:]))
+             for p in meta["curve"]]
+    _meter_load(meter, meta["meter"])
+    return restored, curve, int(meta["epoch"])
+
+
 def _meter_overheads(meter, scheme, cfg, state):
     """Once-per-epoch charges (SL's weight hand-offs ride a reliable
     control channel here — charged and delivered in full)."""
@@ -116,7 +167,9 @@ def run_scheme(name: str, views, labels, cfg, *, epochs: int,
                batch_size: int = 64, lr: float = 2e-3, seed: int = 0,
                eval_n: int = 512, dispatch: str = "scan", mesh=None,
                prefetch_size: int = 2, wire: str = "dense",
-               topology=None, meter=None) -> List[CurvePoint]:
+               topology=None, meter=None, transport=None,
+               ckpt_dir=None, ckpt_every: int = 1,
+               resume: bool = False) -> List[CurvePoint]:
     """Train scheme `name` for `epochs` over the (J, n, ...) multi-view set
     and return its accuracy/bandwidth curve (paper Figs. 5/7 rows).
 
@@ -139,16 +192,41 @@ def run_scheme(name: str, views, labels, cfg, *, epochs: int,
     core/topology.Topology routing the INL exchange over a multi-hop graph
     (the default star reproduces the pre-topology behaviour bit for bit;
     FL/SL validate and reject non-star graphs).
+
+    Elastic recovery: `ckpt_dir` saves an epoch-granular checkpoint every
+    `ckpt_every` epochs (full state + curve + meter ledgers);
+    `resume=True` restores the latest one and fast-forwards the data/rng
+    streams, so the resumed trajectory is BIT-IDENTICAL to the
+    uninterrupted run (tests/test_recovery.py pins it).
+
+    transport — a repro/transport.NetworkTransport over the resolved
+    topology: fault outcomes then come from the transport's retrying
+    channels / breakers / chaos schedule per round instead of in-graph
+    draws (Scheme.make_transport_round), metered on the transport's
+    offered/delivered ledgers.  Transport execution is per-round
+    (host-side masks), so it excludes mesh/scan dispatch.
     """
     from repro.core import schemes
     scheme = schemes.get(name)
+    if transport is not None:
+        if mesh is not None:
+            raise ValueError("transport execution is per-round; no mesh")
+        if meter is not None and meter is not transport.meter:
+            raise ValueError("pass either meter= or transport= (the "
+                             "transport owns the run's meter)")
+        return _run_transport(scheme, views, labels, cfg, epochs=epochs,
+                              batch_size=batch_size, lr=lr, seed=seed,
+                              eval_n=eval_n, wire=wire, topology=topology,
+                              transport=transport, ckpt_dir=ckpt_dir,
+                              ckpt_every=ckpt_every, resume=resume)
     if dispatch == "per_round":
         if mesh is not None:
             raise ValueError("mesh execution needs dispatch='scan'")
         return _run_per_round(scheme, views, labels, cfg, epochs=epochs,
                               batch_size=batch_size, lr=lr, seed=seed,
                               eval_n=eval_n, wire=wire, topology=topology,
-                              meter=meter)
+                              meter=meter, ckpt_dir=ckpt_dir,
+                              ckpt_every=ckpt_every, resume=resume)
     if dispatch != "scan":
         raise ValueError(f"unknown dispatch {dispatch!r}")
 
@@ -168,21 +246,35 @@ def run_scheme(name: str, views, labels, cfg, *, epochs: int,
         xs_shardings = sharding_lib.scheme_batch_shardings(
             mesh, cfg.num_clients, batch_size)
 
+    meter = bandwidth.BandwidthMeter() if meter is None else meter
+    start_ep = 0
+    if resume and ckpt_dir:
+        state, curve0, start_ep = _try_resume(ckpt_dir, state, meter)
+        if mesh is not None and start_ep:
+            state = jax.device_put(state,
+                                   scheme.state_shardings(cfg, state, mesh))
+    else:
+        curve0 = []
+
     def epoch_items():
         """(views (K,R,J,b,...), labels (K,R,b), rngs (K,2)) per epoch —
         the whole-epoch scan xs, assembled host-side (ONE gather over the
         epoch's index matrix, not per-batch stacking) so the prefetcher can
-        overlap assembly + transfer with the previous epoch's compute."""
+        overlap assembly + transfer with the previous epoch's compute.
+        A resumed run fast-forwards the rng chain through the completed
+        epochs WITHOUT assembling their batches — the downstream subkeys
+        (and so the trajectory) are exactly the uninterrupted run's."""
         rng = jax.random.PRNGKey(seed + 1)
         for ep in range(epochs):
+            rng, subs = _split_chain(rng, rounds)
+            if ep < start_ep:
+                continue
             idx = np.stack(list(multiview.batch_indices(
                 n, batch_size, seed=ep)))
             idx = idx[:rounds * bpr].reshape(rounds, bpr, batch_size)
-            rng, subs = _split_chain(rng, rounds)
             yield (np.moveaxis(views_np[:, idx], 0, 2), labels_np[idx],
                    subs)
 
-    meter = bandwidth.BandwidthMeter() if meter is None else meter
     charges = _round_charges(scheme, cfg, state, batch_size, wire=wire,
                              topology=topology)
     topo_full = topology_lib.resolve(topology, cfg)
@@ -191,11 +283,11 @@ def run_scheme(name: str, views, labels, cfg, *, epochs: int,
     ev = jnp.asarray(views_np[:, :n_eval])
     el = jnp.asarray(labels_np[:n_eval])
 
-    curve: List[CurvePoint] = []
+    curve: List[CurvePoint] = list(curve0)
     items = prefetch.prefetch_to_device(
         epoch_items() if rounds else iter(()), size=prefetch_size,
         shardings=xs_shardings)
-    for ep in range(epochs):
+    for ep in range(start_ep, epochs):
         if rounds:
             ep_views, ep_labels, ep_rngs = next(items)
             state, _ = epoch_fn(state, ep_views, ep_labels, ep_rngs)
@@ -213,11 +305,15 @@ def run_scheme(name: str, views, labels, cfg, *, epochs: int,
                                      topology=topology, cfg=cfg)
         curve.append(CurvePoint(ep + 1, acc, meter.gbits,
                                 meter.measured_gbits, meter.delivered_gbits))
+        if ckpt_dir and ((ep + 1) % max(ckpt_every, 1) == 0
+                         or ep + 1 == epochs):
+            _save_epoch(ckpt_dir, scheme.name, ep + 1, state, curve, meter)
     return curve
 
 
 def _run_per_round(scheme, views, labels, cfg, *, epochs, batch_size, lr,
-                   seed, eval_n, wire="dense", topology=None, meter=None):
+                   seed, eval_n, wire="dense", topology=None, meter=None,
+                   ckpt_dir=None, ckpt_every: int = 1, resume: bool = False):
     """The seed-style path: one transfer + one jitted dispatch per round.
     Kept verbatim as the throughput baseline (benchmarks/throughput_bench)
     and the semantics reference the scan path is tested against."""
@@ -226,17 +322,27 @@ def _run_per_round(scheme, views, labels, cfg, *, epochs, batch_size, lr,
     bpr = scheme.batches_per_round(cfg)
 
     meter = bandwidth.BandwidthMeter() if meter is None else meter
+    start_ep = 0
+    if resume and ckpt_dir:
+        state, curve0, start_ep = _try_resume(ckpt_dir, state, meter)
+    else:
+        curve0 = []
     charges = _round_charges(scheme, cfg, state, batch_size, wire=wire,
                              topology=topology)
     topo_full = topology_lib.resolve(topology, cfg)
     faulty = linkfault.active(topo_full, cfg, train=True)
+    rounds = (labels.shape[0] // batch_size) // bpr
     rng = jax.random.PRNGKey(seed + 1)
+    if start_ep and rounds:
+        # replay the completed epochs' split chain so the next subkey (and
+        # the trajectory downstream of it) matches the uninterrupted run
+        rng, _ = _split_chain(rng, start_ep * rounds)
     n_eval = min(eval_n, labels.shape[0])
     ev = jnp.asarray(views[:, :n_eval])
     el = jnp.asarray(labels[:n_eval])
 
-    curve: List[CurvePoint] = []
-    for ep in range(epochs):
+    curve: List[CurvePoint] = list(curve0)
+    for ep in range(start_ep, epochs):
         group_v, group_l = [], []
         for v, l in multiview.multiview_batches(views, labels, batch_size,
                                                 seed=ep):
@@ -259,6 +365,87 @@ def _run_per_round(scheme, views, labels, cfg, *, epochs, batch_size, lr,
                                      topology=topology, cfg=cfg)
         curve.append(CurvePoint(ep + 1, acc, meter.gbits,
                                 meter.measured_gbits, meter.delivered_gbits))
+        if ckpt_dir and ((ep + 1) % max(ckpt_every, 1) == 0
+                         or ep + 1 == epochs):
+            _save_epoch(ckpt_dir, scheme.name, ep + 1, state, curve, meter)
+    return curve
+
+
+def _run_transport(scheme, views, labels, cfg, *, epochs, batch_size, lr,
+                   seed, eval_n, wire="dense", topology=None, transport=None,
+                   ckpt_dir=None, ckpt_every: int = 1, resume: bool = False):
+    """Per-round execution where fault outcomes come from the TRANSPORT:
+    each round calls `transport.round_outcome(tick, ...)` — the retrying
+    channels, circuit breakers, and chaos schedule decide the (J,) delivery
+    mask — and hands the host-side verdict to the scheme's
+    `make_transport_round` round (explicit delivery, no in-graph draws).
+    The transport owns the run's meter: offered accrues per attempt,
+    delivered per surviving payload fraction.
+
+    Degradation semantics (the chaos bench's comparison): INL partial-fuses
+    the surviving views (one vote lost per failed route), FL drops missing
+    clients from the FedAvg average (their whole round of local work lost),
+    SL skips the whole round unless every link delivered.
+
+    A resume replays the completed ticks with ``charge=False`` — the breaker
+    trajectories are reproduced without re-charging the restored ledgers —
+    so the resumed run is bit-identical to the uninterrupted one."""
+    state = scheme.init(cfg, jax.random.PRNGKey(seed), lr=lr)
+    round_fn = scheme.make_transport_round(cfg, lr=lr, wire=wire,
+                                           topology=topology)
+    bpr = scheme.batches_per_round(cfg)
+    meter = transport.meter
+    charges = _round_charges(scheme, cfg, state, batch_size, wire=wire,
+                             topology=topology)
+    edges = transport.topo.edges
+    if set(charges) == {None}:
+        # scalar totals (FL/SL): split the round's charge equally across
+        # the (star) edges so per-edge attempts re-offer their own share
+        b, nb = charges[None]
+        charges = {e.key: (b / len(edges), nb / len(edges)) for e in edges}
+    rounds = (labels.shape[0] // batch_size) // bpr
+
+    start_ep = 0
+    if resume and ckpt_dir:
+        state, curve0, start_ep = _try_resume(ckpt_dir, state, meter)
+    else:
+        curve0 = []
+    rng = jax.random.PRNGKey(seed + 1)
+    tick = start_ep * rounds
+    if tick:
+        rng, _ = _split_chain(rng, tick)
+        for t in range(tick):                 # breaker replay, ledger-free
+            transport.round_outcome(t, batch_size, charges=charges,
+                                    charge=False)
+
+    n_eval = min(eval_n, labels.shape[0])
+    ev = jnp.asarray(views[:, :n_eval])
+    el = jnp.asarray(labels[:n_eval])
+
+    curve: List[CurvePoint] = list(curve0)
+    for ep in range(start_ep, epochs):
+        group_v, group_l = [], []
+        for v, l in multiview.multiview_batches(views, labels, batch_size,
+                                                seed=ep):
+            group_v.append(v)
+            group_l.append(l)
+            if len(group_v) < bpr:
+                continue
+            rng, sub = jax.random.split(rng)
+            rep = transport.round_outcome(tick, batch_size, charges=charges)
+            tick += 1
+            state, metrics = round_fn(
+                state, jnp.asarray(np.stack(group_v)),
+                jnp.asarray(np.stack(group_l)), sub, jnp.asarray(rep.mask))
+            group_v, group_l = [], []
+        _meter_overheads(meter, scheme, cfg, state)
+        acc = base.evaluate_accuracy(scheme, state, ev, el,
+                                     topology=topology, cfg=cfg)
+        curve.append(CurvePoint(ep + 1, acc, meter.gbits,
+                                meter.measured_gbits, meter.delivered_gbits))
+        if ckpt_dir and ((ep + 1) % max(ckpt_every, 1) == 0
+                         or ep + 1 == epochs):
+            _save_epoch(ckpt_dir, scheme.name, ep + 1, state, curve, meter)
     return curve
 
 

@@ -54,11 +54,8 @@ class SLScheme(base.Scheme):
             return new_state, metrics
         return faulty_round
 
-    def make_round(self, cfg, *, lr: float = 2e-3, wire: str = "dense",
-                   topology=None):
-        # SL's cut is ONE client->server boundary (all conv branches live on
-        # the active client), so only the star topology has a reading here
-        topology_lib.require_star(topology, cfg, scheme=self.name)
+    def _make_raw_round(self, cfg, *, lr: float, wire: str):
+        """The fault-free round body (no link-survival wrapper)."""
         oc, osrv = optim.adam(lr), optim.adam(lr)
         step = sl.make_train_step(
             oc, osrv, link_bits=cfg.link_bits, wire=wire,
@@ -70,7 +67,35 @@ class SLScheme(base.Scheme):
                 state["opt_c"], state["opt_s"], views[0], labels[0], rng)
             return ({"client": client, "server": server, "state": st,
                      "opt_c": opt_c, "opt_s": opt_s}, metrics)
-        return self._skip_failed_round(cfg, topology, round_fn)
+        return round_fn
+
+    def make_round(self, cfg, *, lr: float = 2e-3, wire: str = "dense",
+                   topology=None):
+        # SL's cut is ONE client->server boundary (all conv branches live on
+        # the active client), so only the star topology has a reading here
+        topology_lib.require_star(topology, cfg, scheme=self.name)
+        return self._skip_failed_round(
+            cfg, topology, self._make_raw_round(cfg, lr=lr, wire=wire))
+
+    def make_transport_round(self, cfg, *, lr: float = 2e-3,
+                             wire: str = "dense", topology=None):
+        # SL under a transport: the round's exchange rides the single
+        # client->server boundary, so it has no partial reading — the round
+        # RUNS iff every link delivered (the transport already spent the
+        # retry budget), else the state carries through unchanged and the
+        # whole round is lost.  The SL half of the one-vote-vs-whole-round
+        # comparison.
+        import jax.numpy as jnp
+        topology_lib.require_star(topology, cfg, scheme=self.name)
+        inner = self._make_raw_round(cfg, lr=lr, wire=wire)
+
+        def round_fn(state, views, labels, rng, delivery):
+            new_state, metrics = inner(state, views, labels, rng)
+            ok = jnp.all(delivery)
+            new_state = jax.tree.map(lambda n, o: jnp.where(ok, n, o),
+                                     new_state, state)
+            return new_state, metrics
+        return round_fn
 
     def make_sharded_round(self, cfg, mesh, *, lr: float = 2e-3,
                            wire: str = "dense", topology=None):

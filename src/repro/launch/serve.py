@@ -117,17 +117,31 @@ def _inl_setup(args):
 
     scheme = schemes.get("inl")
     state = scheme.init(cfg, jax.random.PRNGKey(args.seed))
-    round_fn = scheme.make_round(cfg)
     imgs, labels = multiview.make_base_dataset(
         cfg.dataset_size, image_shape=cfg.image_shape, seed=args.seed)
     views = multiview.make_views(imgs, cfg.noise_stds)
-    rng = jax.random.PRNGKey(args.seed + 1)
-    epochs = 2 if args.smoke else 5
-    for ep in range(epochs):
-        for v, l in multiview.multiview_batches(views, labels, 32, seed=ep):
-            rng, sub = jax.random.split(rng)
-            state, _ = round_fn(state, jnp.asarray(v)[None],
-                                jnp.asarray(l)[None], sub)
+    ckpt_dir = getattr(args, "ckpt_dir", "")
+    restored = False
+    if ckpt_dir:
+        from repro import checkpoint
+        if checkpoint.latest_step(ckpt_dir) is not None:
+            state, step = checkpoint.restore(ckpt_dir, jax.device_get(state))
+            print(f"serving from checkpoint step {step} ({ckpt_dir})")
+            restored = True
+    if not restored:
+        round_fn = scheme.make_round(cfg)
+        rng = jax.random.PRNGKey(args.seed + 1)
+        epochs = 2 if args.smoke else 5
+        for ep in range(epochs):
+            for v, l in multiview.multiview_batches(views, labels, 32,
+                                                    seed=ep):
+                rng, sub = jax.random.split(rng)
+                state, _ = round_fn(state, jnp.asarray(v)[None],
+                                    jnp.asarray(l)[None], sub)
+        if ckpt_dir:
+            from repro import checkpoint
+            checkpoint.save(ckpt_dir, epochs, jax.device_get(state),
+                            extra={"arch": "paper-inl", "epochs": epochs})
 
     # a network whose uplinks straggle: exponential latency tails around
     # the deadline, plus a little outright loss
@@ -152,9 +166,16 @@ def serve_inl(args):
     n = clamp_requests(args.requests, views.shape[1], strict=args.strict)
     ev, el = views[:, :n], labels[:n]
 
+    transport = None
+    if args.transport:
+        from repro.transport import DEFAULT_RETRY, NetworkTransport
+        transport = NetworkTransport(topo, cfg, seed=args.seed + 3,
+                                     policy=DEFAULT_RETRY,
+                                     channels=args.transport)
     engine = ServingEngine(scheme, state, cfg, topology=topo,
                            wire=args.wire, deadline_ms=args.deadline_ms,
-                           seed=args.seed + 2)
+                           seed=args.seed + 2, transport=transport,
+                           speculative=args.speculative)
     engine.warmup()
     t0 = time.time()
     with engine:
@@ -184,10 +205,20 @@ def serve_inl(args):
     print(f"accuracy: {acc:.4f} under the deadline vs {clean_acc:.4f} on a "
           f"clean network; offered={engine.meter.gbits * 1e3:.3f} Mbits "
           f"delivery_ratio={engine.meter.delivery_ratio:.3f}")
+    if transport is not None:
+        snap = transport.snapshot()
+        print(f"transport: channels={args.transport} "
+              f"patched={engine.stats.patched} "
+              f"views_recovered={engine.stats.views_recovered} "
+              f"breakers={ {k: b['state'] for k, b in snap['breaker'].items()} }")
+        transport.close()
     assert all(c <= 1 for c in engine.trace_counts.values()), \
         f"bucket predict retraced: {engine.trace_counts}"
     if args.deadline_ms is not None:
-        assert int(arrived.min()) < J, \
+        # speculative fusion RECOVERS stragglers (their patched fusion
+        # fuses everything that eventually arrived), so the evidence the
+        # deadline bit is either a short fusion or a patched request
+        assert int(arrived.min()) < J or engine.stats.patched > 0, \
             "deadline never bit — straggler path not exercised"
     if not engine.faulty:
         assert np.allclose(probs, clean, atol=2e-6, rtol=0), \
@@ -253,6 +284,20 @@ def main():
     ap.add_argument("--strict", action="store_true",
                     help="error (rather than clamp) when --requests "
                          "exceeds the dataset")
+    ap.add_argument("--ckpt-dir", default="",
+                    help="paper-inl: serve the latest checkpoint under this "
+                         "directory (skipping the smoke training), or save "
+                         "the smoke-trained model there when none exists — "
+                         "serving restarts recover instead of retraining")
+    ap.add_argument("--transport", choices=("loopback", "socket"),
+                    default=None,
+                    help="paper-inl: ride each view fragment over a real "
+                         "retrying edge channel (repro/transport/) instead "
+                         "of in-graph fault draws")
+    ap.add_argument("--speculative", action="store_true",
+                    help="paper-inl (needs --transport): fuse what arrived "
+                         "at the deadline, patch late stragglers into the "
+                         "next bucket")
     ap.add_argument("--load-gen", action="store_true",
                     help="paper-inl: Poisson offered-load sweep instead of "
                          "the one-shot block")

@@ -53,6 +53,12 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the latest --ckpt-dir checkpoint (params "
+                         "AND optimizer state) and fast-forward the "
+                         "data/rng streams, finishing the schedule "
+                         "bit-identically to an uninterrupted run "
+                         "(repro/chaos.py SIGKILLs + asserts it)")
     ap.add_argument("--log-every", type=int, default=10,
                     help="(superseded: metrics are logged once per scan "
                          "group, i.e. every --scan-steps steps)")
@@ -96,10 +102,28 @@ def main():
     data = token_data.lm_batches(cfg, args.batch, args.seq, steps=args.steps,
                                  seed=args.seed)
     rng = jax.random.PRNGKey(args.seed + 1)
-    t0 = time.time()
-    history = []
     K = max(args.scan_steps, 1)
     step = 0
+    if args.resume and args.ckpt_dir:
+        latest = checkpoint.latest_step(args.ckpt_dir)
+        if latest is not None:
+            restored, _ = checkpoint.restore(
+                args.ckpt_dir, {"params": params, "opt": opt_state},
+                step=latest)
+            params, opt_state = restored["params"], restored["opt"]
+            step = latest
+            # fast-forward the streams through the completed work: the data
+            # generator is deterministic per (cfg, seed), and the inl rng
+            # splits once per scan group — replaying both makes the resumed
+            # subkeys (and so the trajectory) the uninterrupted run's
+            for _ in range(step):
+                next(data)
+            if args.scheme == "inl":
+                for _ in range((step + K - 1) // K):
+                    rng, _ = jax.random.split(rng)
+            print(f"resumed from step {step} ({args.ckpt_dir})")
+    t0 = time.time()
+    history = []
 
     def run_group(params, opt_state, rng, batches, k):
         # one jitted scan over the group: K optimizer steps, zero
@@ -125,7 +149,8 @@ def main():
         # advances by the group size, so an exact-multiple test would skip)
         if args.ckpt_dir and args.ckpt_every and \
                 step // args.ckpt_every > prev_step // args.ckpt_every:
-            checkpoint.save(args.ckpt_dir, step, params,
+            checkpoint.save(args.ckpt_dir, step,
+                            {"params": params, "opt": opt_state},
                             extra={"arch": cfg.name, "scheme": args.scheme})
         return params, opt_state, rng
 
@@ -140,12 +165,14 @@ def main():
         params, opt_state, rng = run_group(params, opt_state, rng, batches,
                                            k)
     if args.ckpt_dir:
-        checkpoint.save(args.ckpt_dir, args.steps, params,
+        checkpoint.save(args.ckpt_dir, args.steps,
+                        {"params": params, "opt": opt_state},
                         extra={"arch": cfg.name, "scheme": args.scheme})
-    first, last = history[0], history[-1]
-    key_metric = "loss" if "loss" in last else "ce"
-    print(f"loss {first[key_metric]:.4f} -> {last[key_metric]:.4f} "
-          f"({args.steps} steps, {time.time()-t0:.1f}s)")
+    if history:
+        first, last = history[0], history[-1]
+        key_metric = "loss" if "loss" in last else "ce"
+        print(f"loss {first[key_metric]:.4f} -> {last[key_metric]:.4f} "
+              f"({args.steps} steps, {time.time()-t0:.1f}s)")
     return history
 
 

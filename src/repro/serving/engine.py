@@ -75,6 +75,11 @@ class ServedRequest:
     views_fused: int             # how many of the J views made the fusion
     latency_ms: float            # submit -> completion (queue + batch + run)
     t_done: float                # perf_counter stamp at completion
+    # which fusion answered (speculative-fusion accounting): "first" — the
+    # at-deadline fusion; "patched" — a later bucket after the request's
+    # stragglers arrived and were patched in
+    served_by: str = "first"
+    views_recovered: int = 0     # late views the patched fusion added
 
 
 @dataclass
@@ -85,6 +90,8 @@ class ServeStats:
     views_fused: List[int] = field(default_factory=list)
     launches: int = 0
     launched_rows: int = 0       # bucket rows launched (padding included)
+    patched: int = 0             # requests answered by a patched fusion
+    views_recovered: int = 0     # straggler views patched fusions added
 
     @property
     def pad_fraction(self) -> float:
@@ -110,13 +117,27 @@ class ServingEngine:
     launch -> complete loop.  `stop()` drains everything queued before
     joining.  The engine also works fully synchronously: `serve()` submits
     a block and waits, and `step()` runs one scheduler iteration inline —
-    tests use the inline mode for determinism.
+    tests use the inline mode for determinism.  A scheduler-thread
+    exception fails every pending Future and re-raises on the next
+    `submit` / `stop` / `__exit__` (mirroring the data/prefetch.py
+    producer-exception contract) — it never strands a blocked submitter.
+
+    `transport=` (a repro/transport.NetworkTransport over the same
+    topology) moves fault semantics OFF the jitted graph: each submitted
+    request rides the transport's retrying channels and its delivery
+    outcome (on-time / late / lost per view) becomes the explicit fusion
+    mask — the engine then meters through the transport's offered /
+    delivered ledgers.  `speculative=True` adds speculative fusion: a
+    request whose views straggled past the deadline is answered by a
+    LATER fusion that patches the stragglers in (`ServedRequest.served_by
+    == "patched"`), instead of dropping them.
     """
 
     def __init__(self, scheme, state, cfg, *, topology=None,
                  wire: str = "dense", buckets: Sequence[int] = None,
                  deadline_ms: Optional[float] = None, seed: int = 0,
-                 meter: Optional[bandwidth.BandwidthMeter] = None):
+                 meter: Optional[bandwidth.BandwidthMeter] = None,
+                 transport=None, speculative: bool = False):
         self.scheme, self.state, self.cfg = scheme, state, cfg
         self.topology = topology
         self.topo = topology_lib.resolve(topology, cfg)
@@ -129,22 +150,42 @@ class ServingEngine:
         # predict path — bit-identical to scheme.predict
         self.faulty = (linkfault.has_link_models(self.topo)
                        or deadline_ms is not None)
+        self.transport = transport
+        self.speculative = bool(speculative)
+        if speculative and transport is None:
+            raise ValueError("speculative fusion needs a transport= — only "
+                             "a transport distinguishes LATE views (worth "
+                             "patching) from LOST ones")
         self._key = jax.random.PRNGKey(seed)
         self._queues: Dict[str, collections.deque] = {
             name: collections.deque() for name in self.topo.view_nodes()}
         self._futures: Dict[int, Future] = {}
         self._submit_t: Dict[int, float] = {}
+        self._reports: Dict[int, object] = {}    # rid -> RequestReport
+        self._patches: collections.deque = collections.deque()
         self._next_rid = 0
         self._work = threading.Condition()
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
         # one jitted predict per bucket; the list inside each closure is
         # appended to at TRACE time only, so trace_counts[b] is the number
         # of compilations bucket b ever paid (the no-retracing contract)
         self.trace_counts: Dict[int, int] = {b: 0 for b in self.buckets}
-        self._predict = {b: self._make_bucket_predict(b)
-                         for b in self.buckets}
-        self.meter = bandwidth.BandwidthMeter() if meter is None else meter
+        if transport is None:
+            self._predict = {b: self._make_bucket_predict(b)
+                             for b in self.buckets}
+        else:
+            self._predict = {b: self._make_bucket_predict_masked(b)
+                             for b in self.buckets}
+        # in transport mode the transport's meter IS the serving ledger
+        # (offered accrues per attempt at transmit time, delivered per
+        # consumed fusion via credit_delivered)
+        if transport is not None and meter is None:
+            self.meter = transport.meter
+        else:
+            self.meter = bandwidth.BandwidthMeter() if meter is None \
+                else meter
         self._edge_bits = metering.request_edge_bits(self.topo, cfg)
         self._edge_nbytes = metering.request_edge_wire_bytes(
             self.topo, cfg, wire=wire)
@@ -175,6 +216,21 @@ class ServingEngine:
             return probs, delivery
         return jax.jit(fn)
 
+    def _make_bucket_predict_masked(self, bucket: int):
+        """The transport-mode variant: the delivery mask is an EXPLICIT
+        argument (the transport's measured outcome), not an in-graph
+        draw — same one-compile-per-bucket contract."""
+        scheme, cfg = self.scheme, self.cfg
+        topo_arg, wire = self.topology, self.wire
+        counts = self.trace_counts
+
+        def fn(state, views, delivery):
+            counts[bucket] += 1          # trace-time side effect only
+            return scheme.predict_batched(
+                state, views, delivery=delivery, topology=topo_arg,
+                cfg=cfg, wire=wire)
+        return jax.jit(fn)
+
     def warmup(self) -> None:
         """Pay every bucket's compile up front (latency measurements then
         never include a trace)."""
@@ -182,9 +238,38 @@ class ServingEngine:
         H, W, C = self.cfg.image_shape
         for b in self.buckets:
             views = jnp.zeros((J, b, H, W, C), jnp.float32)
-            rids = jnp.zeros((b,), jnp.int32)
-            out, _ = self._predict[b](self.state, views, rids, self._key)
+            if self.transport is not None:
+                out = self._predict[b](self.state, views,
+                                       jnp.ones((J, b), bool))
+            else:
+                rids = jnp.zeros((b,), jnp.int32)
+                out, _ = self._predict[b](self.state, views, rids, self._key)
             out.block_until_ready()
+
+    # -- scheduler-failure propagation ------------------------------------
+
+    def _check_error(self) -> None:
+        if self._error is not None:
+            raise RuntimeError(
+                "serving engine scheduler failed; no further requests will "
+                "be served") from self._error
+
+    def _fail_pending(self, exc: BaseException) -> None:
+        """Scheduler died: record the error, fail EVERY pending Future
+        (blocked waiters wake with the real exception instead of hanging),
+        drop the queues."""
+        with self._work:
+            self._error = exc
+            for fut in self._futures.values():
+                if not fut.done():
+                    fut.set_exception(exc)
+            self._futures.clear()
+            self._submit_t.clear()
+            self._reports.clear()
+            self._patches.clear()
+            for q in self._queues.values():
+                q.clear()
+            self._work.notify_all()
 
     # -- request intake ----------------------------------------------------
 
@@ -192,20 +277,44 @@ class ServingEngine:
         """Enqueue one request's (J, H, W, C) views — one fragment per
         measure/relay node queue, atomically, so the per-node queues always
         pop aligned.  Returns (request id, Future resolving to a
-        ServedRequest)."""
+        ServedRequest).
+
+        With a transport, the fragments first RIDE it: the request's id is
+        the transport tick, its delivery report (per-view on-time / late /
+        lost after retries, breakers and chaos) is recorded for the
+        scheduler, and the channels genuinely carry the fragment bytes."""
+        self._check_error()
         views = np.asarray(views)
         if views.shape[0] != self.topo.num_views():
             raise ValueError(
                 f"request has {views.shape[0]} views; topology "
                 f"{self.topo.describe()} expects {self.topo.num_views()}")
         fut: Future = Future()
+        if self.transport is None:
+            with self._work:
+                rid = self._next_rid
+                self._next_rid += 1
+                for j, name in enumerate(self.topo.view_nodes()):
+                    self._queues[name].append((rid, views[j]))
+                self._futures[rid] = fut
+                self._submit_t[rid] = time.perf_counter()
+                self._work.notify()
+            return rid, fut
         with self._work:
             rid = self._next_rid
             self._next_rid += 1
-            for j, name in enumerate(self.topo.view_nodes()):
-                self._queues[name].append((rid, views[j]))
+        # the channel walk happens OUTSIDE the scheduler lock (the
+        # transport serialises itself); the enqueue below is atomic, so
+        # the per-node queues still pop aligned
+        report = self.transport.send_request(rid, views,
+                                             deadline_ms=self.deadline_ms)
+        with self._work:
+            self._check_error()
             self._futures[rid] = fut
             self._submit_t[rid] = time.perf_counter()
+            self._reports[rid] = report
+            for j, name in enumerate(self.topo.view_nodes()):
+                self._queues[name].append((rid, views[j]))
             self._work.notify()
         return rid, fut
 
@@ -236,6 +345,33 @@ class ServingEngine:
             frags.append(np.stack([f for _, f in row]))
         return np.asarray(rids, np.int32), np.stack(frags)
 
+    def _collect_transport(self):
+        """Transport-mode collect (caller holds the lock): pending PATCH
+        rows first (stragglers whose views have now arrived — appended by
+        the previous launch), then the oldest aligned new requests, up to
+        the largest bucket.  Returns a list of
+        (rid, (J, ...) views, (J,) mask, resolve?, served_by) rows."""
+        rows = []
+        cap = self.buckets[-1]
+        while self._patches and len(rows) < cap:
+            rows.append(self._patches.popleft())
+        names = self.topo.view_nodes()
+        m = min(len(self._queues[nm]) for nm in names)
+        m = min(m, cap - len(rows))
+        for _ in range(m):
+            popped = [self._queues[nm].popleft() for nm in names]
+            rid = popped[0][0]
+            assert all(r == rid for r, _ in popped), (rid, popped)
+            views = np.stack([f for _, f in popped])
+            report = self._reports[rid]
+            if self.speculative and bool(report.stragglers.any()):
+                # serve the at-deadline fusion speculatively, but answer
+                # from the NEXT bucket once the stragglers are patched in
+                rows.append((rid, views, report.on_time, False, "first"))
+            else:
+                rows.append((rid, views, report.on_time, True, "first"))
+        return rows or None
+
     def _execute(self, rids: np.ndarray, views: np.ndarray) -> None:
         n = len(rids)
         bucket = batching.pick_bucket(n, self.buckets)
@@ -264,32 +400,97 @@ class ServingEngine:
                                          views_fused=fused, latency_ms=lat,
                                          t_done=t_done))
 
+    def _execute_transport(self, rows) -> None:
+        """Launch one transport-mode batch: explicit per-row masks, padded
+        to the bucket grid (padding repeats the last row with an all-True
+        mask — row-inert either way).  Resolving rows complete their
+        Future and credit the delivered ledger; non-resolving rows
+        (speculative stragglers) re-enter as patch rows carrying their
+        EVENTUAL mask."""
+        n = len(rows)
+        bucket = batching.pick_bucket(n, self.buckets)
+        views = np.stack([v for _, v, _, _, _ in rows], axis=1)
+        mask = np.stack([m for _, _, m, _, _ in rows], axis=1)
+        pad = bucket - n
+        if pad:
+            views = np.concatenate(
+                [views, np.repeat(views[:, -1:], pad, axis=1)], axis=1)
+            mask = np.concatenate(
+                [mask, np.ones((mask.shape[0], pad), bool)], axis=1)
+        probs = self._predict[bucket](self.state, jnp.asarray(views),
+                                      jnp.asarray(mask))
+        probs_np = np.asarray(probs)[:n]          # blocks until ready
+        t_done = time.perf_counter()
+        self.stats.launches += 1
+        self.stats.launched_rows += bucket
+        for i, (rid, vrow, mrow, resolve, served_by) in enumerate(rows):
+            rid = int(rid)
+            if not resolve:
+                report = self._reports[rid]
+                self._patches.append(
+                    (rid, vrow, np.asarray(report.eventual, bool), True,
+                     "patched"))
+                continue
+            with self._work:
+                fut = self._futures.pop(rid)
+                t_sub = self._submit_t.pop(rid)
+                report = self._reports.pop(rid)
+            self.transport.credit_delivered(mrow)
+            lat = (t_done - t_sub) * 1e3
+            fused = int(np.asarray(mrow).sum())
+            recovered = int(report.stragglers.sum()) \
+                if served_by == "patched" else 0
+            self.stats.completed += 1
+            self.stats.latencies_ms.append(lat)
+            self.stats.views_fused.append(fused)
+            if served_by == "patched":
+                self.stats.patched += 1
+                self.stats.views_recovered += recovered
+            fut.set_result(ServedRequest(
+                rid=rid, probs=probs_np[i], views_fused=fused,
+                latency_ms=lat, t_done=t_done, served_by=served_by,
+                views_recovered=recovered))
+
+    def _collect_any(self):
+        return self._collect_transport() if self.transport is not None \
+            else self._collect()
+
+    def _execute_any(self, batch) -> None:
+        if self.transport is not None:
+            self._execute_transport(batch)
+        else:
+            self._execute(*batch)
+
     def step(self, timeout: float = 0.0) -> int:
         """One scheduler iteration inline: collect -> launch -> complete.
         Returns the number of requests completed (0 when idle past
         `timeout`)."""
+        self._check_error()
         with self._work:
-            batch = self._collect()
+            batch = self._collect_any()
             if batch is None and timeout > 0:
                 self._work.wait(timeout)
-                batch = self._collect()
+                batch = self._collect_any()
         if batch is None:
             return 0
-        rids, views = batch
-        self._execute(rids, views)
-        return len(rids)
+        self._execute_any(batch)
+        return len(batch) if self.transport is not None else len(batch[0])
 
     def _loop(self) -> None:
-        while True:
-            with self._work:
-                batch = self._collect()
-                if batch is None:
-                    if self._stop.is_set():
-                        return                     # queues drained: done
-                    self._work.wait(timeout=0.05)
-                    continue
-            rids, views = batch
-            self._execute(rids, views)
+        try:
+            while True:
+                with self._work:
+                    batch = self._collect_any()
+                    if batch is None:
+                        if self._stop.is_set():
+                            return                 # queues drained: done
+                        self._work.wait(timeout=0.05)
+                        continue
+                self._execute_any(batch)
+        except BaseException as exc:               # noqa: BLE001
+            # a dead scheduler must not strand blocked submitters: fail
+            # every pending Future now, re-raise on the next submit/stop
+            self._fail_pending(exc)
 
     def start(self) -> "ServingEngine":
         if self._thread is not None:
@@ -301,9 +502,13 @@ class ServingEngine:
         self._thread.start()
         return self
 
-    def stop(self, timeout: float = 60.0) -> None:
-        """Drain the queues, complete everything in flight, join."""
+    def stop(self, timeout: float = 60.0, reraise: bool = True) -> None:
+        """Drain the queues, complete everything in flight, join.  If the
+        scheduler thread died, its exception re-raises here (pending
+        Futures were already failed with it)."""
         if self._thread is None:
+            if reraise:
+                self._check_error()
             return
         self._stop.set()
         with self._work:
@@ -312,12 +517,15 @@ class ServingEngine:
         if self._thread.is_alive():
             raise RuntimeError("serving engine failed to drain and stop")
         self._thread = None
+        if reraise:
+            self._check_error()
 
     def __enter__(self) -> "ServingEngine":
         return self.start()
 
-    def __exit__(self, *exc) -> None:
-        self.stop()
+    def __exit__(self, exc_type, *exc) -> None:
+        # don't mask an in-flight body exception with the scheduler's
+        self.stop(reraise=exc_type is None)
 
     # -- synchronous conveniences -----------------------------------------
 

@@ -19,7 +19,16 @@ import numpy as np
 
 
 def percentile_ms(latencies, q: float) -> float:
-    return float(np.percentile(np.asarray(latencies, np.float64), q))
+    """`np.percentile` with the degenerate sample sizes guarded: an empty
+    list is 0.0 (not a ValueError mid-benchmark) and a single sample IS
+    every percentile — so `run_poisson` with one request reports a real
+    p99 instead of crashing the summary."""
+    lats = np.asarray(latencies, np.float64)
+    if lats.size == 0:
+        return 0.0
+    if lats.size == 1:
+        return float(lats[0])
+    return float(np.percentile(lats, q))
 
 
 def run_poisson(engine, views_pool: np.ndarray, *, rate_rps: float,
@@ -56,10 +65,13 @@ def run_poisson(engine, views_pool: np.ndarray, *, rate_rps: float,
         futs.append(engine.submit(views_pool[:, i % n_pool])[1])
 
     results = [f.result(timeout=timeout) for f in futs]
-    t_end = max(r.t_done for r in results)
+    # num_requests=0 (or 1) must yield a NaN-free summary: guard the empty
+    # max()/mean() and let percentile_ms handle the sub-2-sample lists
+    t_end = max((r.t_done for r in results), default=t0)
     span = max(t_end - t0, 1e-9)
 
     lats = [r.latency_ms for r in results]
+    fused = [r.views_fused for r in results]
     offered_bits = engine.meter.total_bits - bits0
     delivered_bits = engine.meter.delivered_bits - dbits0
     return {
@@ -68,7 +80,7 @@ def run_poisson(engine, views_pool: np.ndarray, *, rate_rps: float,
         "p50_ms": percentile_ms(lats, 50),
         "p99_ms": percentile_ms(lats, 99),
         "served": len(results),
-        "mean_views_fused": float(np.mean([r.views_fused for r in results])),
+        "mean_views_fused": float(np.mean(fused)) if fused else 0.0,
         "offered_gbits": offered_bits / 1e9,
         "delivered_gbits": delivered_bits / 1e9,
         "delivery_ratio": (delivered_bits / offered_bits

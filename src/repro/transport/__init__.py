@@ -1,0 +1,21 @@
+"""Fault-tolerant edge transport: channels, retry/breaker policies, and the
+per-topology `NetworkTransport` that turns `linkfault.LinkModel` parameters
+into actual transport outcomes (delivered / late / lost payloads) for the
+serving engine and the training round paths."""
+from repro.transport.channel import (CHANNEL_KINDS, Channel, LoopbackChannel,
+                                     SocketChannel, decode_fragment,
+                                     encode_fragment, make_channel)
+from repro.transport.network import (DOMAIN_REQUEST, DOMAIN_ROUND,
+                                     EdgeResult, EdgeTransport,
+                                     NetworkTransport, RequestReport,
+                                     RoundReport)
+from repro.transport.policy import (DEFAULT_RETRY, NO_RETRY, CircuitBreaker,
+                                    NoBreaker, RetryPolicy)
+
+__all__ = [
+    "CHANNEL_KINDS", "Channel", "LoopbackChannel", "SocketChannel",
+    "decode_fragment", "encode_fragment", "make_channel",
+    "DOMAIN_REQUEST", "DOMAIN_ROUND", "EdgeResult", "EdgeTransport",
+    "NetworkTransport", "RequestReport", "RoundReport",
+    "DEFAULT_RETRY", "NO_RETRY", "CircuitBreaker", "NoBreaker", "RetryPolicy",
+]

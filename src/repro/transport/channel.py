@@ -1,0 +1,175 @@
+"""Edge channels: the byte-moving layer under the fault-tolerant transport.
+
+One `Channel` per topology edge.  The interface is deliberately minimal —
+length-prefixed frames in submission order — because everything clever
+(retries, backoff, breakers, fault injection, routing) lives ABOVE it in
+`transport/network.py`.  Two implementations share it:
+
+    LoopbackChannel   an in-process deque — the fast path the serving
+                      engine uses by default (same process, no
+                      serialisation cost beyond the frame encode).
+
+    SocketChannel     a REAL socket (`socket.socketpair()` — an AF_UNIX
+                      stream pair, i.e. actual kernel buffers): frames are
+                      serialised, written to one end and read back from the
+                      other, so a payload served over it genuinely left
+                      Python object space.  The contract tests run the same
+                      suite over both transports.
+
+Frames carry view fragments: `(request id, view index, ndarray)` encoded
+with a fixed header (`encode_fragment`/`decode_fragment`), so a fragment
+that crossed a socket reconstructs bit-identically on the far side.
+"""
+from __future__ import annotations
+
+import collections
+import socket
+import struct
+import threading
+from typing import Optional, Tuple
+
+import numpy as np
+
+# frame header: magic, request id, view index, dtype tag length, ndim
+_MAGIC = 0x494E4C46                     # "INLF"
+_HEAD = struct.Struct("<IqiBB")
+_LEN = struct.Struct("<I")
+_MAX_FRAME = 1 << 28                    # 256 MB sanity bound
+
+
+def encode_fragment(rid: int, view_index: int, arr: np.ndarray) -> bytes:
+    """One view fragment as a self-describing byte frame."""
+    arr = np.ascontiguousarray(arr)
+    dt = arr.dtype.str.encode("ascii")
+    head = _HEAD.pack(_MAGIC, rid, view_index, len(dt), arr.ndim)
+    dims = struct.pack(f"<{arr.ndim}q", *arr.shape)
+    return head + dt + dims + arr.tobytes()
+
+
+def decode_fragment(frame: bytes) -> Tuple[int, int, np.ndarray]:
+    """Inverse of `encode_fragment`; bit-exact round trip."""
+    magic, rid, j, dtlen, ndim = _HEAD.unpack_from(frame, 0)
+    if magic != _MAGIC:
+        raise ValueError(f"bad fragment frame (magic {magic:#x})")
+    off = _HEAD.size
+    dt = np.dtype(frame[off:off + dtlen].decode("ascii"))
+    off += dtlen
+    shape = struct.unpack_from(f"<{ndim}q", frame, off)
+    off += 8 * ndim
+    arr = np.frombuffer(frame, dtype=dt, count=int(np.prod(shape, dtype=np.int64)) if ndim else 1,
+                        offset=off).reshape(shape)
+    return rid, j, arr.copy()
+
+
+class Channel:
+    """One directed edge's byte pipe: ordered, length-prefixed frames."""
+
+    kind = "abstract"
+
+    def send(self, frame: bytes) -> None:
+        raise NotImplementedError
+
+    def recv(self, timeout: Optional[float] = None) -> Optional[bytes]:
+        """Next frame, or None when nothing arrives within `timeout`
+        seconds (None blocks; 0 polls)."""
+        raise NotImplementedError
+
+    def close(self) -> None:
+        pass
+
+
+class LoopbackChannel(Channel):
+    """In-process channel: a bounded deque behind a condition variable."""
+
+    kind = "loopback"
+
+    def __init__(self):
+        self._frames = collections.deque()
+        self._cond = threading.Condition()
+        self._closed = False
+
+    def send(self, frame: bytes) -> None:
+        with self._cond:
+            if self._closed:
+                raise RuntimeError("send on closed loopback channel")
+            self._frames.append(bytes(frame))
+            self._cond.notify()
+
+    def recv(self, timeout: Optional[float] = None) -> Optional[bytes]:
+        with self._cond:
+            if not self._frames and not self._closed:
+                self._cond.wait(timeout)
+            return self._frames.popleft() if self._frames else None
+
+    def close(self) -> None:
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()
+
+
+class SocketChannel(Channel):
+    """A real kernel-buffered byte pipe (`socket.socketpair()`), framed with
+    a 4-byte length prefix.  send() may block briefly when the kernel buffer
+    fills; recv() honours `timeout` via the socket timeout."""
+
+    kind = "socket"
+
+    def __init__(self):
+        self._tx, self._rx = socket.socketpair()
+        self._tx_lock = threading.Lock()
+        self._rx_lock = threading.Lock()
+        self._closed = False
+
+    def send(self, frame: bytes) -> None:
+        if self._closed:
+            raise RuntimeError("send on closed socket channel")
+        if len(frame) > _MAX_FRAME:
+            raise ValueError(f"frame of {len(frame)} bytes exceeds the "
+                             f"{_MAX_FRAME} byte channel bound")
+        with self._tx_lock:
+            self._tx.sendall(_LEN.pack(len(frame)) + frame)
+
+    def _read_exact(self, n: int) -> Optional[bytes]:
+        buf = bytearray()
+        while len(buf) < n:
+            chunk = self._rx.recv(n - len(buf))
+            if not chunk:
+                return None                      # peer closed mid-frame
+            buf.extend(chunk)
+        return bytes(buf)
+
+    def recv(self, timeout: Optional[float] = None) -> Optional[bytes]:
+        with self._rx_lock:
+            self._rx.settimeout(timeout)
+            try:
+                head = self._read_exact(_LEN.size)
+            except (socket.timeout, TimeoutError):
+                return None
+            except OSError:
+                return None
+            if head is None:
+                return None
+            (n,) = _LEN.unpack(head)
+            # the length prefix arrived: the body is in flight — wait for it
+            self._rx.settimeout(None)
+            return self._read_exact(n)
+
+    def close(self) -> None:
+        self._closed = True
+        for s in (self._tx, self._rx):
+            try:
+                s.close()
+            except OSError:
+                pass
+
+
+CHANNEL_KINDS = ("loopback", "socket")
+
+
+def make_channel(kind: str = "loopback") -> Channel:
+    """Factory the NetworkTransport uses per edge."""
+    if kind == "loopback":
+        return LoopbackChannel()
+    if kind == "socket":
+        return SocketChannel()
+    raise ValueError(f"unknown channel kind {kind!r}; one of {CHANNEL_KINDS}")

@@ -1,0 +1,131 @@
+"""repro/checkpoint's contracts: lossless round trips, loud mismatches,
+crash-atomic writes.
+
+  * pytree round trip preserves structure, values, and dtypes — including
+    bf16, which stores as fp32 (npz has no bf16) and round-trips BITWISE;
+  * `latest_step` orders numerically and only counts COMPLETE checkpoints
+    (npz + JSON sidecar — the sidecar lands last, atomically);
+  * restore into a template with a different structure, shape, or dtype
+    fails LOUDLY (a bf16 checkpoint cannot silently cast into an fp32
+    config);
+  * a save interrupted mid-write (the repro/chaos.py SIGKILL) leaves no
+    torn checkpoint visible to resume.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import checkpoint
+
+
+def _tree():
+    return {
+        "params": {"w": np.arange(12, dtype=np.float32).reshape(3, 4),
+                   "b": np.ones(4, np.float32)},
+        "step": np.asarray(7, np.int32),
+        "nested": [np.full((2,), 0.5, np.float32)],
+    }
+
+
+def test_roundtrip_preserves_values_and_structure(tmp_path):
+    d = str(tmp_path)
+    tree = _tree()
+    checkpoint.save(d, 3, tree, extra={"note": "hi"})
+    got, step = checkpoint.restore(d, tree)
+    assert step == 3
+    flat_a = jax.tree_util.tree_flatten(tree)
+    flat_b = jax.tree_util.tree_flatten(jax.device_get(got))
+    assert flat_a[1] == flat_b[1]                  # same treedef
+    for a, b in zip(flat_a[0], flat_b[0]):
+        assert np.asarray(a).dtype == np.asarray(b).dtype
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert checkpoint.load_meta(d)["note"] == "hi"
+
+
+def test_bf16_roundtrip_is_bitwise_lossless(tmp_path):
+    d = str(tmp_path)
+    # every finite bf16 value is exactly representable in fp32, so the
+    # bf16 -> fp32 (npz) -> bf16 trip must be the identity on bit patterns
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(257) * 1e3, jnp.bfloat16)
+    tree = {"w": x}
+    checkpoint.save(d, 1, tree)
+    got, _ = checkpoint.restore(d, tree)
+    assert got["w"].dtype == jnp.bfloat16
+    assert np.array_equal(np.asarray(got["w"]).view(np.uint16),
+                          np.asarray(x).view(np.uint16))
+    # the sidecar remembers the ORIGINAL dtype, not the storage dtype
+    assert checkpoint.load_meta(d)["dtypes"]["w"] == "bfloat16"
+
+
+def test_latest_step_numeric_ordering(tmp_path):
+    d = str(tmp_path)
+    assert checkpoint.latest_step(d) is None
+    for s in (2, 10, 9):                           # lexicographic would say 9
+        checkpoint.save(d, s, {"x": np.zeros(1, np.float32)})
+    assert checkpoint.latest_step(d) == 10
+    got, step = checkpoint.restore(d, {"x": np.zeros(1, np.float32)})
+    assert step == 10
+
+
+def test_latest_step_ignores_sidecarless_npz(tmp_path):
+    d = str(tmp_path)
+    checkpoint.save(d, 1, {"x": np.zeros(1, np.float32)})
+    # a crash between the npz replace and the sidecar replace: the npz
+    # exists but the checkpoint is incomplete -> invisible to resume
+    with open(os.path.join(d, "ckpt_00000009.npz"), "wb") as f:
+        f.write(b"torn")
+    assert checkpoint.latest_step(d) == 1
+
+
+def test_no_tmp_files_left_behind(tmp_path):
+    d = str(tmp_path)
+    checkpoint.save(d, 4, _tree())
+    assert not [fn for fn in os.listdir(d) if fn.endswith(".tmp")]
+
+
+def test_structure_mismatch_is_loud(tmp_path):
+    d = str(tmp_path)
+    checkpoint.save(d, 1, {"a": np.zeros(2, np.float32)})
+    with pytest.raises(ValueError, match="missing|extra"):
+        checkpoint.restore(d, {"b": np.zeros(2, np.float32)})
+
+
+def test_shape_mismatch_is_loud(tmp_path):
+    d = str(tmp_path)
+    checkpoint.save(d, 1, {"a": np.zeros((2, 3), np.float32)})
+    with pytest.raises(ValueError, match="shape"):
+        checkpoint.restore(d, {"a": np.zeros((3, 2), np.float32)})
+
+
+def test_dtype_mismatch_refuses_silent_cast(tmp_path):
+    d = str(tmp_path)
+    checkpoint.save(d, 1, {"a": jnp.zeros(4, jnp.bfloat16)})
+    with pytest.raises(ValueError, match="refusing the silent cast"):
+        checkpoint.restore(d, {"a": np.zeros(4, np.float32)})
+
+
+def test_predtype_checkpoints_still_restore(tmp_path):
+    # checkpoints written before dtypes were recorded skip the dtype check
+    d = str(tmp_path)
+    checkpoint.save(d, 1, {"a": np.zeros(4, np.float32)})
+    meta_path = os.path.join(d, "ckpt_00000001.json")
+    with open(meta_path) as f:
+        meta = json.load(f)
+    del meta["dtypes"]
+    with open(meta_path, "w") as f:
+        json.dump(meta, f)
+    got, _ = checkpoint.restore(d, {"a": np.zeros(4, np.float32)})
+    assert np.array_equal(np.asarray(got["a"]), np.zeros(4, np.float32))
+
+
+def test_restore_empty_dir_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        checkpoint.restore(str(tmp_path), {"a": np.zeros(1, np.float32)})
+    with pytest.raises(FileNotFoundError):
+        checkpoint.load_meta(str(tmp_path))

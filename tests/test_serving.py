@@ -249,6 +249,168 @@ def test_submit_rejects_wrong_view_count():
 
 
 # ---------------------------------------------------------------------------
+# satellite: scheduler-thread failure propagation
+# ---------------------------------------------------------------------------
+
+def test_scheduler_exception_fails_pending_then_poisons_engine():
+    """A scheduler-thread death must (1) fail every pending Future with the
+    REAL exception — no stranded blocked waiters — and (2) re-raise on the
+    next submit and on stop, so the failure cannot pass silently."""
+    scheme, state, views, labels = _inl()
+    engine = ServingEngine(scheme, state, CFG, seed=0)
+    boom = ValueError("injected scheduler failure")
+
+    def bad_execute(batch):
+        raise boom
+    engine._execute_any = bad_execute
+
+    engine.start()
+    _, fut = engine.submit(views[:, 0])
+    assert fut.exception(timeout=5.0) is boom
+    assert engine.pending() == 0
+    with pytest.raises(RuntimeError, match="scheduler failed") as ei:
+        engine.submit(views[:, 1])
+    assert ei.value.__cause__ is boom
+    with pytest.raises(RuntimeError, match="scheduler failed"):
+        engine.stop()
+    # the poisoned engine keeps refusing: a later stop() still surfaces
+    # the same root cause
+    with pytest.raises(RuntimeError) as ei:
+        engine.stop()
+    assert ei.value.__cause__ is boom
+
+
+def test_scheduler_exception_does_not_mask_body_exception():
+    """When the `with engine:` body raises, __exit__ must let THAT
+    exception through even if the scheduler also died."""
+    scheme, state, views, labels = _inl()
+    engine = ServingEngine(scheme, state, CFG, seed=0)
+    engine._execute_any = lambda batch: (_ for _ in ()).throw(
+        RuntimeError("scheduler died too"))
+    with pytest.raises(KeyError, match="body wins"):
+        with engine:
+            _, fut = engine.submit(views[:, 0])
+            fut.exception(timeout=5.0)            # scheduler is dead now
+            raise KeyError("body wins")
+
+
+def test_inline_step_surfaces_scheduler_error():
+    scheme, state, views, labels = _inl()
+    engine = ServingEngine(scheme, state, CFG, seed=0)
+    engine._error = ValueError("poisoned")
+    with pytest.raises(RuntimeError, match="scheduler failed"):
+        engine.step()
+
+
+# ---------------------------------------------------------------------------
+# speculative fusion over a transport
+# ---------------------------------------------------------------------------
+
+def _late_star(latency_ms=50.0):
+    # deterministic stragglers: every link delivers (erasure 0, jitter 0)
+    # but 50 ms of latency blows a 10 ms fusion deadline on every view
+    return linkfault.with_links(
+        topology_lib.star(CFG.num_clients),
+        linkfault.LinkModel(erasure=0.0, latency_ms=latency_ms,
+                            jitter_ms=0.0))
+
+
+def test_speculative_requires_transport():
+    scheme, state, views, labels = _inl()
+    with pytest.raises(ValueError, match="transport"):
+        ServingEngine(scheme, state, CFG, seed=0, speculative=True)
+
+
+def test_speculative_fusion_patches_stragglers():
+    """All J views delivered but LATE: without speculation the fusion at
+    the deadline answers from nothing; with it, the request is answered by
+    the next bucket's PATCHED fusion carrying every recovered view."""
+    from repro.transport import NO_RETRY, NetworkTransport
+    scheme, state, views, labels = _inl()
+    J, n = CFG.num_clients, 5
+    topo = _late_star()
+
+    tr = NetworkTransport(topo, CFG, seed=0, policy=NO_RETRY, breaker=None)
+    plain = ServingEngine(scheme, state, CFG, topology=topo, transport=tr,
+                          deadline_ms=10.0, seed=0)
+    _, res = plain.serve(views[:, :n])
+    tr.close()
+    assert [r.views_fused for r in res] == [0] * n
+    assert all(r.served_by == "first" for r in res)
+    assert plain.stats.patched == 0
+
+    tr = NetworkTransport(topo, CFG, seed=0, policy=NO_RETRY, breaker=None)
+    spec = ServingEngine(scheme, state, CFG, topology=topo, transport=tr,
+                         deadline_ms=10.0, seed=0, speculative=True)
+    probs, res = spec.serve(views[:, :n])
+    snap = tr.snapshot()
+    tr.close()
+    assert all(r.served_by == "patched" for r in res)
+    assert [r.views_fused for r in res] == [J] * n
+    assert [r.views_recovered for r in res] == [J] * n
+    assert spec.stats.patched == n and spec.stats.views_recovered == n * J
+    # the patched fusion consumed every view -> full delivered credit
+    assert snap["delivery_ratio"] == 1.0
+    # an all-views patched fusion decides like the clean engine
+    clean = ServingEngine(scheme, state, CFG, seed=0)
+    cp, _ = clean.serve(views[:, :n])
+    assert np.allclose(probs, cp, atol=2e-6, rtol=0)
+    assert np.array_equal(np.argmax(probs, -1), np.argmax(cp, -1))
+
+
+def test_transport_serving_credits_only_consumed_views():
+    """Non-speculative serving under a hard outage: the at-deadline fusion
+    consumed nothing, so the delivered ledger stays empty while offered
+    accrues per attempt."""
+    from repro.chaos import ChaosSchedule
+    from repro.transport import NO_RETRY, NetworkTransport
+    scheme, state, views, labels = _inl()
+    topo = topology_lib.resolve(None, CFG)
+    chaos = ChaosSchedule()
+    for e in topo.edges:
+        chaos = chaos.down_edge(e.key, 0, 64)
+    tr = NetworkTransport(topo, CFG, seed=0, policy=NO_RETRY, breaker=None,
+                          chaos=chaos)
+    engine = ServingEngine(scheme, state, CFG, transport=tr, seed=0)
+    _, res = engine.serve(views[:, :3])
+    assert [r.views_fused for r in res] == [0, 0, 0]
+    assert tr.meter.total_bits > 0 and tr.meter.delivered_bits == 0.0
+    tr.close()
+
+
+# ---------------------------------------------------------------------------
+# satellite: loadgen percentile / degenerate-sample guards
+# ---------------------------------------------------------------------------
+
+def test_percentile_guards_degenerate_samples():
+    from repro.serving.loadgen import percentile_ms
+    assert percentile_ms([], 50) == 0.0           # not a ValueError
+    assert percentile_ms([], 99) == 0.0
+    assert percentile_ms([7.25], 50) == 7.25      # one sample IS every pct
+    assert percentile_ms([7.25], 99) == 7.25
+    lats = [1.0, 2.0, 3.0, 4.0]
+    assert percentile_ms(lats, 50) == pytest.approx(np.percentile(lats, 50))
+
+
+def test_run_poisson_zero_and_one_request_nan_free():
+    from repro.serving.loadgen import run_poisson
+    scheme, state, views, labels = _inl()
+    engine = ServingEngine(scheme, state, CFG, seed=0, buckets=(1,))
+    with engine:
+        empty = run_poisson(engine, views[:, :4], rate_rps=100.0,
+                            num_requests=0)
+        one = run_poisson(engine, views[:, :4], rate_rps=100.0,
+                          num_requests=1)
+    for summary, served in ((empty, 0), (one, 1)):
+        assert summary["served"] == served
+        for k, v in summary.items():
+            assert np.isfinite(v), (k, v)
+    assert empty["p50_ms"] == 0.0 and empty["mean_views_fused"] == 0.0
+    assert one["p99_ms"] == one["p50_ms"] > 0.0
+    assert one["mean_views_fused"] == CFG.num_clients
+
+
+# ---------------------------------------------------------------------------
 # satellite: --requests clamp
 # ---------------------------------------------------------------------------
 

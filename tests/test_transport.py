@@ -1,0 +1,232 @@
+"""The transport layer's contracts (repro/transport + repro/chaos).
+
+  * retry policy: capped exponential backoff, jitter only shortens,
+    attempt 0 never waits;
+  * circuit breaker: closed -> open after K consecutive failures ->
+    half-open probe after the cooldown -> closes on success / re-opens on
+    failure; short-circuited attempts are counted;
+  * channels: loopback and socket both round-trip a fused-cutlayer
+    fragment BIT for bit behind the same interface;
+  * network transport: outcomes are pure functions of
+    (seed, domain, tick, edge, attempt) — same seed, same story — and the
+    ledger convention holds (every attempt re-offers the full charge,
+    short-circuits offer nothing, delivered accrues per surviving payload);
+  * chaos schedule: pure window queries, the seeded script replays.
+"""
+import numpy as np
+import pytest
+
+from repro.chaos import ChaosEvent, ChaosSchedule
+from repro.core import topology as topology_lib
+from repro.transport import (DEFAULT_RETRY, NO_RETRY, CircuitBreaker,
+                             LoopbackChannel, NetworkTransport, NoBreaker,
+                             RetryPolicy, SocketChannel, decode_fragment,
+                             encode_fragment, make_channel)
+from tests._schemes_common import CFG
+
+
+# ---------------------------------------------------------------------------
+# retry policy
+# ---------------------------------------------------------------------------
+
+def test_backoff_grows_then_caps():
+    p = RetryPolicy(max_attempts=6, base_backoff_ms=1.0, backoff_mult=2.0,
+                    max_backoff_ms=4.0, jitter=0.0)
+    assert p.backoff_ms(0, 0.5) == 0.0          # first attempt never waits
+    assert p.backoff_ms(1, 0.5) == 1.0
+    assert p.backoff_ms(2, 0.5) == 2.0
+    assert p.backoff_ms(3, 0.5) == 4.0
+    assert p.backoff_ms(5, 0.5) == 4.0          # capped
+
+def test_jitter_only_shortens():
+    p = RetryPolicy(max_attempts=3, base_backoff_ms=8.0, jitter=0.5)
+    full = p.backoff_ms(1, 0.0)
+    assert p.backoff_ms(1, 1.0) == pytest.approx(full * 0.5)
+    assert 0.0 < p.backoff_ms(1, 0.7) < full
+
+def test_timeout_marks_attempt_failed():
+    p = RetryPolicy(max_attempts=2, timeout_ms=10.0)
+    assert p.attempt_failed(11.0) and not p.attempt_failed(9.0)
+    assert not NO_RETRY.attempt_failed(1e9)     # no timeout -> never late
+
+
+# ---------------------------------------------------------------------------
+# circuit breaker
+# ---------------------------------------------------------------------------
+
+def test_breaker_state_machine():
+    b = CircuitBreaker(failure_threshold=3, cooldown=4)
+    assert b.state == "closed"
+    for t in range(3):
+        assert b.allow(t)
+        b.record_failure(t)
+    assert b.state == "open" and b.opens == 1
+    assert not b.allow(3)                       # short-circuit inside cooldown
+    assert b.short_circuits == 1
+    assert b.allow(2 + 4)                       # cooldown elapsed: probe
+    assert b.state == "half_open" and b.probes == 1
+    b.record_success()
+    assert b.state == "closed"
+
+def test_breaker_reopens_on_failed_probe():
+    b = CircuitBreaker(failure_threshold=1, cooldown=2)
+    b.allow(0)
+    b.record_failure(0)
+    assert b.state == "open"
+    assert b.allow(2)                           # probe
+    b.record_failure(2)
+    assert b.state == "open" and b.opens == 2
+
+def test_no_breaker_always_allows():
+    b = NoBreaker()
+    assert b.state == "disabled"
+    assert b.allow(0) and b.allow(10**9)
+    b.record_failure(0)
+    b.record_success()
+    assert b.allow(1)
+
+
+# ---------------------------------------------------------------------------
+# channels
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["loopback", "socket"])
+def test_channel_roundtrips_fragment_bit_exact(kind):
+    chan = make_channel(kind)
+    try:
+        arr = np.random.default_rng(0).standard_normal((7, 8)).astype(
+            np.float32)
+        chan.send(encode_fragment(42, 3, arr))
+        rid, j, got = decode_fragment(chan.recv())
+        assert (rid, j) == (42, 3)
+        assert got.dtype == arr.dtype and np.array_equal(got, arr)
+    finally:
+        chan.close()
+
+def test_channel_kinds():
+    assert isinstance(make_channel("loopback"), LoopbackChannel)
+    assert isinstance(make_channel("socket"), SocketChannel)
+    with pytest.raises(ValueError):
+        make_channel("carrier-pigeon")
+
+def test_loopback_recv_timeout_returns_none():
+    chan = LoopbackChannel()
+    assert chan.recv(timeout=0.01) is None
+
+
+# ---------------------------------------------------------------------------
+# network transport
+# ---------------------------------------------------------------------------
+
+def _lossy_topo(erasure=0.5):
+    from repro.core import linkfault
+    return topology_lib.resolve(
+        linkfault.with_links(topology_lib.star(CFG.num_clients),
+                             linkfault.LinkModel(erasure=erasure)), CFG)
+
+def test_outcomes_deterministic_per_seed():
+    masks = []
+    for _ in range(2):
+        tr = NetworkTransport(_lossy_topo(), CFG, seed=3,
+                              policy=DEFAULT_RETRY)
+        masks.append(np.stack([tr.round_outcome(t, 32).mask
+                               for t in range(8)]))
+        tr.close()
+    assert np.array_equal(masks[0], masks[1])
+    tr = NetworkTransport(_lossy_topo(), CFG, seed=4, policy=DEFAULT_RETRY)
+    other = np.stack([tr.round_outcome(t, 32).mask for t in range(8)])
+    tr.close()
+    assert not np.array_equal(masks[0], other)  # different seed, new story
+
+def _all_edges_down(topo, ticks=64):
+    s = ChaosSchedule()
+    for e in topo.edges:
+        s = s.down_edge(e.key, 0, ticks)
+    return s
+
+def test_retries_reoffer_full_charge():
+    # every edge chaos-down: every attempt fails -> offered =
+    # max_attempts * charge, delivered = 0
+    topo = topology_lib.resolve(None, CFG)
+    tr = NetworkTransport(topo, CFG, seed=0,
+                          policy=RetryPolicy(max_attempts=3), breaker=None,
+                          chaos=_all_edges_down(topo))
+    charges = {e.key: (100.0, 10.0) for e in tr.topo.edges}
+    rep = tr.round_outcome(0, 32, charges=charges)
+    assert not rep.mask.any()
+    assert all(a == 3 for a in rep.attempts.values())
+    assert tr.meter.total_bits == 3 * 100.0 * len(tr.topo.edges)
+    assert tr.meter.delivered_bits == 0.0
+    tr.close()
+
+def test_breaker_short_circuits_offer_nothing():
+    topo = topology_lib.resolve(None, CFG)
+    tr = NetworkTransport(
+        topo, CFG, seed=0, policy=NO_RETRY,
+        breaker=lambda: CircuitBreaker(failure_threshold=1, cooldown=100),
+        chaos=_all_edges_down(topo))
+    charges = {e.key: (100.0, 10.0) for e in tr.topo.edges}
+    tr.round_outcome(0, 32, charges=charges)    # every breaker opens
+    before = tr.meter.total_bits
+    rep = tr.round_outcome(1, 32, charges=charges)
+    assert tr.meter.total_bits == before        # short-circuits: no offer
+    assert all(a == 0 for a in rep.attempts.values())
+    assert all(s == "open" for s in tr.breaker_states().values())
+    tr.close()
+
+def test_charge_false_replays_without_ledger():
+    tr = NetworkTransport(_lossy_topo(), CFG, seed=3, policy=DEFAULT_RETRY)
+    live = [tr.round_outcome(t, 32).mask for t in range(4)]
+    spent = tr.meter.total_bits
+    tr.close()
+    tr2 = NetworkTransport(_lossy_topo(), CFG, seed=3, policy=DEFAULT_RETRY)
+    replay = [tr2.round_outcome(t, 32, charge=False).mask for t in range(4)]
+    assert np.array_equal(np.stack(live), np.stack(replay))
+    assert tr2.meter.total_bits == 0.0 and spent > 0.0
+    tr2.close()
+
+def test_dead_node_fails_its_route_and_request_frames_arrive():
+    chaos = ChaosSchedule().kill_node("m1", at=0, duration=2)
+    topo = topology_lib.resolve(None, CFG)
+    tr = NetworkTransport(topo, CFG, seed=0, chaos=chaos)
+    views = np.random.default_rng(0).standard_normal(
+        (CFG.num_clients, 16, 16, 3)).astype(np.float32)
+    rep = tr.send_request(0, views)
+    assert not rep.eventual[1] and rep.eventual[[0, 2, 3, 4]].all()
+    assert rep.received[1] is None
+    for j in (0, 2, 3, 4):
+        assert np.array_equal(rep.received[j], views[j])  # bit-exact ride
+    rep2 = tr.send_request(2, views)            # node rejoined
+    assert rep2.eventual.all()
+    tr.close()
+
+
+# ---------------------------------------------------------------------------
+# chaos schedule
+# ---------------------------------------------------------------------------
+
+def test_chaos_windows_and_flap():
+    s = (ChaosSchedule()
+         .down_edge("e", 2, 3)
+         .flap_edge("f", start=0, stop=8, period=4, duty=2)
+         .slow_edge("g", 1, 5, factor=10.0)
+         .kill_node("n", at=3))
+    assert [s.edge_down("e", t) for t in range(6)] == \
+        [False, False, True, True, True, False]
+    assert [s.edge_down("f", t) for t in range(9)] == \
+        [True, True, False, False, True, True, False, False, False]
+    assert s.slow_factor("g", 2) == 10.0 and s.slow_factor("g", 5) == 1.0
+    assert not s.node_dead("n", 2) and s.node_dead("n", 10**6)
+
+def test_chaos_event_validation():
+    with pytest.raises(ValueError):
+        ChaosEvent("tsunami", "e")
+    with pytest.raises(ValueError):
+        ChaosEvent("edge_down", "e", start=5, stop=5)
+    with pytest.raises(ValueError):
+        ChaosEvent("edge_flap", "e", period=2, duty=3)
+
+def test_seeded_schedule_replays():
+    kw = dict(edge_keys=["a", "b"], nodes=["n"], ticks=32)
+    assert ChaosSchedule.seeded(7, **kw) == ChaosSchedule.seeded(7, **kw)
+    assert ChaosSchedule.seeded(7, **kw) != ChaosSchedule.seeded(8, **kw)
