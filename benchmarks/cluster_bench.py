@@ -1,0 +1,327 @@
+"""Benchmark — the multi-process worker plane: supervised measure-node
+processes under the SAME counter-seeded transport as the in-process runs.
+
+Every fault draw is a pure function of (seed, domain, tick, edge, attempt)
+and never sees the channel kind, and supervision advances in TICK time
+(the supervisor's `tick` rides the transport's `on_tick` hook) — so a
+3-process cluster is not "approximately" the in-process run, it is the
+SAME run with the bytes crossing real process boundaries.  The asserts
+below are stable CI contracts, not flaky statistics.
+
+Sections, written to BENCH_cluster.json (--json):
+
+  parity            fault-free training over 3 REAL worker processes vs
+                    the in-process loopback transport, same seed.
+                    ASSERTS the accuracy/bandwidth curves AND the
+                    transport snapshots (ledgers + breaker counters) are
+                    BIT-IDENTICAL.
+
+  kill_resume       a scheduled mid-epoch-2 worker SIGKILL under a
+                    checkpointing run: the golden uninterrupted 2-epoch
+                    cluster run vs a run that checkpoints epoch 1, tears
+                    the WHOLE cluster down (supervisor restart), and
+                    resumes into the same kill window with fresh worker
+                    processes.  ASSERTS curve, transport snapshot, and
+                    adaptive-policy state are bit-identical — the crash-
+                    atomic checkpoint plus uncharged tick replay rebuilds
+                    the exact trajectory.
+
+  serving_recovery  one serving request per tick through the engine over
+                    a live cluster; one worker SIGKILLed for a window.
+                    Goodput = delivered votes / J per request, rolling.
+                    ASSERTS goodput during the kill is exactly (J-1)/J,
+                    and recovers to >= 0.9x the pre-kill steady state
+                    within window + 2 ticks of the scheduled restart.
+
+  adaptive_vs_fixed the AdaptivePolicy controller vs fixed retry
+                    constants under rolling edge churn (staggered flaps,
+                    4 of every 6 ticks dark per edge).  ASSERTS the
+                    adaptive delivered/offered ratio is STRICTLY above
+                    the fixed-constant baseline, that it actually retuned,
+                    and that a second identical run replays the same
+                    snapshot bit for bit.
+
+--smoke shrinks shapes/epochs for the CI bench-smoke step.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import tempfile
+
+import numpy as np
+
+from repro.chaos import ChaosSchedule
+from repro.cluster import Cluster
+from repro.configs.paper_inl import PaperExperimentConfig
+from repro.core import schemes
+from repro.core import topology as topology_lib
+from repro.core.schemes import runner
+from repro.data import multiview
+from repro.serving import ServingEngine
+from repro.transport import (DEFAULT_RETRY, NO_RETRY, AdaptivePolicy,
+                             NetworkTransport)
+
+
+def _cfg(*, smoke: bool):
+    """Always 3 measure nodes — the bench's process-count contract — with
+    smoke-vs-full deciding the model/dataset shapes."""
+    if smoke:
+        return PaperExperimentConfig(
+            num_clients=3, noise_stds=(0.4, 1.0, 2.0),
+            conv_channels=(4,), d_bottleneck=8, dense_units=(32,),
+            image_shape=(16, 16, 3), dataset_size=128)
+    return PaperExperimentConfig(
+        num_clients=3, noise_stds=(0.4, 1.0, 2.0),
+        conv_channels=(8, 16), d_bottleneck=16, dense_units=(64,),
+        image_shape=(32, 32, 3), dataset_size=512)
+
+
+def _data(cfg, seed):
+    imgs, labels = multiview.make_base_dataset(
+        cfg.dataset_size, image_shape=cfg.image_shape, seed=seed)
+    views = multiview.make_views(imgs, cfg.noise_stds)
+    return np.asarray(views), np.asarray(labels)
+
+
+def _rounds_per_epoch(cfg, batch_size):
+    bpr = schemes.get("inl").batches_per_round(cfg)
+    return (cfg.dataset_size // batch_size) // bpr
+
+
+# ---------------------------------------------------------------------------
+# 3-process cluster == in-process transport, bit for bit (fault-free)
+# ---------------------------------------------------------------------------
+
+def parity_section(*, smoke: bool, epochs: int, seed: int):
+    cfg = _cfg(smoke=smoke)
+    views, labels = _data(cfg, seed)
+    topo = topology_lib.resolve(None, cfg)
+
+    tr = NetworkTransport(topo, cfg, seed=seed + 3, policy=DEFAULT_RETRY)
+    inproc = runner.run_scheme("inl", views, labels, cfg, epochs=epochs,
+                               batch_size=32, seed=seed, transport=tr)
+    isnap = tr.snapshot()
+    tr.close()
+
+    with Cluster(cfg, seed=seed + 3, policy=DEFAULT_RETRY) as cl:
+        procs = sorted(h.proc.pid for h in cl.supervisor.handles.values())
+        clustered = runner.run_scheme("inl", views, labels, cfg,
+                                      epochs=epochs, batch_size=32,
+                                      seed=seed, transport=cl.transport)
+        csnap = cl.transport.snapshot()
+
+    assert len(procs) == 3, f"expected 3 worker processes, got {procs}"
+    assert inproc == clustered, (
+        "a fault-free 3-process cluster run must be BIT-IDENTICAL to the "
+        "in-process transport run: the fault draws never see the channel "
+        "kind, so crossing real process boundaries changes nothing")
+    assert isnap == csnap, (
+        f"transport snapshots diverged across channel kinds:\n"
+        f"in-process {isnap}\ncluster    {csnap}")
+    print(f"parity: {len(procs)}-process cluster == in-process, "
+          f"{epochs} epochs bit for bit "
+          f"(final acc {clustered[-1].accuracy:.3f})")
+    return {"workers": len(procs), "epochs": epochs,
+            "bitwise_identical": True,
+            "final_accuracy": clustered[-1].accuracy,
+            "delivery_ratio": csnap["delivery_ratio"]}
+
+
+# ---------------------------------------------------------------------------
+# mid-epoch SIGKILL + supervisor restart resumes bit-identically
+# ---------------------------------------------------------------------------
+
+def kill_resume_section(*, smoke: bool, seed: int):
+    cfg = _cfg(smoke=smoke)
+    views, labels = _data(cfg, seed)
+    epochs, batch = 2, 32
+    rounds = _rounds_per_epoch(cfg, batch)
+    # kill a worker MID-epoch-2 (the epoch the resume re-runs live), plus
+    # an epoch-1 edge outage so the adaptive controller has a non-trivial
+    # trajectory to rebuild across the resume boundary
+    dead = topology_lib.resolve(None, cfg).view_nodes()[1]
+    kill_at, kill_len = rounds + max(rounds // 2, 1), max(rounds // 4, 1)
+    keys = [e.key for e in topology_lib.resolve(None, cfg).edges]
+    chaos = (ChaosSchedule()
+             .kill_node(dead, at=kill_at, duration=kill_len)
+             .down_edge(keys[0], 1, max(rounds // 2, 1)))
+
+    def run(run_epochs, ckpt_dir=None, resume=False):
+        with Cluster(cfg, seed=seed + 5, chaos=chaos, policy=DEFAULT_RETRY,
+                     adaptive=AdaptivePolicy(base=DEFAULT_RETRY,
+                                             base_threshold=3)) as cl:
+            curve = runner.run_scheme(
+                "inl", views, labels, cfg, epochs=run_epochs,
+                batch_size=batch, seed=seed, transport=cl.transport,
+                ckpt_dir=ckpt_dir, resume=resume)
+            return curve, cl.transport.snapshot()
+
+    golden, gsnap = run(epochs)
+
+    workdir = tempfile.mkdtemp(prefix="cluster_bench_ckpt_")
+    try:
+        run(1, ckpt_dir=workdir)            # ... then the cluster "crashes"
+        resumed, rsnap = run(epochs, ckpt_dir=workdir, resume=True)
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+
+    assert golden == resumed, (
+        "resuming from the epoch-1 checkpoint with a FRESH supervisor must "
+        "replay the scheduled mid-epoch-2 SIGKILL into the exact golden "
+        "curve — state, rng fast-forward, and meter ledgers")
+    assert gsnap == rsnap, (
+        f"resumed transport snapshot (ledgers + breakers + adaptive state) "
+        f"diverged from golden:\n{gsnap}\nvs\n{rsnap}")
+    print(f"kill-resume: SIGKILL {dead} at tick {kill_at} for {kill_len} "
+          f"rounds; 1+1 epochs across a supervisor restart == {epochs} "
+          f"epochs bit for bit (final acc {golden[-1].accuracy:.3f})")
+    return {"dead_node": dead, "kill_tick": kill_at,
+            "kill_rounds": kill_len, "epochs": epochs,
+            "bitwise_identical": True,
+            "final_accuracy": golden[-1].accuracy,
+            "adaptive_retunes": gsnap["adaptive"]["retunes"]}
+
+
+# ---------------------------------------------------------------------------
+# serving goodput recovery after a worker SIGKILL
+# ---------------------------------------------------------------------------
+
+def serving_recovery_section(*, smoke: bool, seed: int):
+    cfg = _cfg(smoke=smoke)
+    views, _ = _data(cfg, seed)
+    J = cfg.num_clients
+    kill_at, kill_len, total, window = 8, 4, 24, 4
+    kill_end = kill_at + kill_len
+    dead = topology_lib.resolve(None, cfg).view_nodes()[1]
+    chaos = ChaosSchedule().kill_node(dead, at=kill_at, duration=kill_len)
+
+    scheme = schemes.get("inl")
+    import jax
+    state = scheme.init(cfg, jax.random.PRNGKey(seed))
+
+    # NO_RETRY + no breaker: delivered votes track the kill window exactly,
+    # so "recovery" measures the SUPERVISOR's scheduled restart, not a
+    # breaker cooldown tail
+    with Cluster(cfg, seed=seed + 7, chaos=chaos, policy=NO_RETRY,
+                 breaker=None) as cl:
+        engine = ServingEngine(scheme, state, cfg, seed=seed + 2,
+                               transport=cl.transport)
+        engine.warmup()
+        fused = []
+        for i in range(total):           # one request per tick, rid == tick
+            _, fut = engine.submit(views[:, i % views.shape[1]])
+            while not fut.done():
+                if engine.step() == 0:
+                    break
+            fused.append(fut.result().views_fused)
+
+    goodput = [f / J for f in fused]
+    pre = float(np.mean(goodput[:kill_at]))
+    rolling = [float(np.mean(goodput[max(0, t - window + 1):t + 1]))
+               for t in range(total)]
+    recovered_at = next((t for t in range(kill_end, total)
+                         if rolling[t] >= 0.9 * pre), None)
+
+    assert all(g == 1.0 for g in goodput[:kill_at]), \
+        f"pre-kill requests must fuse all {J} views: {goodput[:kill_at]}"
+    assert all(abs(g - (J - 1) / J) < 1e-9
+               for g in goodput[kill_at:kill_end]), (
+        f"a SIGKILLed worker costs each request exactly the votes it "
+        f"owned: {goodput[kill_at:kill_end]}")
+    assert recovered_at is not None and recovered_at - kill_end <= window + 2, (
+        f"rolling goodput must recover to >= 0.9x pre-kill steady state "
+        f"({0.9 * pre:.2f}) within {window + 2} ticks of the scheduled "
+        f"restart at {kill_end}; rolling={rolling}")
+    print(f"serving recovery: goodput {pre:.2f} -> "
+          f"{min(goodput[kill_at:kill_end]):.2f} during the kill -> "
+          f"recovered at tick {recovered_at} "
+          f"({recovered_at - kill_end} ticks after restart)")
+    return {"dead_node": dead, "kill_tick": kill_at,
+            "kill_rounds": kill_len, "requests": total,
+            "pre_kill_goodput": pre,
+            "kill_goodput": float(min(goodput[kill_at:kill_end])),
+            "recovered_at_tick": recovered_at,
+            "recovery_ticks_after_restart": recovered_at - kill_end,
+            "shed": engine.stats.shed}
+
+
+# ---------------------------------------------------------------------------
+# adaptive retry/threshold policies vs fixed constants under churn
+# ---------------------------------------------------------------------------
+
+def adaptive_vs_fixed_section(*, smoke: bool, seed: int):
+    cfg = _cfg(smoke=smoke)
+    topo = topology_lib.resolve(None, cfg)
+    keys = [e.key for e in topo.edges]
+    ticks = 64 if smoke else 128
+    # rolling churn: every edge dark 4 of every 6 ticks, phases staggered
+    chaos = ChaosSchedule()
+    for i, key in enumerate(keys):
+        chaos = chaos.flap_edge(key, start=2 * i, stop=ticks, period=6,
+                                duty=4)
+
+    def run(adaptive):
+        tr = NetworkTransport(topo, cfg, seed=seed + 17,
+                              policy=DEFAULT_RETRY, breaker=None,
+                              chaos=chaos, adaptive=adaptive)
+        for t in range(ticks):
+            tr.round_outcome(t, 32)
+        snap = tr.snapshot()
+        tr.close()
+        return snap
+
+    fixed = run(None)
+    adaptive = run(AdaptivePolicy(base=DEFAULT_RETRY, base_threshold=3))
+    replay = run(AdaptivePolicy(base=DEFAULT_RETRY, base_threshold=3))
+
+    assert adaptive == replay, (
+        "the adaptive controller must be DETERMINISTIC: two identical "
+        "runs diverged\n"
+        f"{adaptive}\nvs\n{replay}")
+    assert adaptive["adaptive"]["retunes"] > 0, \
+        "the controller never retuned under 4/6-duty churn"
+    assert adaptive["delivery_ratio"] > fixed["delivery_ratio"], (
+        f"adaptive delivered/offered {adaptive['delivery_ratio']:.3f} must "
+        f"be STRICTLY above the fixed-constant {fixed['delivery_ratio']:.3f}"
+        " — shrinking the retry budget on a dark edge stops re-offering "
+        "full charges into it")
+    print(f"adaptive vs fixed under churn: delivered/offered "
+          f"{adaptive['delivery_ratio']:.3f} vs {fixed['delivery_ratio']:.3f}"
+          f" (retunes={adaptive['adaptive']['retunes']})")
+    return {"ticks": ticks,
+            "fixed_delivery_ratio": fixed["delivery_ratio"],
+            "adaptive_delivery_ratio": adaptive["delivery_ratio"],
+            "retunes": adaptive["adaptive"]["retunes"],
+            "deterministic_replay": True}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes/epochs (CI bench-smoke step)")
+    ap.add_argument("--epochs", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default="BENCH_cluster.json",
+                    help="output path ('' disables)")
+    args = ap.parse_args(argv)
+
+    record = {"smoke": args.smoke,
+              "parity": parity_section(smoke=args.smoke, epochs=args.epochs,
+                                       seed=args.seed),
+              "kill_resume": kill_resume_section(smoke=args.smoke,
+                                                 seed=args.seed),
+              "serving_recovery": serving_recovery_section(smoke=args.smoke,
+                                                           seed=args.seed),
+              "adaptive_vs_fixed": adaptive_vs_fixed_section(
+                  smoke=args.smoke, seed=args.seed)}
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(record, f, indent=2, sort_keys=True)
+        print(f"# wrote {args.json}")
+    return record
+
+
+if __name__ == "__main__":
+    main()

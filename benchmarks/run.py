@@ -22,6 +22,14 @@
 #   throughput throughput_bench  end-to-end runner throughput: per-round
 #                                dispatch vs whole-epoch scan+prefetch vs
 #                                shard_map (forced 2-device subprocess)
+#   chaos     chaos_bench        deterministic fault tolerance: serving
+#                                goodput under churn, breaker vs none,
+#                                node-kill degradation per scheme, and
+#                                bit-identical crash-resume
+#   cluster   cluster_bench      multi-process worker plane: 3-process ==
+#                                in-process parity, SIGKILL+restart resume
+#                                identity, serving goodput recovery, and
+#                                adaptive vs fixed fault policies
 #   roofline  roofline_report    dry-run three-term roofline rows
 from __future__ import annotations
 
@@ -34,7 +42,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma list: table1,curves,kernels,wire,topology,"
-                         "links,serve,throughput,roofline")
+                         "links,serve,throughput,chaos,cluster,roofline")
     ap.add_argument("--epochs", type=int, default=3,
                     help="epochs for the accuracy curves (CPU-sized)")
     args = ap.parse_args()
@@ -77,6 +85,14 @@ def main() -> None:
         # be set before jax initialises, which has already happened here
         from benchmarks import throughput_bench
         throughput_bench.main([])
+        sys.stdout.flush()
+    if want("chaos"):
+        from benchmarks import chaos_bench
+        chaos_bench.main(["--smoke", "--json", ""])
+        sys.stdout.flush()
+    if want("cluster"):
+        from benchmarks import cluster_bench
+        cluster_bench.main(["--smoke", "--json", ""])
         sys.stdout.flush()
     if want("roofline"):
         from benchmarks import roofline_report

@@ -39,7 +39,8 @@ from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
-EVENT_KINDS = ("edge_down", "edge_flap", "edge_slow", "node_kill")
+EVENT_KINDS = ("edge_down", "edge_flap", "edge_slow", "node_kill",
+               "node_freeze")
 
 
 @dataclass(frozen=True)
@@ -101,6 +102,14 @@ class ChaosSchedule:
         return any(e.kind == "node_kill" and e.target == name
                    and e.active(tick) for e in self.events)
 
+    def node_frozen(self, name: str, tick: int) -> bool:
+        """The node is SIGSTOPped: its process exists but answers nothing.
+        Unlike `node_dead` the transport does NOT consult this directly —
+        a frozen worker is discovered the hard way (probe and data-path
+        timeouts walking the membership ladder), which is the point."""
+        return any(e.kind == "node_freeze" and e.target == name
+                   and e.active(tick) for e in self.events)
+
     # -- builders ----------------------------------------------------------
 
     def _with(self, ev: ChaosEvent) -> "ChaosSchedule":
@@ -112,6 +121,15 @@ class ChaosSchedule:
         ticks (None: never — a permanent client leave)."""
         return self._with(ChaosEvent(
             "node_kill", name, start=at,
+            stop=None if duration is None else at + duration))
+
+    def freeze_node(self, name: str, at: int,
+                    duration: Optional[int] = None) -> "ChaosSchedule":
+        """SIGSTOP node `name` at tick `at`, SIGCONT after `duration` ticks
+        (None: never).  Realised by the cluster Supervisor on real worker
+        processes; in-process transports ignore freeze windows."""
+        return self._with(ChaosEvent(
+            "node_freeze", name, start=at,
             stop=None if duration is None else at + duration))
 
     def down_edge(self, key: str, at: int, duration: int = 1):
@@ -162,6 +180,81 @@ class ChaosSchedule:
                  for e in self.events]
         return f"ChaosSchedule({len(self.events)} events: " \
                f"{'; '.join(spans[:8])}{'...' if len(spans) > 8 else ''})"
+
+
+# ---------------------------------------------------------------------------
+# Process-kill drill: SIGKILL/SIGSTOP real supervised workers, assert masks
+# ---------------------------------------------------------------------------
+
+def cluster_drill(args) -> dict:
+    """The `--procs` CI drill: a 3-process cluster under a scripted kill
+    AND a scripted freeze, asserted at the mask level.
+
+      * SIGKILL m1 for 3 ticks: its vote is lost for EXACTLY that window
+        (the supervisor respawns it the first tick the schedule allows,
+        incarnation bumped);
+      * SIGSTOP m2 for 3 ticks: the process survives but answers nothing —
+        data-path timeouts cost its vote, the membership ladder walks
+        up -> suspect -> down, and the first pong after SIGCONT rejoins
+        the SAME incarnation (no respawn);
+      * the whole story replays: a second cluster run over the same
+        schedule produces identical masks.
+    """
+    from repro.cluster import Cluster
+    from repro.configs.paper_inl import PaperExperimentConfig
+    from repro.transport import NO_RETRY
+
+    cfg = PaperExperimentConfig(
+        num_clients=3, noise_stds=(0.4, 1.0, 2.0), conv_channels=(4,),
+        d_bottleneck=8, dense_units=(32,), image_shape=(16, 16, 3),
+        dataset_size=128)
+    kill = ("m1", 6, 3)
+    freeze = ("m2", 12, 3)
+    ticks = 20
+    sched = (ChaosSchedule()
+             .kill_node(kill[0], at=kill[1], duration=kill[2])
+             .freeze_node(freeze[0], at=freeze[1], duration=freeze[2]))
+
+    def run():
+        # NO_RETRY + no breaker keep the mask windows exact: one attempt
+        # per edge per tick, no open-breaker tail after recovery
+        with Cluster(cfg, seed=args.seed, chaos=sched, policy=NO_RETRY,
+                     breaker=None) as cl:
+            names = cl.topo.view_nodes()
+            masks = [cl.transport.round_outcome(t, 32).mask.tolist()
+                     for t in range(ticks)]
+            return (names, masks, cl.supervisor.events(),
+                    dict(cl.supervisor.membership().incarnations),
+                    cl.supervisor.respawns)
+
+    names, masks, events, incarnations, respawns = run()
+    idx = {n: j for j, n in enumerate(names)}
+    for t in range(ticks):
+        for name, at, dur in (kill, freeze):
+            want = not (at <= t < at + dur)
+            assert masks[t][idx[name]] == want, \
+                (f"tick {t}: {name} vote {masks[t][idx[name]]}, "
+                 f"want {want}; masks={masks}")
+        for name in names:
+            if name not in (kill[0], freeze[0]):
+                assert masks[t][idx[name]], f"healthy {name} lost tick {t}"
+    assert incarnations[kill[0]] == 2, incarnations     # respawned once
+    assert incarnations[freeze[0]] == 1, incarnations   # rejoined, same proc
+    assert respawns == 1, respawns
+    transitions = [ev[2] for ev in events if ev[1] == freeze[0]]
+    assert "up->suspect" in transitions and "suspect->down" in transitions \
+        and transitions[-1] == "down->up", transitions
+
+    _, masks2, *_ = run()
+    assert masks == masks2, "cluster drill did not replay identically"
+    return {"nodes": list(names), "ticks": ticks,
+            "kill": {"node": kill[0], "window": [kill[1], kill[1] + kill[2]]},
+            "freeze": {"node": freeze[0],
+                       "window": [freeze[1], freeze[1] + freeze[2]]},
+            "respawns": respawns,
+            "incarnations": incarnations,
+            "membership_events": [list(ev) for ev in events],
+            "replay_identical": True}
 
 
 # ---------------------------------------------------------------------------
@@ -290,7 +383,15 @@ def main(argv=None):
     ap.add_argument("--kill-after-step", type=int, default=5)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--workdir", default="chaos_workdir")
+    ap.add_argument("--procs", action="store_true",
+                    help="run the multi-process cluster drill (real worker "
+                         "SIGKILL/SIGSTOP under a scripted schedule) "
+                         "instead of the training crash-resume check")
     args = ap.parse_args(argv)
+    if args.procs:
+        record = cluster_drill(args)
+        print(json.dumps({"cluster_drill": record}, indent=2))
+        return record
     os.makedirs(args.workdir, exist_ok=True)
     record = crash_resume_check(args)
     print(json.dumps({"crash_resume": record}, indent=2))

@@ -126,31 +126,38 @@ def _meter_load(meter, d: dict) -> None:
                                  in d["edge_delivered_bits"].items()}
 
 
-def _save_epoch(ckpt_dir, name, ep, state, curve, meter) -> None:
+def _save_epoch(ckpt_dir, name, ep, state, curve, meter,
+                transport=None) -> None:
     """One epoch-granular checkpoint: the FULL training state (params,
     model state, optimizer) plus the curve and both meter ledgers in the
     sidecar — everything a bit-identical resume needs (fp32/int leaves are
-    npz-lossless; bf16 stores as fp32 and round-trips bitwise)."""
-    checkpoint_lib.save(ckpt_dir, ep, jax.device_get(state),
-                        extra={"scheme": name, "epoch": ep,
-                               "curve": [list(map(float, p)) for p in curve],
-                               "meter": _meter_dump(meter)})
+    npz-lossless; bf16 stores as fp32 and round-trips bitwise).  A
+    transport run also records `transport.snapshot()` — breaker counters
+    for the record, adaptive-policy state for restore — so resumed runs
+    replay the same retry/threshold knob trajectory."""
+    extra = {"scheme": name, "epoch": ep,
+             "curve": [list(map(float, p)) for p in curve],
+             "meter": _meter_dump(meter)}
+    if transport is not None:
+        extra["transport"] = transport.snapshot()
+    checkpoint_lib.save(ckpt_dir, ep, jax.device_get(state), extra=extra)
 
 
 def _try_resume(ckpt_dir, state, meter):
     """Restore the latest epoch checkpoint when one exists: returns
-    (state, curve-so-far, epochs-already-done).  A fresh directory resumes
-    from nothing — epoch 0 with the given init state."""
+    (state, curve-so-far, epochs-already-done, transport-snapshot-or-None).
+    A fresh directory resumes from nothing — epoch 0 with the given init
+    state."""
     step = checkpoint_lib.latest_step(ckpt_dir) if ckpt_dir else None
     if step is None:
-        return state, [], 0
+        return state, [], 0, None
     restored, _ = checkpoint_lib.restore(ckpt_dir, jax.device_get(state),
                                          step=step)
     meta = checkpoint_lib.load_meta(ckpt_dir, step)
     curve = [CurvePoint(int(p[0]), *map(float, p[1:]))
              for p in meta["curve"]]
     _meter_load(meter, meta["meter"])
-    return restored, curve, int(meta["epoch"])
+    return restored, curve, int(meta["epoch"]), meta.get("transport")
 
 
 def _meter_overheads(meter, scheme, cfg, state):
@@ -249,7 +256,7 @@ def run_scheme(name: str, views, labels, cfg, *, epochs: int,
     meter = bandwidth.BandwidthMeter() if meter is None else meter
     start_ep = 0
     if resume and ckpt_dir:
-        state, curve0, start_ep = _try_resume(ckpt_dir, state, meter)
+        state, curve0, start_ep, _ = _try_resume(ckpt_dir, state, meter)
         if mesh is not None and start_ep:
             state = jax.device_put(state,
                                    scheme.state_shardings(cfg, state, mesh))
@@ -324,7 +331,7 @@ def _run_per_round(scheme, views, labels, cfg, *, epochs, batch_size, lr,
     meter = bandwidth.BandwidthMeter() if meter is None else meter
     start_ep = 0
     if resume and ckpt_dir:
-        state, curve0, start_ep = _try_resume(ckpt_dir, state, meter)
+        state, curve0, start_ep, _ = _try_resume(ckpt_dir, state, meter)
     else:
         curve0 = []
     charges = _round_charges(scheme, cfg, state, batch_size, wire=wire,
@@ -406,8 +413,9 @@ def _run_transport(scheme, views, labels, cfg, *, epochs, batch_size, lr,
     rounds = (labels.shape[0] // batch_size) // bpr
 
     start_ep = 0
+    tsnap = None
     if resume and ckpt_dir:
-        state, curve0, start_ep = _try_resume(ckpt_dir, state, meter)
+        state, curve0, start_ep, tsnap = _try_resume(ckpt_dir, state, meter)
     else:
         curve0 = []
     rng = jax.random.PRNGKey(seed + 1)
@@ -417,6 +425,11 @@ def _run_transport(scheme, views, labels, cfg, *, epochs, batch_size, lr,
         for t in range(tick):                 # breaker replay, ledger-free
             transport.round_outcome(t, batch_size, charges=charges,
                                     charge=False)
+    if tsnap is not None:
+        # the replay above already reproduced the adaptive knob trajectory
+        # (observe runs on uncharged rounds too); loading the sidecar's
+        # copy on top makes the checkpoint authoritative over the replay
+        transport.load_snapshot(tsnap)
 
     n_eval = min(eval_n, labels.shape[0])
     ev = jnp.asarray(views[:, :n_eval])
@@ -445,7 +458,8 @@ def _run_transport(scheme, views, labels, cfg, *, epochs, batch_size, lr,
                                 meter.measured_gbits, meter.delivered_gbits))
         if ckpt_dir and ((ep + 1) % max(ckpt_every, 1) == 0
                          or ep + 1 == epochs):
-            _save_epoch(ckpt_dir, scheme.name, ep + 1, state, curve, meter)
+            _save_epoch(ckpt_dir, scheme.name, ep + 1, state, curve, meter,
+                        transport=transport)
     return curve
 
 

@@ -17,7 +17,9 @@ with p50/p99 latency and goodput per load point.
 from __future__ import annotations
 
 import argparse
+import contextlib
 import dataclasses
+import signal
 import time
 import warnings
 
@@ -92,6 +94,46 @@ def serve_batch(cfg, params, prompts, gen_len: int, *, trace_log=None):
     return jnp.stack(out, axis=1)
 
 
+@contextlib.contextmanager
+def drain_on_signal(engine):
+    """SIGTERM/Ctrl-C become a GRACEFUL engine shutdown: admission stops,
+    queued work drains, and still-pending futures fail with
+    `EngineShutdown` instead of hanging their waiters.  The serve flows
+    catch that and flush ServeStats + the bit ledgers before exiting, so
+    an interrupted run still reports what it actually served.
+
+    Yields a dict that gains a "sig" key if a signal fired (the caller
+    uses it to pick a clean exit code over a crash)."""
+    fired = {}
+
+    def _handler(signum, frame):
+        fired["sig"] = signum
+        engine.shutdown()
+
+    prev = {}
+    for sig in (signal.SIGTERM, signal.SIGINT):
+        try:
+            prev[sig] = signal.signal(sig, _handler)
+        except ValueError:      # not the main thread (embedded use)
+            pass
+    try:
+        yield fired
+    finally:
+        for sig, h in prev.items():
+            signal.signal(sig, h)
+
+
+def flush_stats(engine, *, label: str = "shutdown") -> None:
+    """The ledger flush every exit path owes the operator: whatever the
+    engine completed is reported even when the run was cut short."""
+    st = engine.stats
+    print(f"[{label}] served={st.completed} launches={st.launches} "
+          f"shed={st.shed} patched={st.patched} "
+          f"pad_fraction={st.pad_fraction:.2f}")
+    print(f"[{label}] ledger: offered={engine.meter.gbits * 1e3:.3f} Mbits "
+          f"delivery_ratio={engine.meter.delivery_ratio:.3f}")
+
+
 def _inl_setup(args):
     """Train a smoke INL model and build the requested serving topology.
     Returns (scheme, state, cfg, topology-or-None, (J, n) views, labels)."""
@@ -160,7 +202,7 @@ def serve_inl(args):
     """One-shot fuse-what-arrived serving through the continuous-batching
     engine: submit a block of requests, report fused-view stats, accuracy
     under the deadline vs clean, and the per-request bit ledger."""
-    from repro.serving import ServingEngine
+    from repro.serving import EngineShutdown, ServingEngine
 
     scheme, state, cfg, topo, views, labels = _inl_setup(args)
     n = clamp_requests(args.requests, views.shape[1], strict=args.strict)
@@ -178,8 +220,14 @@ def serve_inl(args):
                            speculative=args.speculative)
     engine.warmup()
     t0 = time.time()
-    with engine:
-        probs, results = engine.serve(ev)
+    try:
+        with engine, drain_on_signal(engine) as fired:
+            probs, results = engine.serve(ev)
+    except EngineShutdown:
+        flush_stats(engine, label="drained")
+        if transport is not None:
+            transport.close()
+        raise SystemExit(0 if fired.get("sig") else 1)
     dt = time.time() - t0
     arrived = np.asarray([r.views_fused for r in results])
     acc = float(np.mean(np.argmax(probs, -1) == el))
@@ -231,8 +279,8 @@ def serve_inl(args):
 def serve_inl_loadgen(args):
     """Poisson offered-load sweep: calibrate serial capacity, then offer
     multiples of it and print p50/p99 latency + goodput per point."""
-    from repro.serving import (ServingEngine, measure_serial_capacity,
-                               run_poisson)
+    from repro.serving import (EngineShutdown, ServingEngine,
+                               measure_serial_capacity, run_poisson)
 
     scheme, state, cfg, topo, views, labels = _inl_setup(args)
     n = clamp_requests(args.requests, views.shape[1], strict=args.strict)
@@ -249,17 +297,23 @@ def serve_inl_loadgen(args):
 
     engine = ServingEngine(scheme, state, cfg, topology=topo,
                            wire=args.wire, deadline_ms=args.deadline_ms,
-                           seed=args.seed + 2)
+                           seed=args.seed + 2, max_queue=args.max_queue)
     engine.warmup()
     print(f"{'offered_rps':>12} {'goodput_rps':>12} {'p50_ms':>9} "
-          f"{'p99_ms':>9} {'fused':>6}")
-    with engine:
-        for mult in (0.5, 2.0, 8.0):
-            s = run_poisson(engine, pool, rate_rps=cap * mult,
-                            num_requests=n, seed=args.seed + int(mult * 10))
-            print(f"{s['offered_rps']:12.1f} {s['goodput_rps']:12.1f} "
-                  f"{s['p50_ms']:9.2f} {s['p99_ms']:9.2f} "
-                  f"{s['mean_views_fused']:6.2f}")
+          f"{'p99_ms':>9} {'fused':>6} {'shed':>5}")
+    try:
+        with engine, drain_on_signal(engine) as fired:
+            for mult in (0.5, 2.0, 8.0):
+                s = run_poisson(engine, pool, rate_rps=cap * mult,
+                                num_requests=n,
+                                seed=args.seed + int(mult * 10))
+                print(f"{s['offered_rps']:12.1f} {s['goodput_rps']:12.1f} "
+                      f"{s['p50_ms']:9.2f} {s['p99_ms']:9.2f} "
+                      f"{s['mean_views_fused']:6.2f} {s['shed']:5d}")
+    except EngineShutdown:
+        flush_stats(engine, label="drained")
+        raise SystemExit(0 if fired.get("sig") else 1)
+    flush_stats(engine, label="done")
     assert all(c <= 1 for c in engine.trace_counts.values()), \
         f"bucket predict retraced: {engine.trace_counts}"
 
@@ -301,6 +355,11 @@ def main():
     ap.add_argument("--load-gen", action="store_true",
                     help="paper-inl: Poisson offered-load sweep instead of "
                          "the one-shot block")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="paper-inl --load-gen: bound per-node queue depth; "
+                         "arrivals over the bound are shed with a typed "
+                         "Rejected result instead of growing latency "
+                         "without limit")
     args = ap.parse_args()
 
     if args.arch == "paper-inl":

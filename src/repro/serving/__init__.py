@@ -11,13 +11,15 @@
 offered load per topology and wire format into BENCH_serve.json.
 """
 from repro.serving.batching import BUCKETS, pad_to_bucket, pick_bucket
-from repro.serving.engine import ServedRequest, ServeStats, ServingEngine
+from repro.serving.engine import (EngineShutdown, Rejected, ServedRequest,
+                                  ServeStats, ServingEngine)
 from repro.serving.loadgen import measure_serial_capacity, run_poisson
 from repro.serving.metering import request_bits, request_edge_bits
 
 __all__ = [
     "BUCKETS", "pad_to_bucket", "pick_bucket",
-    "ServedRequest", "ServeStats", "ServingEngine",
+    "EngineShutdown", "Rejected", "ServedRequest", "ServeStats",
+    "ServingEngine",
     "measure_serial_capacity", "run_poisson",
     "request_bits", "request_edge_bits",
 ]

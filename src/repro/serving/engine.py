@@ -67,6 +67,21 @@ from repro.core import topology as topology_lib
 from repro.serving import batching, metering
 
 
+class EngineShutdown(RuntimeError):
+    """The engine is shutting down: new submits are refused with this, and
+    requests still pending when the drain window closes fail with it."""
+
+
+@dataclass(frozen=True)
+class Rejected:
+    """One request refused at admission (its Future resolves to THIS, not
+    to an exception: shedding is an expected overload outcome the caller
+    handles inline, not a programming error)."""
+    rid: int
+    reason: str
+    t_done: float                # perf_counter stamp at rejection
+
+
 @dataclass(frozen=True)
 class ServedRequest:
     """One completed request, as its Future resolves it."""
@@ -92,6 +107,7 @@ class ServeStats:
     launched_rows: int = 0       # bucket rows launched (padding included)
     patched: int = 0             # requests answered by a patched fusion
     views_recovered: int = 0     # straggler views patched fusions added
+    shed: int = 0                # requests refused at admission (Rejected)
 
     @property
     def pad_fraction(self) -> float:
@@ -137,7 +153,8 @@ class ServingEngine:
                  wire: str = "dense", buckets: Sequence[int] = None,
                  deadline_ms: Optional[float] = None, seed: int = 0,
                  meter: Optional[bandwidth.BandwidthMeter] = None,
-                 transport=None, speculative: bool = False):
+                 transport=None, speculative: bool = False,
+                 max_queue: Optional[int] = None):
         self.scheme, self.state, self.cfg = scheme, state, cfg
         self.topology = topology
         self.topo = topology_lib.resolve(topology, cfg)
@@ -152,6 +169,16 @@ class ServingEngine:
                        or deadline_ms is not None)
         self.transport = transport
         self.speculative = bool(speculative)
+        # bounded per-node queues: None = unbounded (the historical
+        # behaviour); an int sheds at admission once any node's queue —
+        # plus transport submissions still in flight — reaches the bound,
+        # resolving the Future with a typed `Rejected` instead of growing
+        # deques without limit.  Overload then degrades (shed counter,
+        # caller-visible) instead of OOMing.
+        self.max_queue = max_queue
+        self._reserved = 0           # admitted, riding the transport,
+                                     # not yet enqueued
+        self._draining = False
         if speculative and transport is None:
             raise ValueError("speculative fusion needs a transport= — only "
                              "a transport distinguishes LATE views (worth "
@@ -282,8 +309,13 @@ class ServingEngine:
         With a transport, the fragments first RIDE it: the request's id is
         the transport tick, its delivery report (per-view on-time / late /
         lost after retries, breakers and chaos) is recorded for the
-        scheduler, and the channels genuinely carry the fragment bytes."""
+        scheduler, and the channels genuinely carry the fragment bytes.
+
+        With `max_queue=`, a request that would push any per-node queue
+        past the bound is SHED: its Future resolves immediately to a
+        `Rejected` (it never rides the transport, never launches)."""
         self._check_error()
+        self._check_shutdown()
         views = np.asarray(views)
         if views.shape[0] != self.topo.num_views():
             raise ValueError(
@@ -292,22 +324,31 @@ class ServingEngine:
         fut: Future = Future()
         if self.transport is None:
             with self._work:
-                rid = self._next_rid
-                self._next_rid += 1
-                for j, name in enumerate(self.topo.view_nodes()):
-                    self._queues[name].append((rid, views[j]))
-                self._futures[rid] = fut
-                self._submit_t[rid] = time.perf_counter()
-                self._work.notify()
+                self._check_shutdown()
+                rid, admitted = self._admit_locked(fut)
+                if admitted:
+                    for j, name in enumerate(self.topo.view_nodes()):
+                        self._queues[name].append((rid, views[j]))
+                    self._futures[rid] = fut
+                    self._submit_t[rid] = time.perf_counter()
+                    self._work.notify()
             return rid, fut
         with self._work:
-            rid = self._next_rid
-            self._next_rid += 1
+            self._check_shutdown()
+            rid, admitted = self._admit_locked(fut)
+            if admitted:
+                self._reserved += 1
+        if not admitted:
+            return rid, fut
         # the channel walk happens OUTSIDE the scheduler lock (the
         # transport serialises itself); the enqueue below is atomic, so
         # the per-node queues still pop aligned
-        report = self.transport.send_request(rid, views,
-                                             deadline_ms=self.deadline_ms)
+        try:
+            report = self.transport.send_request(
+                rid, views, deadline_ms=self.deadline_ms)
+        finally:
+            with self._work:
+                self._reserved -= 1
         with self._work:
             self._check_error()
             self._futures[rid] = fut
@@ -317,6 +358,28 @@ class ServingEngine:
                 self._queues[name].append((rid, views[j]))
             self._work.notify()
         return rid, fut
+
+    def _admit_locked(self, fut: Future) -> Tuple[int, bool]:
+        """(caller holds _work) Allocate a rid; shed when the queues are at
+        the admission bound."""
+        rid = self._next_rid
+        self._next_rid += 1
+        if self.max_queue is not None:
+            depth = max((len(q) for q in self._queues.values()),
+                        default=0) + self._reserved
+            if depth >= self.max_queue:
+                self.stats.shed += 1
+                fut.set_result(Rejected(
+                    rid=rid, t_done=time.perf_counter(),
+                    reason=f"queue depth {depth} at max_queue="
+                           f"{self.max_queue}"))
+                return rid, False
+        return rid, True
+
+    def _check_shutdown(self) -> None:
+        if self._draining:
+            raise EngineShutdown(
+                "serving engine is shutting down; request not accepted")
 
     def pending(self) -> int:
         with self._work:
@@ -519,6 +582,48 @@ class ServingEngine:
         self._thread = None
         if reraise:
             self._check_error()
+
+    def shutdown(self, drain_timeout: float = 30.0) -> None:
+        """GRACEFUL shutdown (the SIGTERM/Ctrl-C path `launch/serve.py`
+        installs): stop admitting — further `submit` calls raise
+        `EngineShutdown` — then drain what is already queued for up to
+        `drain_timeout` seconds, and fail whatever remains pending with
+        `EngineShutdown` so no waiter ever hangs on a dead engine.
+
+        Idempotent, and safe to call from a signal handler while the
+        scheduler thread runs (the inline-drain branch is for engines that
+        were never start()ed — call that one from a normal frame)."""
+        with self._work:
+            self._draining = True
+            self._work.notify_all()
+        if self._thread is not None:
+            self._stop.set()
+            with self._work:
+                self._work.notify()
+            self._thread.join(timeout=drain_timeout)
+            if not self._thread.is_alive():
+                self._thread = None
+        elif self._error is None:
+            deadline = time.perf_counter() + drain_timeout
+            try:
+                while self.pending() and time.perf_counter() < deadline:
+                    if self.step() == 0:
+                        break
+            except RuntimeError:
+                pass                      # a dying drain still fails pending
+        exc = EngineShutdown(
+            "serving engine shut down before this request completed")
+        with self._work:
+            for fut in self._futures.values():
+                if not fut.done():
+                    fut.set_exception(exc)
+            self._futures.clear()
+            self._submit_t.clear()
+            self._reports.clear()
+            self._patches.clear()
+            for q in self._queues.values():
+                q.clear()
+            self._work.notify_all()
 
     def __enter__(self) -> "ServingEngine":
         return self.start()

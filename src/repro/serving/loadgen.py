@@ -65,21 +65,25 @@ def run_poisson(engine, views_pool: np.ndarray, *, rate_rps: float,
         futs.append(engine.submit(views_pool[:, i % n_pool])[1])
 
     results = [f.result(timeout=timeout) for f in futs]
+    # an engine with max_queue= resolves shed requests to Rejected — they
+    # count against goodput (offered but not served), not against latency
+    served = [r for r in results if hasattr(r, "probs")]
     # num_requests=0 (or 1) must yield a NaN-free summary: guard the empty
     # max()/mean() and let percentile_ms handle the sub-2-sample lists
     t_end = max((r.t_done for r in results), default=t0)
     span = max(t_end - t0, 1e-9)
 
-    lats = [r.latency_ms for r in results]
-    fused = [r.views_fused for r in results]
+    lats = [r.latency_ms for r in served]
+    fused = [r.views_fused for r in served]
     offered_bits = engine.meter.total_bits - bits0
     delivered_bits = engine.meter.delivered_bits - dbits0
     return {
         "offered_rps": float(rate_rps),
-        "goodput_rps": len(results) / span,
+        "goodput_rps": len(served) / span,
         "p50_ms": percentile_ms(lats, 50),
         "p99_ms": percentile_ms(lats, 99),
-        "served": len(results),
+        "served": len(served),
+        "shed": len(results) - len(served),
         "mean_views_fused": float(np.mean(fused)) if fused else 0.0,
         "offered_gbits": offered_bits / 1e9,
         "delivered_gbits": delivered_bits / 1e9,

@@ -1,21 +1,46 @@
-"""Fault-tolerant edge transport: channels, retry/breaker policies, and the
-per-topology `NetworkTransport` that turns `linkfault.LinkModel` parameters
-into actual transport outcomes (delivered / late / lost payloads) for the
-serving engine and the training round paths."""
-from repro.transport.channel import (CHANNEL_KINDS, Channel, LoopbackChannel,
-                                     SocketChannel, decode_fragment,
-                                     encode_fragment, make_channel)
-from repro.transport.network import (DOMAIN_REQUEST, DOMAIN_ROUND,
-                                     EdgeResult, EdgeTransport,
-                                     NetworkTransport, RequestReport,
-                                     RoundReport)
-from repro.transport.policy import (DEFAULT_RETRY, NO_RETRY, CircuitBreaker,
-                                    NoBreaker, RetryPolicy)
+"""Fault-tolerant edge transport: channels, retry/breaker policies, adaptive
+retuning, and the per-topology `NetworkTransport` that turns
+`linkfault.LinkModel` parameters into actual transport outcomes (delivered /
+late / lost payloads) for the serving engine and the training round paths.
 
-__all__ = [
-    "CHANNEL_KINDS", "Channel", "LoopbackChannel", "SocketChannel",
-    "decode_fragment", "encode_fragment", "make_channel",
-    "DOMAIN_REQUEST", "DOMAIN_ROUND", "EdgeResult", "EdgeTransport",
-    "NetworkTransport", "RequestReport", "RoundReport",
-    "DEFAULT_RETRY", "NO_RETRY", "CircuitBreaker", "NoBreaker", "RetryPolicy",
-]
+Exports resolve lazily (PEP 562): `repro.cluster.worker` processes import
+`repro.transport.channel` through this package, and pulling `network` eagerly
+would drag jax into every spawned worker — the channel layer itself needs
+only numpy and the standard library.
+"""
+import importlib
+
+_EXPORTS = {
+    # channel layer (numpy + stdlib only — worker processes import these)
+    "CHANNEL_KINDS": "channel", "Channel": "channel",
+    "ChannelError": "channel", "HandshakeError": "channel",
+    "LoopbackChannel": "channel", "SocketChannel": "channel",
+    "TcpListener": "channel", "PROTOCOL_VERSION": "channel",
+    "decode_fragment": "channel", "encode_fragment": "channel",
+    "make_channel": "channel",
+    # transport proper (imports the core ledgers -> jax)
+    "DOMAIN_REQUEST": "network", "DOMAIN_ROUND": "network",
+    "EdgeResult": "network", "EdgeTransport": "network",
+    "NetworkTransport": "network", "RequestReport": "network",
+    "RoundReport": "network",
+    # policies
+    "DEFAULT_RETRY": "policy", "NO_RETRY": "policy",
+    "CircuitBreaker": "policy", "NoBreaker": "policy",
+    "RetryPolicy": "policy",
+    "AdaptiveConfig": "adaptive", "AdaptivePolicy": "adaptive",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    value = getattr(importlib.import_module(f"{__name__}.{mod}"), name)
+    globals()[name] = value
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

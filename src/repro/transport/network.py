@@ -129,16 +129,27 @@ class EdgeTransport:
                 t_ms += self.policy.timeout_ms
                 self.breaker.record_failure(tick)
                 continue
-            # delivered: the frame rides the channel end to end
+            # delivered: the frame rides the channel end to end.  A channel
+            # that fails underneath us (torn frame, dead worker process)
+            # is just another failed attempt — typed, not fatal.
+            try:
+                self.channel.send(frame if frame is not None else _PROBE)
+            except channel_lib.ChannelError:
+                t_ms += self.policy.timeout_ms if self.policy.timeout_ms \
+                    is not None else max(lat, 1.0)
+                self.breaker.record_failure(tick)
+                continue
             self.breaker.record_success()
-            self.channel.send(frame if frame is not None else _PROBE)
             return EdgeResult(ok=True, latency_ms=t_ms + lat,
                               attempts=attempts_used)
         return EdgeResult(ok=False, latency_ms=t_ms, attempts=attempts_used,
                           short_circuited=refused == self.policy.max_attempts)
 
     def receive(self, timeout: float = 5.0) -> Optional[bytes]:
-        return self.channel.recv(timeout)
+        try:
+            return self.channel.recv(timeout)
+        except channel_lib.ChannelError:
+            return None                          # abrupt close == lost payload
 
 
 @dataclass
@@ -178,9 +189,24 @@ class NetworkTransport:
     breaker         None (no breaking), "default" (CircuitBreaker() per
                     edge), or a factory ``lambda: CircuitBreaker(...)``.
     chaos           a repro/chaos.ChaosSchedule (or None).
-    channels        "loopback" | "socket" — the byte transport per edge.
+    channels        "loopback" | "socket" — the byte transport per edge —
+                    or a mapping {edge_key: Channel} supplying ready-made
+                    channels (how `repro/cluster` routes edges whose source
+                    is a supervised worker PROCESS through its TCP
+                    connection; unmapped edges fall back to loopback).
     meter           BandwidthMeter accruing offered/delivered; owns one
                     when not given.
+    adaptive        an AdaptivePolicy retuning per-edge retry budgets and
+                    breaker thresholds each window from delivered/offered
+                    (None keeps the fixed constants).
+    on_tick         callable(tick) invoked at the top of every
+                    round_outcome/send_request BEFORE any fault draw — the
+                    cluster supervisor's hook to realise scheduled
+                    kills/freezes and heartbeat at deterministic points.
+    node_down       callable(name, tick) -> bool consulted alongside the
+                    chaos schedule — the membership view's hook, so an
+                    unscheduled worker death masks exactly the votes that
+                    worker owned.
 
     Thread-safe: the serving engine submits from arbitrary threads; breaker
     state and ledger charges are serialised under one lock.
@@ -188,12 +214,16 @@ class NetworkTransport:
 
     def __init__(self, topo, cfg, *, seed: int = 0,
                  policy: RetryPolicy = DEFAULT_RETRY, breaker="default",
-                 chaos=None, channels: str = "loopback", meter=None):
+                 chaos=None, channels="loopback", meter=None,
+                 adaptive=None, on_tick=None, node_down=None):
         self.topo = topology_lib.resolve(topo, cfg)
         self.cfg = cfg
         self.seed = seed
         self.chaos = chaos
         self.meter = bandwidth.BandwidthMeter() if meter is None else meter
+        self.adaptive = adaptive
+        self.on_tick = on_tick
+        self.node_down = node_down
         self._lock = threading.Lock()
         if breaker == "default":
             breaker = CircuitBreaker
@@ -201,10 +231,14 @@ class NetworkTransport:
         for i, e in enumerate(self.topo.edges):
             pol = policy.get(e.key, NO_RETRY) if isinstance(policy, dict) \
                 else policy
+            if isinstance(channels, str):
+                chan = channel_lib.make_channel(channels)
+            else:
+                chan = channels.get(e.key) or channel_lib.LoopbackChannel()
             self.edges[e.key] = EdgeTransport(
                 e, i, seed=seed, policy=pol,
                 breaker=breaker() if callable(breaker) else None,
-                chan=channel_lib.make_channel(channels), chaos=chaos)
+                chan=chan, chaos=chaos)
         # static per-(view, edge) unit charges for serving requests
         self._unit_bits = {e.key: float(cfg.d_bottleneck
                                         * topology_lib.edge_bits(e, cfg))
@@ -223,7 +257,19 @@ class NetworkTransport:
         return out
 
     def _node_dead(self, name: str, tick: int) -> bool:
-        return self.chaos is not None and self.chaos.node_dead(name, tick)
+        if self.chaos is not None and self.chaos.node_dead(name, tick):
+            return True
+        return self.node_down is not None and self.node_down(name, tick)
+
+    def _apply_adaptive(self) -> None:
+        """Install the controller's current knobs on every edge (called at
+        the top of each tick, before any transmit — so a retune triggered
+        by tick t's observations first applies at tick t+1)."""
+        for et in self.edges.values():
+            et.policy = self.adaptive.policy_for(et.edge.key)
+            if hasattr(et.breaker, "failure_threshold"):
+                et.breaker.failure_threshold = \
+                    self.adaptive.threshold_for(et.edge.key)
 
     def breaker_states(self) -> Dict[str, str]:
         return {k: et.breaker.state for k, et in self.edges.items()}
@@ -238,7 +284,25 @@ class NetworkTransport:
                             "opens": et.breaker.opens,
                             "short_circuits": et.breaker.short_circuits}
                         for k, et in self.edges.items()},
+            **({"adaptive": self.adaptive.state_dict()}
+               if self.adaptive is not None else {}),
         }
+
+    def load_snapshot(self, snap: Dict[str, object]) -> None:
+        """Restore the REPLAYABLE half of a `snapshot()` — the adaptive
+        controller's window accumulators and retuned knobs.  Breaker/ledger
+        counters are NOT loaded here: resume rebuilds breakers by replaying
+        completed ticks with ``charge=False`` and restores ledgers from the
+        checkpoint sidecar's meter dump, so loading them twice would
+        double-count.  Loading adaptive state after that replay is
+        idempotent (the replay reproduces the same trajectory) but makes
+        the sidecar authoritative."""
+        state = snap.get("adaptive") if isinstance(snap, dict) else None
+        if self.adaptive is None or state is None:
+            return
+        with self._lock:
+            self.adaptive.load_state_dict(state)
+            self._apply_adaptive()
 
     def close(self) -> None:
         for et in self.edges.values():
@@ -260,6 +324,8 @@ class NetworkTransport:
         Offered bits are charged per attempt; delivered credit is the
         ENGINE's call (`credit_delivered`) once a fusion consumed the
         views."""
+        if self.on_tick is not None:
+            self.on_tick(rid)
         if deadline_ms is None:
             deadline_ms = getattr(self.cfg, "fusion_deadline_ms", None)
         names = self.topo.view_nodes()
@@ -270,6 +336,8 @@ class NetworkTransport:
         received: List[Optional[np.ndarray]] = [None] * J
         attempts: Dict[str, int] = {}
         with self._lock:
+            if self.adaptive is not None:
+                self._apply_adaptive()
             for j, name in enumerate(names):
                 if self._node_dead(name, rid):
                     continue                      # a dead node sends nothing
@@ -290,11 +358,12 @@ class NetworkTransport:
                     self.meter.add_edge(
                         e.key, bits=res.attempts * self._unit_bits[e.key])
                     t += res.latency_ms
-                    if not res.ok:
-                        delivered = False
-                        break
-                    got = et.receive()
-                    if got is None:
+                    got = et.receive() if res.ok else None
+                    hop_ok = res.ok and got is not None
+                    if self.adaptive is not None:
+                        self.adaptive.observe(e.key, offered=res.attempts,
+                                              delivered=float(hop_ok))
+                    if not hop_ok:
                         delivered = False
                         break
                     frame = got if frame is not None else None
@@ -345,6 +414,8 @@ class NetworkTransport:
         the round WITHOUT touching the ledgers — how a resumed run
         fast-forwards the transport (breaker trajectories included)
         through rounds a checkpoint already accounted for."""
+        if self.on_tick is not None:
+            self.on_tick(round_idx)
         topo, cfg = self.topo, self.cfg
         if charges is None:
             bits = topology_lib.round_edge_bits(topo, cfg, batch_size)
@@ -353,6 +424,8 @@ class NetworkTransport:
         results: Dict[str, EdgeResult] = {}
         attempts: Dict[str, int] = {}
         with self._lock:
+            if self.adaptive is not None:
+                self._apply_adaptive()
             for e in topo.edges:
                 et = self.edges[e.key]
                 ebits, _ = charges[e.key]
@@ -383,6 +456,18 @@ class NetworkTransport:
                 if ok:
                     lat[j] = t
                     mask[j] = deadline is None or t <= deadline
+            # per-edge surviving payload fraction: the delivered basis for
+            # both the ledger credit and the adaptive controller
+            fracs = {}
+            for e in topo.edges:
+                pay = list(topo.payload(e))
+                fracs[e.key] = float(mask[pay].sum()) / len(pay)
+            # the controller observes every round — charged or not — so an
+            # uncharged resume replay rebuilds the same knob trajectory
+            if self.adaptive is not None:
+                for e in topo.edges:
+                    self.adaptive.observe(e.key, offered=attempts[e.key],
+                                          delivered=fracs[e.key])
             # ledgers: attempts re-offer the edge's nominal charge; the
             # delivered credit is the surviving payload fraction
             if charge:
@@ -391,8 +476,7 @@ class NetworkTransport:
                     a = attempts[e.key]
                     self.meter.add_edge(e.key, bits=a * ebits,
                                         nbytes=a * enbytes)
-                    pay = list(topo.payload(e))
-                    frac = float(mask[pay].sum()) / len(pay)
+                    frac = fracs[e.key]
                     if frac:
                         self.meter.add_delivered(bits=ebits * frac,
                                                  nbytes=enbytes * frac,

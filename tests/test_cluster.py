@@ -1,0 +1,327 @@
+"""The multi-process worker plane's contracts (repro/cluster,
+transport/adaptive, and the serving plane's admission control).
+
+The supervision ladder and the adaptive controller are PURE state
+machines — functions of (tick, observation) with no processes, sockets,
+or wall clock — so the miss-threshold -> suspect -> dead ->
+restart-backoff -> rejoin ladder and the knob trajectories pin down as
+plain units.  The real-process section then spawns actual workers and
+asserts the same ladder over genuine SIGKILL/SIGSTOP:
+
+  * spawn + handshake: the worker registers, echoes bytes bit-exactly
+    across two process boundaries, and answers pings;
+  * SIGKILL: unscheduled death walks down the ladder, pays capped
+    exponential restart backoff, rejoins with a bumped incarnation;
+  * SIGSTOP: a frozen worker goes suspect then dead via probe timeouts,
+    and rejoins with the SAME incarnation on thaw (it never restarted);
+  * serving admission control: a bounded queue sheds with a typed
+    Rejected RESULT (not an exception), and graceful shutdown fails
+    still-pending futures with EngineShutdown so no waiter hangs.
+"""
+import numpy as np
+import pytest
+
+from repro.cluster import (DOWN, SUSPECT, UP, HeartbeatMonitor, Supervisor)
+from repro.core import schemes
+from repro.core import topology as topology_lib
+from repro.serving import EngineShutdown, Rejected, ServingEngine
+from repro.transport import AdaptiveConfig, AdaptivePolicy, DEFAULT_RETRY
+from repro.transport.policy import RetryPolicy
+from tests._schemes_common import CFG, fixture_data, trajectory
+
+
+# ---------------------------------------------------------------------------
+# membership ladder (pure)
+# ---------------------------------------------------------------------------
+
+def _monitor(**kw):
+    kw.setdefault("seed", 0)
+    kw.setdefault("interval", 1)
+    kw.setdefault("suspect_after", 1)
+    kw.setdefault("dead_after", 3)
+    kw.setdefault("backoff_base", 2)
+    kw.setdefault("backoff_mult", 2)
+    kw.setdefault("backoff_cap", 8)
+    kw.setdefault("stable_after", 2)
+    m = HeartbeatMonitor(["a"], **kw)
+    m.note_joined("a", 0)
+    return m
+
+
+def test_miss_ladder_up_suspect_dead():
+    m = _monitor()
+    assert m.view().mask(["a"]).tolist() == [True]
+    m.observe("a", 1, False)
+    assert m.nodes["a"].status == SUSPECT
+    assert m.view().mask(["a"]).tolist() == [True]   # suspects keep voting
+    m.observe("a", 2, False)
+    assert m.nodes["a"].status == SUSPECT            # dead_after=3 not hit
+    m.observe("a", 3, False)
+    assert m.nodes["a"].status == DOWN
+    assert m.is_down("a") and not m.view().mask(["a"]).any()
+    assert [e[2] for e in m.events] == \
+        ["down->up", "up->suspect", "suspect->down"]
+
+
+def test_pong_clears_misses_and_rejoins_frozen_node_in_place():
+    m = _monitor()
+    for t in (1, 2, 3):
+        m.observe("a", t, False)
+    assert m.nodes["a"].status == DOWN
+    inc = m.nodes["a"].incarnation
+    m.observe("a", 4, True)             # it answered: frozen, not dead
+    assert m.nodes["a"].status == UP
+    assert m.nodes["a"].incarnation == inc          # same incarnation
+    assert m.nodes["a"].restart_due is None         # no restart pending
+
+
+def test_scheduled_exit_restarts_at_window_end():
+    m = _monitor()
+    m.note_exit("a", 5, scheduled=True)
+    assert m.nodes["a"].status == DOWN
+    assert m.due_restart("a", 5)         # the schedule owns the timing
+    assert m.nodes["a"].backoff_level == 0          # no backoff charged
+
+
+def test_unscheduled_exit_backoff_escalates_then_caps():
+    m = _monitor(backoff_base=2, backoff_mult=2, backoff_cap=8)
+    due = []
+    t = 0
+    for crash in range(4):
+        m.note_exit("a", t, scheduled=False)
+        due.append(m.nodes["a"].restart_due - t)
+        assert not m.due_restart("a", t + due[-1] - 1)
+        assert m.due_restart("a", t + due[-1])
+        t += due[-1]
+        m.note_joined("a", t)
+    assert due == [2, 4, 8, 8]           # base * mult**level, capped
+
+
+def test_stability_decays_backoff_level():
+    m = _monitor(stable_after=2)
+    m.note_exit("a", 0, scheduled=False)
+    m.note_joined("a", 2)
+    assert m.nodes["a"].backoff_level == 1
+    m.tick_stability(3)
+    assert m.nodes["a"].backoff_level == 1          # not stable yet
+    m.tick_stability(4)
+    assert m.nodes["a"].backoff_level == 0          # 2 up-ticks: decayed
+
+
+def test_rejoin_bumps_incarnation_and_version():
+    m = _monitor()
+    v0 = m.view().version
+    m.note_exit("a", 1, scheduled=False)
+    m.note_joined("a", 3)
+    view = m.view()
+    assert dict(view.incarnations)["a"] == 2
+    assert view.version > v0
+    assert m.nodes["a"].restarts == 1
+
+
+def test_beat_phases_seeded_and_replayable():
+    nodes = [f"m{i}" for i in range(8)]
+    a = HeartbeatMonitor(nodes, seed=7, interval=4)
+    b = HeartbeatMonitor(nodes, seed=7, interval=4)
+    for n in nodes:
+        assert [a.beat_due(n, t) for t in range(16)] == \
+            [b.beat_due(n, t) for t in range(16)]
+        assert sum(a.beat_due(n, t) for t in range(4)) == 1
+    c = HeartbeatMonitor(nodes, seed=8, interval=4)
+    assert any([a.beat_due(n, t) for t in range(16)]
+               != [c.beat_due(n, t) for t in range(16)] for n in nodes)
+
+
+def test_dead_after_validation():
+    with pytest.raises(ValueError):
+        HeartbeatMonitor(["a"], suspect_after=3, dead_after=2)
+
+
+# ---------------------------------------------------------------------------
+# adaptive fault policies (pure)
+# ---------------------------------------------------------------------------
+
+def test_adaptive_tightens_on_low_ratio_and_floors():
+    pol = AdaptivePolicy(base=RetryPolicy(max_attempts=3), base_threshold=3,
+                         config=AdaptiveConfig(window=4))
+    for _ in range(3 * 4):               # three windows of pure loss
+        pol.observe("e", offered=3.0, delivered=0.0)
+    assert pol.policy_for("e").max_attempts == 1    # floored, not 0
+    assert pol.threshold_for("e") == 1
+    assert pol.retunes == 3
+
+
+def test_adaptive_relaxes_back_to_base_and_ceilings():
+    pol = AdaptivePolicy(base=RetryPolicy(max_attempts=3), base_threshold=3,
+                         config=AdaptiveConfig(window=2))
+    for _ in range(2 * 2):
+        pol.observe("e", offered=3.0, delivered=0.0)
+    assert pol.policy_for("e").max_attempts == 1
+    for _ in range(6 * 2):               # healthy windows walk back up
+        pol.observe("e", offered=1.0, delivered=1.0)
+    assert pol.policy_for("e") is pol.base          # back at base: identity
+    assert pol.threshold_for("e") == 3
+
+
+def test_adaptive_holds_when_nothing_offered():
+    pol = AdaptivePolicy(base=RetryPolicy(max_attempts=3), base_threshold=3,
+                         config=AdaptiveConfig(window=2))
+    for _ in range(4):                   # breaker short-circuited the window
+        pol.observe("e", offered=0.0, delivered=0.0)
+    assert pol.policy_for("e").max_attempts == 3    # uninformative: hold
+    assert pol.retunes == 2              # the window still closed
+
+
+def test_adaptive_midband_holds_knobs():
+    pol = AdaptivePolicy(base=RetryPolicy(max_attempts=3), base_threshold=3,
+                         config=AdaptiveConfig(window=2, ratio_low=0.5,
+                                               ratio_high=0.9))
+    for _ in range(4):                   # ratio 0.7: between the rails
+        pol.observe("e", offered=1.0, delivered=0.7)
+    assert pol.policy_for("e").max_attempts == 3
+
+
+def test_adaptive_state_roundtrip_resumes_mid_window():
+    a = AdaptivePolicy(base=DEFAULT_RETRY, base_threshold=3,
+                       config=AdaptiveConfig(window=4))
+    for i in range(6):                   # one retune + half an open window
+        a.observe("e", offered=2.0, delivered=0.0)
+    b = AdaptivePolicy(base=DEFAULT_RETRY, base_threshold=3,
+                       config=AdaptiveConfig(window=4))
+    b.load_state_dict(a.state_dict())
+    for p in (a, b):
+        p.observe("e", offered=2.0, delivered=0.0)
+        p.observe("e", offered=2.0, delivered=0.0)
+    assert a.state_dict() == b.state_dict()
+    assert a.policy_for("e").max_attempts == b.policy_for("e").max_attempts
+
+
+# ---------------------------------------------------------------------------
+# serving admission control + graceful shutdown
+# ---------------------------------------------------------------------------
+
+def _engine(**kw):
+    scheme = schemes.get("inl")
+    state = trajectory("inl")["state"]
+    views, _ = fixture_data()
+    return ServingEngine(scheme, state, CFG, seed=5, **kw), np.asarray(views)
+
+
+def test_bounded_queue_sheds_with_typed_rejected():
+    engine, views = _engine(max_queue=2)
+    engine.warmup()
+    futs = [engine.submit(views[:, i])[1] for i in range(5)]
+    shed = [f for f in futs if f.done() and isinstance(f.result(), Rejected)]
+    assert len(shed) == 3 and engine.stats.shed == 3
+    assert all(r.result().reason for r in shed)     # typed, with a reason
+    while engine.pending():
+        engine.step()
+    served = [f.result() for f in futs if not isinstance(f.result(),
+                                                         Rejected)]
+    assert len(served) == 2 and all(r.probs.shape[-1] == 10 for r in served)
+
+
+def test_unbounded_queue_never_sheds():
+    engine, views = _engine()
+    engine.warmup()
+    futs = [engine.submit(views[:, i])[1] for i in range(5)]
+    while engine.pending():
+        engine.step()
+    assert engine.stats.shed == 0
+    assert all(not isinstance(f.result(), Rejected) for f in futs)
+
+
+def test_shutdown_fails_pending_futures_and_refuses_new_submits():
+    engine, views = _engine()
+    engine.warmup()
+    futs = [engine.submit(views[:, i])[1] for i in range(3)]
+    engine.shutdown(drain_timeout=0.0)   # no drain budget: fail them all
+    for f in futs:
+        with pytest.raises(EngineShutdown):
+            f.result(timeout=1.0)
+    with pytest.raises(EngineShutdown):
+        engine.submit(views[:, 0])
+    engine.shutdown()                    # idempotent
+
+
+def test_shutdown_with_budget_drains_then_stops():
+    engine, views = _engine()
+    engine.warmup()
+    futs = [engine.submit(views[:, i])[1] for i in range(3)]
+    engine.shutdown(drain_timeout=30.0)
+    assert all(f.done() for f in futs)
+    assert all(not isinstance(f.result(), Rejected) for f in futs)
+    assert engine.pending() == 0
+
+
+# ---------------------------------------------------------------------------
+# real worker processes: spawn, echo, SIGKILL, SIGSTOP
+# ---------------------------------------------------------------------------
+
+def _supervisor(**kw):
+    kw.setdefault("seed", 0)
+    kw.setdefault("heartbeat_interval", 1)
+    kw.setdefault("suspect_after", 1)
+    kw.setdefault("dead_after", 2)
+    kw.setdefault("backoff_base", 2)
+    kw.setdefault("io_timeout", 0.2)
+    return Supervisor(["m0", "m1"], **kw)
+
+
+def test_workers_spawn_register_and_echo_bit_exact():
+    with _supervisor() as sup:
+        pids = {n: h.proc.pid for n, h in sup.handles.items()}
+        assert len(set(pids.values())) == 2         # two real processes
+        topo = topology_lib.star(2)
+        chans = sup.edge_channels(topo)
+        assert set(chans) == {e.key for e in topo.edges}
+        payload = np.random.default_rng(0).bytes(4096)
+        chan = next(iter(chans.values()))
+        chan.send(payload)
+        assert chan.recv(5.0) == payload            # crossed two boundaries
+        sup.tick(0)
+        sup.tick(1)
+        assert sup.membership().mask(["m0", "m1"]).all()
+
+
+def test_sigkill_walks_ladder_pays_backoff_and_rejoins():
+    with _supervisor(backoff_base=2) as sup:
+        sup.tick(0)
+        sup.kill("m1")                   # UNSCHEDULED: backoff applies
+        sup.tick(1)                      # reaped: down, restart due at 3
+        assert sup.is_down("m1")
+        assert not sup.is_down("m0")     # healthy nodes keep their vote
+        assert not sup.membership().mask(["m0", "m1"])[1]
+        sup.tick(2)
+        assert sup.is_down("m1")         # backoff not elapsed
+        sup.tick(3)                      # due: respawned
+        assert not sup.is_down("m1")
+        view = sup.membership()
+        assert dict(view.incarnations)["m1"] == 2
+        assert sup.respawns == 1
+        assert ("up->down" in [e[2] for e in sup.events() if e[1] == "m1"])
+
+
+def test_sigstop_suspect_dead_then_thaw_rejoins_same_incarnation():
+    # the freeze rides the chaos schedule: tick() realises the window with
+    # a real SIGSTOP and thaws with SIGCONT when it closes (a manual
+    # freeze() outside any window would be reconciled away next tick)
+    from repro.chaos import ChaosSchedule
+    chaos = ChaosSchedule().freeze_node("m0", at=1, duration=2)
+    with _supervisor(dead_after=2, chaos=chaos) as sup:
+        sup.tick(0)
+        sup.tick(1)                      # SIGSTOP; probe times out: suspect
+        assert sup.monitor.nodes["m0"].status == SUSPECT
+        assert sup.handles["m0"].frozen
+        assert sup.membership().mask(["m0", "m1"])[0]   # suspects vote
+        sup.tick(2)                      # second miss: dead
+        assert sup.is_down("m0")
+        sup.tick(3)                      # window closed: SIGCONT, pong
+        assert not sup.is_down("m0")
+        assert dict(sup.membership().incarnations)["m0"] == 1
+        assert sup.respawns == 0         # it never restarted
+
+
+def test_is_down_ignores_unowned_nodes():
+    with _supervisor() as sup:
+        assert not sup.is_down("fuse")   # not ours: never down on our account

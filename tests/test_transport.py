@@ -230,3 +230,167 @@ def test_seeded_schedule_replays():
     kw = dict(edge_keys=["a", "b"], nodes=["n"], ticks=32)
     assert ChaosSchedule.seeded(7, **kw) == ChaosSchedule.seeded(7, **kw)
     assert ChaosSchedule.seeded(7, **kw) != ChaosSchedule.seeded(8, **kw)
+
+
+# ---------------------------------------------------------------------------
+# socket channel hardening: torn frames, clean EOF, TCP handshake
+# ---------------------------------------------------------------------------
+
+def _raw_pair():
+    """A SocketChannel wrapping one end of a raw socketpair, with the OTHER
+    end exposed raw — so tests can tear frames mid-byte."""
+    import socket as socket_lib
+    a, b = socket_lib.socketpair()
+    return SocketChannel(sock=a), b
+
+def test_peer_close_mid_header_raises_typed_error():
+    from repro.transport import ChannelError
+    chan, raw = _raw_pair()
+    raw.sendall(b"\x07\x00")                     # 2 of the 4 prefix bytes
+    raw.close()
+    with pytest.raises(ChannelError, match="mid-header"):
+        chan.recv(1.0)
+    chan.close()
+
+def test_peer_close_mid_frame_raises_typed_error():
+    import struct
+    from repro.transport import ChannelError
+    chan, raw = _raw_pair()
+    raw.sendall(struct.pack("<I", 100) + b"only a few body bytes")
+    raw.close()
+    with pytest.raises(ChannelError, match="mid-frame"):
+        chan.recv(1.0)
+    chan.close()
+
+def test_clean_close_at_boundary_is_eof_not_error():
+    import struct
+    chan, raw = _raw_pair()
+    raw.sendall(struct.pack("<I", 3) + b"abc")   # one whole frame, then gone
+    raw.close()
+    assert chan.recv(1.0) == b"abc"
+    assert chan.recv(1.0) is None and chan.eof   # gone, not "nothing yet"
+    chan.close()
+
+def test_timeout_mid_prefix_keeps_partial_bytes_buffered():
+    import struct
+    chan, raw = _raw_pair()
+    frame = struct.pack("<I", 4) + b"wxyz"
+    raw.sendall(frame[:2])                       # half a length prefix
+    assert chan.recv(0.05) is None               # timeout, NOT an error
+    assert not chan.eof
+    raw.sendall(frame[2:])
+    assert chan.recv(1.0) == b"wxyz"             # nothing was lost
+    raw.close()
+    chan.close()
+
+def test_send_on_closed_channel_raises():
+    from repro.transport import ChannelError
+    chan = SocketChannel()
+    chan.close()
+    with pytest.raises(ChannelError):
+        chan.send(b"x")
+    assert chan.recv(0.01) is None               # recv degrades quietly
+
+def test_close_idempotent_and_safe_under_concurrency():
+    import threading
+    chan, raw = _raw_pair()
+    done = threading.Event()
+    def blocked_recv():
+        try:
+            chan.recv(5.0)                       # close() must unblock this
+        except Exception:
+            pass
+        done.set()
+    t = threading.Thread(target=blocked_recv)
+    t.start()
+    threads = [threading.Thread(target=chan.close) for _ in range(8)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    chan.close()                                 # and once more, for luck
+    assert done.wait(5.0)
+    t.join()
+    raw.close()
+
+def test_tcp_handshake_identifies_both_peers():
+    import threading
+    from repro.transport import TcpListener
+    listener = TcpListener(name="fuse")
+    server_chan = []
+    t = threading.Thread(
+        target=lambda: server_chan.append(listener.accept(timeout=5.0)))
+    t.start()
+    client = SocketChannel.connect(listener.host, listener.port,
+                                   name="m0", expect_peer="fuse")
+    t.join()
+    server = server_chan[0]
+    try:
+        assert client.peer == "fuse" and server.peer == "m0"
+        arr = np.random.default_rng(1).standard_normal((5, 6)).astype(
+            np.float32)
+        client.send(encode_fragment(7, 2, arr))
+        rid, j, got = decode_fragment(server.recv(5.0))
+        assert (rid, j) == (7, 2) and np.array_equal(got, arr)
+        server.send(b"ack")
+        assert client.recv(5.0) == b"ack"        # full duplex
+    finally:
+        client.close()
+        server.close()
+        listener.close()
+
+def test_wrong_peer_name_is_fatal_handshake_error():
+    import threading
+    from repro.transport import HandshakeError, TcpListener
+    listener = TcpListener(name="impostor")
+    t = threading.Thread(target=lambda: listener.accept(timeout=5.0))
+    t.start()
+    with pytest.raises(HandshakeError) as exc:
+        SocketChannel.connect(listener.host, listener.port,
+                              name="m0", expect_peer="fuse")
+    assert exc.value.fatal                       # reconnecting cannot fix it
+    t.join()
+    listener.close()
+
+def test_version_mismatch_is_fatal_and_skips_the_retry_loop():
+    import socket as socket_lib
+    import struct
+    import threading
+    import time
+    from repro.transport import HandshakeError
+    from repro.transport.channel import _HELLO_MAGIC
+    srv = socket_lib.socket(socket_lib.AF_INET, socket_lib.SOCK_STREAM)
+    srv.bind(("127.0.0.1", 0))
+    srv.listen(1)
+    port = srv.getsockname()[1]
+    def bad_server():
+        conn, _ = srv.accept()
+        conn.recv(4096)                          # swallow the client hello
+        body = struct.pack("<IHH", _HELLO_MAGIC, 999, 1) + b"x"
+        conn.sendall(struct.pack("<I", len(body)) + body)
+        time.sleep(0.2)
+        conn.close()
+    t = threading.Thread(target=bad_server)
+    t.start()
+    t0 = time.monotonic()
+    with pytest.raises(HandshakeError, match="version") as exc:
+        SocketChannel.connect("127.0.0.1", port, name="m0",
+                              attempts=5, backoff_s=1.0)
+    assert exc.value.fatal
+    assert time.monotonic() - t0 < 1.0           # no 5-attempt backoff walk
+    t.join()
+    srv.close()
+
+def test_bounded_reconnect_gives_up_with_channel_error():
+    import socket as socket_lib
+    import time
+    from repro.transport import ChannelError
+    probe = socket_lib.socket(socket_lib.AF_INET, socket_lib.SOCK_STREAM)
+    probe.bind(("127.0.0.1", 0))
+    dead_port = probe.getsockname()[1]
+    probe.close()                                # nobody listens here now
+    t0 = time.monotonic()
+    with pytest.raises(ChannelError, match="could not connect"):
+        SocketChannel.connect("127.0.0.1", dead_port, name="m0",
+                              attempts=3, backoff_s=0.01, timeout=0.5)
+    assert time.monotonic() - t0 < 5.0           # bounded, not forever
