@@ -1,0 +1,199 @@
+"""Benchmark — the auto-placement search (repro/search): map the
+accuracy-per-Gbit Pareto frontier over (scheme, cut depth, topology,
+link width, wire) and CI-assert its contracts.
+
+Two-stage pipeline (see repro/search/): every grid point is priced from
+the closed-form ledgers first (exact, no training), the provably-redundant
+points are pruned (wire twins, star-dominated graphs), the survivors
+train through `runner.run_scheme`, and the Pareto frontier is extracted
+on the (accuracy up, accounted Gbit down) plane.
+
+The grid pairs each link width with the wire that IMPLEMENTS its charge —
+32-bit links ship dense fp32, narrow links ship packed_duplex codeword
+lanes (both directions quantized, lanes exactly filled at the bench
+shapes) — so closed-form and measured bandwidth agree bit for bit on
+every point, not just the frontier.  The deliberately over-shipping
+spellings (dense at a narrow width; packed's fp32 backward) are the
+pruning rules' subject and are exercised in tests/test_search.py instead.
+
+In-bench asserts (the CI contract, every leg):
+
+  parity      for EVERY trained point, the stage-1 priced bandwidth ==
+              the runner's metered bandwidth exactly (both ledgers), and
+              closed-form bits == measured bytes * 8 exactly;
+  frontier    the searched frontier beats the three PURE baselines
+              (inl/fl/sl at the paper's 32-bit dense star) at >= 1
+              bandwidth budget: strictly higher accuracy than any
+              baseline affordable at that budget;
+  pruning     (--smoke) the pruned points are ALSO trained and every one
+              is weakly dominated by a surviving candidate — pruning by
+              ledger never discards a frontier config; star-dominated
+              graphs additionally match their star sibling's accuracy
+              EXACTLY (the bit-identity the rule is built on).
+
+--smoke runs the CI grid (tiny shapes, 14 trained points); the default
+grid sweeps J=6 graphs (star/chain/tree(2,2)) over widths {2,4,8,32}.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.configs.paper_inl import PaperExperimentConfig
+from repro.search import pareto
+from repro.search.pricing import CANDIDATE, PRUNED_STAR
+from repro.search.space import SearchSpace, merge_points
+from repro.search import driver as driver_lib
+
+SMOKE_CFG = PaperExperimentConfig(
+    conv_channels=(4, 8), d_bottleneck=8, dense_units=(32,),
+    image_shape=(16, 16, 3), dataset_size=512)
+# paper-shaped but CPU-sized; d_bottleneck=16 fills the duplex codeword
+# lanes at every narrow width in the grid (16 * q % 32 == 0)
+FULL_CFG = PaperExperimentConfig(
+    conv_channels=(8, 16), d_bottleneck=16, dense_units=(64,),
+    dataset_size=2048)
+
+BASELINES = ("inl", "fl", "sl")           # the paper's three fixed points
+
+
+def build_grid(smoke: bool):
+    """Each width rides the wire that implements its closed-form charge:
+    q=32 -> dense fp32, narrow -> packed_duplex lanes."""
+    if smoke:
+        topos, j = ("star(5)", "chain(5)"), 5
+        widths = (4,)
+    else:
+        topos, j = ("star(6)", "chain(6)", "tree(2,2)"), 6
+        widths = (2, 4, 8)
+    star = (f"star({j})",)
+    spaces = [
+        SearchSpace(schemes=("inl",), topologies=topos),
+        SearchSpace(schemes=("inl",), topologies=topos, link_bits=widths,
+                    wires=("packed_duplex",)),
+        SearchSpace(schemes=("splitfed", "hybrid"), topologies=star,
+                    cut_depths=(None, 1)),
+        SearchSpace(schemes=("splitfed", "hybrid"), topologies=star,
+                    link_bits=widths, wires=("packed_duplex",),
+                    cut_depths=(None, 1)),
+        SearchSpace(schemes=("fl", "sl"), topologies=star),
+    ]
+    return merge_points(*spaces)
+
+
+def assert_parity(result):
+    """Priced == metered == closed, exactly, for every trained point."""
+    for m in result.measured.values():
+        if not m.trained:
+            continue
+        if abs(m.gbits - m.priced_gbits) * 1e9 >= 1.0:
+            raise AssertionError(
+                f"{m.key}: priced {m.priced_gbits} Gbit != metered "
+                f"{m.gbits} Gbit — pricing and runner disagree")
+        if abs(m.measured_gbits - m.priced_measured_gbits) * 1e9 >= 1.0:
+            raise AssertionError(
+                f"{m.key}: priced wire bytes {m.priced_measured_gbits} != "
+                f"metered {m.measured_gbits}")
+        if abs(m.gbits - m.measured_gbits) * 1e9 >= 1.0:
+            raise AssertionError(
+                f"{m.key}: closed-form {m.gbits} Gbit != measured "
+                f"{m.measured_gbits} Gbit — the grid pairs every width "
+                f"with the wire that implements its charge")
+
+
+def assert_frontier_dominates(result):
+    """At >= 1 budget the frontier strictly beats every affordable pure
+    baseline (an unaffordable baseline contributes nothing — accuracy 0).
+    Returns the winning budgets for the record."""
+    base_keys = [m.key for m in result.measured.values()
+                 if m.trained and m.key.split("/")[0] in BASELINES
+                 and "/q32/dense/" in m.key
+                 and m.key.split("/")[1].startswith("star(")]
+    baselines = [result.measured[k] for k in base_keys]
+    if len(baselines) < len(BASELINES):
+        raise AssertionError(f"grid lost a pure baseline: {base_keys}")
+    budgets = sorted({m.gbits for m in result.measured.values()})
+    wins = []
+    for budget in budgets:
+        f = pareto.best_under_budget(result.frontier, budget)
+        b = pareto.best_under_budget(baselines, budget)
+        if f is not None and f.accuracy > (b.accuracy if b else 0.0):
+            wins.append({"budget_gbits": budget, "frontier": f.key,
+                         "frontier_acc": f.accuracy,
+                         "baseline": b.key if b else None,
+                         "baseline_acc": b.accuracy if b else 0.0})
+    if not wins:
+        raise AssertionError(
+            "the searched frontier never beats the pure baselines at any "
+            "budget — the search found nothing the comparison table "
+            "already had")
+    return wins
+
+
+def assert_pruning_sound(result):
+    """Every exhaustively-trained pruned point is weakly dominated by a
+    trained candidate; star-dominated points tie their sibling exactly."""
+    cands = result.candidates()
+    for m in result.measured.values():
+        if m.status == CANDIDATE or not m.trained:
+            continue
+        if not any(c.accuracy >= m.accuracy - 1e-12
+                   and c.gbits <= m.gbits + 1e-12 for c in cands):
+            raise AssertionError(
+                f"pruning discarded a frontier config: {m.key} "
+                f"(acc {m.accuracy}, {m.gbits} Gbit) is undominated")
+        if m.status == PRUNED_STAR:
+            sib = result.measured[m.stand_in]
+            if m.accuracy != sib.accuracy:
+                raise AssertionError(
+                    f"{m.key} trained to acc {m.accuracy} but its star "
+                    f"sibling {sib.key} reached {sib.accuracy} — the "
+                    f"32-bit hop-identity the prune rests on is broken")
+            if m.gbits <= sib.gbits:
+                raise AssertionError(
+                    f"{m.key} is not costlier than its star sibling")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI grid: tiny shapes, pruned points trained too")
+    ap.add_argument("--epochs", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default="BENCH_frontier.json",
+                    help="output path ('' disables)")
+    args = ap.parse_args(argv)
+    epochs = 2 if args.smoke else args.epochs
+    base_cfg = SMOKE_CFG if args.smoke else FULL_CFG
+
+    points = build_grid(args.smoke)
+    result = driver_lib.run_search(
+        points, base_cfg, epochs=epochs, batch_size=args.batch,
+        seed=args.seed, eval_n=256, train_pruned=args.smoke)
+
+    assert_parity(result)
+    wins = assert_frontier_dominates(result)
+    if args.smoke:
+        assert_pruning_sound(result)
+
+    print("\naccuracy-per-Gbit frontier (accounted == measured bits):")
+    for m in result.frontier:
+        print(f"  {m.key:42s} acc {m.accuracy:.3f}  {m.gbits:.5f} Gbit  "
+              f"({m.accuracy / max(m.gbits, 1e-9):8.1f} acc/Gbit)")
+    w = wins[0]
+    print(f"frontier beats the pure baselines at "
+          f"{w['budget_gbits']:.5f} Gbit: {w['frontier']} acc "
+          f"{w['frontier_acc']:.3f} vs {w['baseline_acc']:.3f}")
+
+    record = dict(result.record(), smoke=args.smoke, epochs=epochs,
+                  batch=args.batch, domination_wins=wins,
+                  pruning_verified=bool(args.smoke))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(record, f, indent=2, sort_keys=True)
+        print(f"# wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

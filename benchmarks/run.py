@@ -30,6 +30,13 @@
 #                                in-process parity, SIGKILL+restart resume
 #                                identity, serving goodput recovery, and
 #                                adaptive vs fixed fault policies
+#   frontier  frontier_bench     auto-placement search: accuracy-per-Gbit
+#                                Pareto frontier over (scheme, cut depth,
+#                                topology, width, wire) with exhaustively
+#                                verified ledger pruning (asserted: the
+#                                frontier beats the pure baselines at >= 1
+#                                bandwidth budget, closed == measured bits
+#                                on every trained point)
 #   roofline  roofline_report    dry-run three-term roofline rows
 from __future__ import annotations
 
@@ -42,7 +49,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma list: table1,curves,kernels,wire,topology,"
-                         "links,serve,throughput,chaos,cluster,roofline")
+                         "links,serve,throughput,chaos,cluster,frontier,"
+                         "roofline")
     ap.add_argument("--epochs", type=int, default=3,
                     help="epochs for the accuracy curves (CPU-sized)")
     args = ap.parse_args()
@@ -93,6 +101,11 @@ def main() -> None:
     if want("cluster"):
         from benchmarks import cluster_bench
         cluster_bench.main(["--smoke", "--json", ""])
+        sys.stdout.flush()
+    if want("frontier"):
+        # keeps its JSON: CI's BENCH_*.json artifact step uploads it
+        from benchmarks import frontier_bench
+        frontier_bench.main(["--smoke", "--json", "BENCH_frontier.json"])
         sys.stdout.flush()
     if want("roofline"):
         from benchmarks import roofline_report

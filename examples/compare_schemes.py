@@ -1,14 +1,16 @@
 """Reproduce the paper's comparison (Figures 5/7, reduced scale): every
-scheme in the unified registry — INL vs federated vs split learning —
-accuracy per epoch and per Gbit exchanged, on one shared runner and one
-fused cut-layer substrate.
+scheme in the unified registry — INL vs federated vs split learning vs
+the hybrid schemes — accuracy per epoch and per Gbit exchanged, on one
+shared runner and one fused cut-layer substrate.
 
     PYTHONPATH=src python examples/compare_schemes.py [--epochs 4]
 
---topology chain re-routes the INL exchange over a J-hop line (each relay
+--topology chain re-routes the exchange over a J-hop line (each relay
 fuses the upstream latents with its own view — the follow-up paper's
-multi-hop setting) and prints the per-edge bandwidth ledger; FL/SL have no
-multi-hop reading, so the comparison then runs INL alone.
+multi-hop setting) and prints the per-edge bandwidth ledger.  Schemes
+whose exchange has no multi-hop reading (FL's weight broadcast, SL's
+single client->server boundary) are skipped with a one-line notice; pass
+--strict to make a skip fail the run instead.
 """
 import argparse
 import pathlib
@@ -28,19 +30,14 @@ def main():
     ap.add_argument("--schemes", default="",
                     help="comma list (default: every registered scheme)")
     ap.add_argument("--topology", default="star", choices=["star", "chain"],
-                    help="INL inference graph (chain restricts the run to "
-                         "INL — FL/SL are star-only by construction)")
+                    help="exchange graph (star-only schemes are skipped "
+                         "on chain with a notice)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit nonzero if any requested scheme had to be "
+                         "skipped (star-only scheme on a multi-hop graph)")
     args = ap.parse_args()
 
-    topo = None
-    if args.topology == "chain":
-        topo = topology_lib.chain(CFG.num_clients)
-        if args.schemes and args.schemes != "inl":
-            ap.error("--topology chain runs INL only (FL/SL have no "
-                     "multi-hop reading)")
-        names = ("inl",)
-        print(f"multi-hop INL: {topo.describe()}")
-    elif args.schemes:
+    if args.schemes:
         names = tuple(s.strip() for s in args.schemes.split(",") if s.strip())
         unknown = set(names) - set(schemes.available())
         if unknown:
@@ -48,12 +45,27 @@ def main():
                      f"registered: {schemes.available()}")
     else:
         names = schemes.available()
+    topo = None
+    if args.topology == "chain":
+        topo = topology_lib.chain(CFG.num_clients)
+        print(f"multi-hop exchange: {topo.describe()}")
+
     views, labels = _data(args.experiment)
-    meter = bandwidth.BandwidthMeter()
-    results = schemes.runner.run_all(names, views, labels, CFG,
-                                     epochs=args.epochs, batch_size=BATCH,
-                                     topology=topo,
-                                     **({"meter": meter} if topo else {}))
+    results, meters, skipped = {}, {}, []
+    for name in names:
+        meter = bandwidth.BandwidthMeter()
+        try:
+            results[name] = schemes.runner.run_scheme(
+                name, views, labels, CFG, epochs=args.epochs,
+                batch_size=BATCH, topology=topo,
+                **({"meter": meter} if topo else {}))
+            meters[name] = meter
+        except ValueError:
+            # topology.require_star: the scheme's exchange has no
+            # multi-hop reading — skip it, one line, no traceback
+            print(f"scheme {name!r} requires a star topology — skipped "
+                  f"on {args.topology}")
+            skipped.append(name)
 
     print(f"\nExperiment {args.experiment} "
           f"(paper fig {5 if args.experiment == 1 else 7}):")
@@ -72,11 +84,17 @@ def main():
               f"(acc {pt.accuracy:.3f}, {pt.gbits:.4f} Gbit)")
     if topo is not None:
         print("\nper-edge ledger (closed-form Gbit | measured Gbit):")
-        for edge in (e.key for e in topo.topo_edges()):
-            print(f"  {edge:12s}: {meter.edge_bits[edge] / 1e9:.4f} | "
-                  f"{meter.edge_measured_bytes[edge] * 8 / 1e9:.4f}")
+        for s in results:
+            meter = meters[s]
+            for edge in (e.key for e in topo.topo_edges()):
+                print(f"  {s:8s} {edge:12s}: "
+                      f"{meter.edge_bits[edge] / 1e9:.4f} | "
+                      f"{meter.edge_measured_bytes[edge] * 8 / 1e9:.4f}")
     print("\npaper's qualitative claim: INL >> SL > FL per bit; "
           "INL >= SL > FL in accuracy.")
+    if skipped and args.strict:
+        print(f"--strict: {len(skipped)} scheme(s) skipped: {skipped}")
+        sys.exit(1)
 
 
 if __name__ == "__main__":

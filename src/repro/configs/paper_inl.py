@@ -51,6 +51,15 @@ class PaperExperimentConfig:
     # bandwidth models, the fusion center fuses whatever arrived within
     # the deadline and masks the rest (fuse-what-arrived semantics).
     fusion_deadline_ms: object = None
+    # hybrid-scheme knobs (core/schemes/splitfed.py, hybrid.py).  cut_depth
+    # truncates the CLIENT-side conv trunk to its first k blocks (None keeps
+    # the full trunk — the classic SL boundary right before the bottleneck
+    # head); hybrid_fl_clients names the clients that participate FL-style
+    # (full local model + weight exchange) instead of shipping cut-layer
+    # activations.  Both are ignored by the pure inl/fl/sl schemes, so the
+    # defaults keep every existing trajectory bit-identical.
+    cut_depth: object = None
+    hybrid_fl_clients: Tuple[int, ...] = (0,)
     # experiment 1 partitions data per scheme; experiment 2 shares it
     experiment: int = 1
     dataset_size: int = 50_000

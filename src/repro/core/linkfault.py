@@ -392,7 +392,11 @@ def round_fault_charges(rng, scheme_name: str, topo, cfg, batch_size: int,
     when an attempt succeeded.  Draws replay the SAME folded keys the
     in-graph masks consume, so the meter and the execution agree round by
     round."""
-    if scheme_name == "inl":
+    if scheme_name in ("inl", "splitfed", "hybrid"):
+        # the per-edge payload-fraction rule covers the hybrids too: a
+        # dead route loses that client's WHOLE share of the edge's round
+        # — its activations leave the fusion and its weight exchange (the
+        # FedAvg upload/broadcast, the hybrid sync) never completes
         mask = jax.device_get(round_delivery_mask(
             rng, topo, cfg, batch_size, train=True))
         dlv = {}

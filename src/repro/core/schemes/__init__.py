@@ -79,4 +79,5 @@ def available():
 
 
 # importing the built-in schemes self-registers them
-from repro.core.schemes import fl, inl, runner, sl  # noqa: E402,F401
+from repro.core.schemes import fl, hybrid, inl, runner, sl, \
+    splitfed  # noqa: E402,F401

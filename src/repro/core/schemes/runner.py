@@ -170,6 +170,14 @@ def _meter_overheads(meter, scheme, cfg, state):
     meter.add_delivered(bits=bits, nbytes=nbytes)
 
 
+def rounds_per_epoch(scheme, cfg, n: int, batch_size: int) -> int:
+    """Rounds one epoch of an n-sample set runs: full minibatches grouped
+    by the scheme's batches_per_round.  Public because the search
+    subsystem's closed-form pricing (repro/search/pricing.py) must charge
+    EXACTLY the rounds the runner will execute — one rule, two callers."""
+    return (n // batch_size) // scheme.batches_per_round(cfg)
+
+
 def run_scheme(name: str, views, labels, cfg, *, epochs: int,
                batch_size: int = 64, lr: float = 2e-3, seed: int = 0,
                eval_n: int = 512, dispatch: str = "scan", mesh=None,
@@ -243,7 +251,7 @@ def run_scheme(name: str, views, labels, cfg, *, epochs: int,
     bpr = scheme.batches_per_round(cfg)
     views_np, labels_np = np.asarray(views), np.asarray(labels)
     n = labels_np.shape[0]
-    rounds = (n // batch_size) // bpr          # K rounds per epoch
+    rounds = rounds_per_epoch(scheme, cfg, n, batch_size)
 
     xs_shardings = None
     if mesh is not None:
@@ -338,7 +346,7 @@ def _run_per_round(scheme, views, labels, cfg, *, epochs, batch_size, lr,
                              topology=topology)
     topo_full = topology_lib.resolve(topology, cfg)
     faulty = linkfault.active(topo_full, cfg, train=True)
-    rounds = (labels.shape[0] // batch_size) // bpr
+    rounds = rounds_per_epoch(scheme, cfg, labels.shape[0], batch_size)
     rng = jax.random.PRNGKey(seed + 1)
     if start_ep and rounds:
         # replay the completed epochs' split chain so the next subkey (and
@@ -410,7 +418,7 @@ def _run_transport(scheme, views, labels, cfg, *, epochs, batch_size, lr,
         # the (star) edges so per-edge attempts re-offer their own share
         b, nb = charges[None]
         charges = {e.key: (b / len(edges), nb / len(edges)) for e in edges}
-    rounds = (labels.shape[0] // batch_size) // bpr
+    rounds = rounds_per_epoch(scheme, cfg, labels.shape[0], batch_size)
 
     start_ep = 0
     tsnap = None

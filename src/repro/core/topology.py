@@ -58,6 +58,7 @@ uses — and for `star(J)` both sum to the existing Table-I totals exactly
 from __future__ import annotations
 
 import math
+import re
 from dataclasses import dataclass, field, replace
 from typing import Dict, Optional, Sequence, Tuple
 
@@ -331,6 +332,55 @@ def tree(branching: int, depth: int, *, link_bits=None) -> Topology:
     grow(FUSE, 1)
     nodes.append(Node(FUSE, "fuse"))
     return Topology(tuple(nodes), tuple(edges))
+
+
+# ---------------------------------------------------------------------------
+# Search-facing enumeration (repro/search): named constructor instances
+# ---------------------------------------------------------------------------
+
+_NAME_RE = re.compile(r"^(star|chain|tree)\((\d+)(?:,\s*(\d+))?\)$")
+
+
+def from_name(name: str) -> Topology:
+    """Parse a constructor spec — "star(5)", "chain(4)", "tree(2,2)" — into
+    the Topology it names.  The inverse of the names `named_topologies`
+    emits; the search subsystem's config points carry these strings so a
+    whole search space stays hashable/JSON-able."""
+    m = _NAME_RE.match(name.replace(" ", ""))
+    if not m:
+        raise ValueError(f"unparseable topology spec {name!r}; expected "
+                         f"star(J), chain(J) or tree(branching,depth)")
+    kind, a, b = m.group(1), int(m.group(2)), m.group(3)
+    if kind == "tree":
+        if b is None:
+            raise ValueError(f"tree spec needs two arguments, got {name!r}")
+        return tree(a, int(b))
+    if b is not None:
+        raise ValueError(f"{kind} spec takes one argument, got {name!r}")
+    return star(a) if kind == "star" else chain(a)
+
+
+def named_topologies(J: int, *, families=("star", "chain", "tree")):
+    """Every named constructor instance with exactly J view nodes, keyed by
+    its `from_name` spec: "star(J)", "chain(J)" (J >= 2 — chain(1) IS
+    star(1)), and every complete "tree(b,d)" whose level sum b + b^2 + ...
+    + b^d == J with d >= 2 (depth-1 trees are stars, branching-1 trees are
+    chains — the degenerate spellings collapse into the canonical family,
+    so the search space never trains one graph twice)."""
+    out = {}
+    if "star" in families:
+        out[f"star({J})"] = star(J)
+    if "chain" in families and J >= 2:
+        out[f"chain({J})"] = chain(J)
+    if "tree" in families:
+        for b in range(2, J):
+            views, d = 0, 0
+            while views < J:
+                d += 1
+                views += b ** d
+            if views == J and d >= 2:
+                out[f"tree({b},{d})"] = tree(b, d)
+    return out
 
 
 # ---------------------------------------------------------------------------

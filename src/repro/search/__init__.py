@@ -1,0 +1,18 @@
+"""Auto-placement search: the paper's three-way comparison as a DESIGN
+SPACE (Neurosurgeon / Auto-Split mold).
+
+The registry (core/schemes), first-class topologies (core/topology) and
+exact per-edge ledgers already price any (scheme, cut depth, topology,
+link width, wire) configuration in closed form — so instead of tabulating
+three fixed schemes, this package enumerates the space (`space.py`),
+prices every point WITHOUT training (`pricing.py` — exact, and the basis
+of two provably-sound prunes), trains the surviving candidates through
+`runner.run_scheme` (`driver.py`), and extracts the accuracy-per-Gbit
+Pareto frontier (`pareto.py`).  `benchmarks/frontier_bench.py` turns the
+whole pipeline into a CI-asserted artifact (BENCH_frontier.json).
+"""
+from repro.search.pareto import dominates, pareto_frontier  # noqa: F401
+from repro.search.pricing import PricedPoint, price  # noqa: F401
+from repro.search.space import ConfigPoint, SearchSpace  # noqa: F401
+from repro.search.driver import MeasuredPoint, SearchResult, \
+    run_search  # noqa: F401

@@ -1,0 +1,226 @@
+"""The hybrid schemes (core/schemes/splitfed.py, hybrid.py): the same
+parity gauntlet every registry plugin passes — loss improves, predict is
+a distribution, closed-form bits == edge ledger == metered bytes, perfect
+links are bitwise invisible, checkpoints resume bit-identically — plus
+the knobs the pure schemes don't have (cut_depth, hybrid_fl_clients).
+
+The lossy tests read `linkfault.forced_erasure(0.3)` so the CI
+forced-erasure leg (REPRO_FORCE_ERASURE=0.3) genuinely parameterises
+them; the bitwise-identity tests use explicit perfect links and are
+immune by construction.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _schemes_common import BATCH, CFG, ROUNDS, fixture_data, trajectory
+
+from repro.core import bandwidth, linkfault, paper_model, schemes
+from repro.core import topology as T
+from repro.core.schemes import splitfed as splitfed_lib
+from repro.core.schemes import hybrid as hybrid_lib
+
+HYBRIDS = ("splitfed", "hybrid")
+PERFECT = linkfault.LinkModel()
+LOSSY = linkfault.LinkModel(erasure=linkfault.forced_erasure(0.3))
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registered():
+    names = schemes.available()
+    for name in HYBRIDS:
+        assert name in names
+    assert names[:3] == ("inl", "sl", "fl") or set(names[:3]) == \
+        {"inl", "sl", "fl"}                      # paper schemes lead
+
+
+def test_unknown_scheme_error_lists_registered():
+    """The KeyError is a catalogue, not a shrug: it must name every
+    registered scheme so the caller can fix the spelling in place."""
+    with pytest.raises(KeyError) as ei:
+        schemes.get("splitfedv2")
+    msg = str(ei.value)
+    for name in ("inl", "fl", "sl") + HYBRIDS:
+        assert f"'{name}'" in msg, msg
+
+
+# ---------------------------------------------------------------------------
+# training contract (shared cached trajectories)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", HYBRIDS)
+def test_loss_improves(name):
+    traj = trajectory(name)
+    assert all(np.isfinite(traj["losses"]))
+    assert traj["losses"][-1] < traj["losses"][0]
+
+
+@pytest.mark.parametrize("name", HYBRIDS)
+def test_predict_is_distribution(name):
+    views, labels = fixture_data()
+    state = trajectory(name)["state"]
+    probs = schemes.get(name).predict(state, views[:, :BATCH])
+    assert probs.shape == (BATCH, CFG.num_classes)
+    np.testing.assert_allclose(np.asarray(probs).sum(-1), 1.0, rtol=1e-5)
+    assert (np.asarray(probs) >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# bandwidth: closed form == per-edge ledger == metered == measured bytes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", HYBRIDS)
+def test_ledger_parity(name):
+    views, labels = fixture_data()
+    scheme = schemes.get(name)
+    state = scheme.init(CFG, jax.random.PRNGKey(0))
+    closed = scheme.bits_per_round(CFG, state, BATCH)
+    ledger = scheme.edge_ledger(CFG, state, BATCH)
+    assert abs(sum(b for b, _ in ledger.values()) - closed) < 1.0
+    nbytes = scheme.wire_bytes_per_round(CFG, state, BATCH)
+    assert abs(sum(n for _, n in ledger.values()) - nbytes) < 1.0
+    # fp32 dense at q=32: the wire ships exactly what the formula charges
+    assert abs(nbytes * 8 - closed) < 1.0
+
+    meter = bandwidth.BandwidthMeter()
+    curve = schemes.runner.run_scheme(
+        name, views, labels, CFG, epochs=1, batch_size=BATCH,
+        eval_n=64, meter=meter)
+    rounds = schemes.runner.rounds_per_epoch(
+        scheme, CFG, CFG.dataset_size, BATCH)
+    assert abs(meter.total_bits - rounds * closed) < 1.0
+    assert abs(meter.measured_bytes - rounds * nbytes) < 1.0
+    assert curve[-1].gbits == pytest.approx(meter.total_bits / 1e9)
+
+
+# ---------------------------------------------------------------------------
+# cut_depth
+# ---------------------------------------------------------------------------
+
+def test_cut_depth_truncates_client_trunk():
+    deep = dataclasses.replace(CFG, conv_channels=(4, 8))
+    shallow = dataclasses.replace(deep, cut_depth=1)
+    assert splitfed_lib.client_cfg(shallow).conv_channels == (4,)
+    assert splitfed_lib.client_cfg(deep).conv_channels == (4, 8)
+    # a shallower cut is NOT automatically cheaper: the truncated trunk
+    # pools less, so the flatten feeding the dense cut head grows — the
+    # knob genuinely moves the weight leg of the exchange, and the search
+    # prices it rather than assuming a direction
+    n_shallow = paper_model.encoder_param_count(
+        splitfed_lib.client_cfg(shallow))
+    n_deep = paper_model.encoder_param_count(splitfed_lib.client_cfg(deep))
+    assert n_shallow != n_deep
+    scheme = schemes.get("splitfed")
+    s_shallow = scheme.init(shallow, jax.random.PRNGKey(0))
+    s_deep = scheme.init(deep, jax.random.PRNGKey(0))
+    b_shallow = scheme.bits_per_round(shallow, s_shallow, BATCH)
+    b_deep = scheme.bits_per_round(deep, s_deep, BATCH)
+    assert b_shallow != b_deep
+    # and the closed form tracks the actual truncated-client param count
+    assert (b_shallow - b_deep) == pytest.approx(
+        2.0 * 32.0 * shallow.num_clients * (n_shallow - n_deep))
+
+
+@pytest.mark.parametrize("depth", (0, 3, -1))
+def test_cut_depth_out_of_range(depth):
+    bad = dataclasses.replace(CFG, conv_channels=(4, 8), cut_depth=depth)
+    with pytest.raises(ValueError, match="cut_depth"):
+        splitfed_lib.client_cfg(bad)
+
+
+# ---------------------------------------------------------------------------
+# hybrid_fl_clients
+# ---------------------------------------------------------------------------
+
+def test_hybrid_fl_clients_validation():
+    all_fl = dataclasses.replace(
+        CFG, hybrid_fl_clients=tuple(range(CFG.num_clients)))
+    with pytest.raises(ValueError, match="cut"):
+        hybrid_lib.cut_mask(all_fl)
+    with pytest.raises(ValueError, match="hybrid_fl_clients"):
+        hybrid_lib.cut_mask(
+            dataclasses.replace(CFG, hybrid_fl_clients=(CFG.num_clients,)))
+    mask = hybrid_lib.cut_mask(CFG)              # default: client 0 is FL
+    assert mask.shape == (CFG.num_clients,)
+    assert not mask[0] and mask[1:].all()
+
+
+def test_hybrid_mix_changes_ledger():
+    """Moving a client from cut-mode to weight-mode swaps activation
+    traffic for weight traffic on its edge — the ledgers must move."""
+    scheme = schemes.get("hybrid")
+    one_fl = CFG
+    two_fl = dataclasses.replace(CFG, hybrid_fl_clients=(0, 1))
+    s1 = scheme.init(one_fl, jax.random.PRNGKey(0))
+    s2 = scheme.init(two_fl, jax.random.PRNGKey(0))
+    l1 = scheme.edge_ledger(one_fl, s1, BATCH)
+    l2 = scheme.edge_ledger(two_fl, s2, BATCH)
+    assert l1.keys() == l2.keys()
+    assert l1 != l2
+
+
+# ---------------------------------------------------------------------------
+# linkfault: perfect links invisible, lossy links degrade (not crash)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", HYBRIDS)
+def test_perfect_star_bitwise_identity(name):
+    want = trajectory(name)
+    views, labels = fixture_data()
+    scheme = schemes.get(name)
+    perfect = linkfault.with_links(T.star(CFG.num_clients), PERFECT)
+    state = scheme.init(CFG, jax.random.PRNGKey(0))
+    round_fn = scheme.make_round(CFG, topology=perfect)
+    v = jnp.broadcast_to(views[None, :, :BATCH],
+                         (1,) + views[:, :BATCH].shape)
+    lab = jnp.broadcast_to(labels[None, :BATCH], (1, BATCH))
+    losses = []
+    for i in range(ROUNDS):
+        state, metrics = round_fn(state, v, lab, jax.random.PRNGKey(i))
+        losses.append(float(metrics["loss"]))
+    np.testing.assert_array_equal(np.asarray(losses),
+                                  np.asarray(want["losses"]),
+                                  err_msg=f"{name}: perfect links moved "
+                                          f"the losses")
+    for g, w in zip(jax.tree.leaves(state),
+                    jax.tree.leaves(want["state"])):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+@pytest.mark.parametrize("name", HYBRIDS)
+def test_lossy_training_degrades_not_crashes(name):
+    views, labels = fixture_data()
+    lossy = linkfault.with_links(T.star(CFG.num_clients), LOSSY)
+    meter = bandwidth.BandwidthMeter()
+    curve = schemes.runner.run_scheme(
+        name, views, labels, CFG, epochs=1, batch_size=BATCH,
+        eval_n=64, topology=lossy, meter=meter)
+    pt = curve[-1]
+    assert np.isfinite(pt.accuracy)
+    # the delivered ledger records the erasures the offered one ignores
+    assert pt.delivered_gbits < pt.gbits
+    assert meter.delivered_bits < meter.total_bits
+
+
+# ---------------------------------------------------------------------------
+# checkpoint resume
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", HYBRIDS)
+def test_checkpoint_resume_bitwise(name, tmp_path):
+    views, labels = fixture_data()
+    kw = dict(epochs=2, batch_size=BATCH, eval_n=64)
+    full = schemes.runner.run_scheme(name, views, labels, CFG, **kw)
+    ck = tmp_path / name
+    schemes.runner.run_scheme(name, views, labels, CFG, epochs=1,
+                              batch_size=BATCH, eval_n=64,
+                              ckpt_dir=str(ck))
+    res = schemes.runner.run_scheme(name, views, labels, CFG, **kw,
+                                    ckpt_dir=str(ck), resume=True)
+    assert [p.accuracy for p in res] == [p.accuracy for p in full]
+    assert [p.gbits for p in res] == [p.gbits for p in full]

@@ -24,7 +24,8 @@ from repro.core import schemes
 GOLDEN_PATH = pathlib.Path(__file__).parent / "golden" / "scheme_metrics.json"
 RTOL = 1e-4
 
-CASES = [("inl", False), ("fl", False), ("sl", False), ("inl", True)]
+CASES = [("inl", False), ("fl", False), ("sl", False), ("inl", True),
+         ("splitfed", False), ("hybrid", False)]
 
 
 def _key(name, learned_prior):

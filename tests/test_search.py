@@ -1,0 +1,211 @@
+"""The auto-placement search subsystem (repro/search): space validity,
+closed-form pricing parity, the two sound pruning rules, and Pareto
+extraction — unit-level here; frontier_bench.py --smoke re-verifies the
+pruning exhaustively (trains the pruned points too) on every CI leg.
+"""
+import dataclasses
+
+import pytest
+from _schemes_common import BATCH, CFG, fixture_data
+
+from repro.core import bandwidth, schemes
+from repro.core import topology as topology_lib
+from repro.search import (ConfigPoint, SearchSpace, dominates,
+                          pareto_frontier, price, run_search)
+from repro.search.pareto import best_under_budget
+from repro.search.pricing import CANDIDATE, PRUNED_STAR, PRUNED_WIRE
+from repro.search.space import merge_points
+
+
+# ---------------------------------------------------------------------------
+# topology name parsing (core/topology.from_name / named_topologies)
+# ---------------------------------------------------------------------------
+
+def test_from_name_round_trips():
+    assert topology_lib.from_name("star(5)").num_views() == 5
+    assert topology_lib.from_name("chain(3)").num_views() == 3
+    assert topology_lib.from_name("tree(2,2)").num_views() == 6
+
+
+@pytest.mark.parametrize("bad", ["ring(4)", "star", "star(0)", "tree(2)",
+                                 "chain(2,2)", "star(2,3)", ""])
+def test_from_name_rejects(bad):
+    with pytest.raises(ValueError):
+        topology_lib.from_name(bad)
+
+
+def test_named_topologies():
+    topos = topology_lib.named_topologies(6)
+    assert "star(6)" in topos and "chain(6)" in topos
+    assert "tree(2,2)" in topos               # 2 + 4 = 6 views, two levels
+    assert list(topology_lib.named_topologies(1)) == ["star(1)"]
+    for name, topo in topology_lib.named_topologies(9).items():
+        assert topo.num_views() == 9
+        assert topology_lib.from_name(name).num_views() == 9
+
+
+# ---------------------------------------------------------------------------
+# search space validity
+# ---------------------------------------------------------------------------
+
+def test_space_structural_rejections():
+    space = SearchSpace(schemes=("inl", "fl", "sl"),
+                        topologies=("star(3)", "chain(3)"),
+                        link_bits=(4, 32), wires=("dense", "packed"))
+    keys = {p.key for p in space.points()}
+    assert "inl/chain(3)/q4/packed/dfull" in keys
+    assert "inl/star(3)/q32/packed/dfull" not in keys   # packed needs <= 16
+    assert not any(k.startswith("fl/chain") or k.startswith("sl/chain")
+                   for k in keys)                       # star-only schemes
+    assert [k for k in keys if k.startswith("fl/")] == \
+        ["fl/star(3)/q32/dense/dfull"]                  # fp32 weights only
+    assert not any(k.startswith("sl/") and "/q4/" in k for k in keys)
+    reasons = {p.key: r for p, r in space.excluded()}
+    assert "star topology" in reasons["fl/chain(3)/q32/dense/dfull"]
+    assert "fp32" in reasons["fl/star(3)/q4/dense/dfull"]
+
+
+def test_cut_depth_only_for_hybrids():
+    space = SearchSpace(schemes=("inl", "splitfed"), topologies=("star(3)",),
+                        cut_depths=(None, 1))
+    keys = {p.key for p in space.points()}
+    assert keys == {"inl/star(3)/q32/dense/dfull",
+                    "splitfed/star(3)/q32/dense/dfull",
+                    "splitfed/star(3)/q32/dense/d1"}
+
+
+def test_resolve_adapts_clients_and_noise():
+    p = ConfigPoint("inl", "tree(2,2)", link_bits=8, wire="packed")
+    cfg, topo = p.resolve(CFG)
+    assert cfg.num_clients == 6 and topo is not None
+    assert cfg.noise_stds == tuple(CFG.noise_stds[j % len(CFG.noise_stds)]
+                                   for j in range(6))
+    assert cfg.link_bits == 8
+    star = ConfigPoint("inl", f"star({CFG.num_clients})")
+    cfg2, topo2 = star.resolve(CFG)
+    assert topo2 is None                     # default star = legacy path
+    assert cfg2.noise_stds == CFG.noise_stds
+
+
+# ---------------------------------------------------------------------------
+# pricing + pruning
+# ---------------------------------------------------------------------------
+
+def _price(points):
+    return price(points, CFG, batch_size=BATCH, train_n=CFG.dataset_size)
+
+
+def test_wire_equivalence_prunes_to_dense_rep():
+    priced = _price(SearchSpace(schemes=("inl",), topologies=("star(3)",),
+                                link_bits=(4,),
+                                wires=("dense", "packed")).points())
+    by = {pp.key: pp for pp in priced}
+    dense = by["inl/star(3)/q4/dense/dfull"]
+    packed = by["inl/star(3)/q4/packed/dfull"]
+    assert dense.status == CANDIDATE
+    assert packed.status == PRUNED_WIRE and packed.stand_in == dense.key
+    assert packed.round_bits == dense.round_bits   # width-only closed form
+    assert packed.round_nbytes < dense.round_nbytes
+
+
+def test_star_dominance_prunes_q32_graphs_only():
+    priced = _price(merge_points(
+        SearchSpace(schemes=("inl",), topologies=("star(3)", "chain(3)")),
+        SearchSpace(schemes=("inl",), topologies=("star(3)", "chain(3)"),
+                    link_bits=(4,), wires=("packed_duplex",))))
+    by = {pp.key: pp for pp in priced}
+    chain32 = by["inl/chain(3)/q32/dense/dfull"]
+    assert chain32.status == PRUNED_STAR
+    assert chain32.stand_in == "inl/star(3)/q32/dense/dfull"
+    assert chain32.round_bits > by[chain32.stand_in].round_bits
+    # narrow links re-quantize per hop — accuracy genuinely moves, so the
+    # graph point must train
+    assert by["inl/chain(3)/q4/packed_duplex/dfull"].status == CANDIDATE
+
+
+def test_no_star_sibling_no_prune():
+    priced = _price(SearchSpace(schemes=("inl",),
+                                topologies=("chain(3)",)).points())
+    assert priced[0].status == CANDIDATE     # nothing to stand in for it
+
+
+def test_pricing_matches_meter_exactly():
+    """Stage-1 price == the runner's metered ledgers, both sides sums of
+    the same integer-valued charges — equality, not isclose."""
+    pp = _price([ConfigPoint("inl", f"star({CFG.num_clients})")])[0]
+    views, labels = fixture_data()
+    meter = bandwidth.BandwidthMeter()
+    curve = schemes.runner.run_scheme(
+        "inl", views, labels, pp.cfg, epochs=1, batch_size=BATCH,
+        eval_n=64, meter=meter, topology=pp.topology, wire=pp.point.wire)
+    assert abs(meter.total_bits - pp.epoch_bits()) < 1.0
+    assert abs(meter.measured_bytes - pp.epoch_nbytes()) < 1.0
+    assert curve[-1].gbits == pytest.approx(pp.total_gbits(1))
+
+
+def test_rounds_per_epoch_rule_is_shared():
+    scheme = schemes.get("inl")
+    n = CFG.dataset_size
+    assert schemes.runner.rounds_per_epoch(scheme, CFG, n, BATCH) == \
+        (n // BATCH) // scheme.batches_per_round(CFG)
+    pp = _price([ConfigPoint("inl", f"star({CFG.num_clients})")])[0]
+    assert pp.rounds_per_epoch == \
+        schemes.runner.rounds_per_epoch(scheme, pp.cfg, n, BATCH)
+
+
+# ---------------------------------------------------------------------------
+# pareto
+# ---------------------------------------------------------------------------
+
+class P:
+    def __init__(self, key, accuracy, gbits):
+        self.key, self.accuracy, self.gbits = key, accuracy, gbits
+
+
+def test_dominates_weak_both_strict_one():
+    assert dominates(P("a", 0.9, 1.0), P("b", 0.8, 1.0))
+    assert dominates(P("a", 0.9, 0.5), P("b", 0.9, 1.0))
+    assert not dominates(P("a", 0.9, 1.0), P("b", 0.9, 1.0))   # exact tie
+    assert not dominates(P("a", 0.9, 2.0), P("b", 0.8, 1.0))   # trade-off
+
+
+def test_pareto_frontier_extraction():
+    pts = [P("cheap", 0.5, 0.1), P("mid", 0.8, 1.0), P("best", 0.9, 5.0),
+           P("dominated", 0.7, 2.0), P("dup-mid", 0.8, 1.0),
+           P("worse-same-cost", 0.6, 1.0)]
+    front = pareto_frontier(pts)
+    keys = [p.key for p in front]
+    assert keys == ["cheap", "mid", "dup-mid", "best"]
+    for f in front:
+        assert not any(dominates(q, f) for q in pts)
+
+
+def test_best_under_budget():
+    pts = [P("cheap", 0.5, 0.1), P("best", 0.9, 5.0)]
+    assert best_under_budget(pts, 1.0).key == "cheap"
+    assert best_under_budget(pts, 10.0).key == "best"
+    assert best_under_budget(pts, 0.01) is None
+
+
+# ---------------------------------------------------------------------------
+# driver end-to-end (two tiny trains)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_run_search_end_to_end():
+    base = dataclasses.replace(CFG, dataset_size=64)
+    result = run_search(
+        [ConfigPoint("inl", "star(3)"),
+         ConfigPoint("inl", "star(3)", link_bits=4, wire="packed_duplex"),
+         ConfigPoint("inl", "chain(3)")],
+        base, epochs=1, batch_size=BATCH, eval_n=32, train_pruned=False,
+        log=lambda *a: None)
+    assert len(result.candidates()) == 2
+    pruned = result.measured["inl/chain(3)/q32/dense/dfull"]
+    assert not pruned.trained                # inherited from its stand-in
+    assert pruned.accuracy == \
+        result.measured["inl/star(3)/q32/dense/dfull"].accuracy
+    assert pruned.gbits > result.measured[pruned.stand_in].gbits
+    assert result.frontier                    # non-empty, candidates only
+    for m in result.frontier:
+        assert m.status == CANDIDATE and m.trained

@@ -453,3 +453,68 @@ def test_sharded_chain_matches_single_device():
                                   jnp.asarray(labs4))
         np.testing.assert_allclose(got, want, rtol=1e-4,
                                    err_msg=f"{topo.describe()}")
+
+
+# ---------------------------------------------------------------------------
+# Degenerate constructors: one-view graphs and zero-size rejections
+# ---------------------------------------------------------------------------
+
+def _cfg1():
+    return dataclasses.replace(CFG, num_clients=1,
+                               noise_stds=(CFG.noise_stds[0],))
+
+
+def test_single_view_constructors_are_valid_graphs():
+    """star(1), chain(1) and tree(1,1) all collapse to the same one-edge
+    graph; the closed-form per-edge ledger still sums to the round total
+    and to INL's §III-C charge at J=1."""
+    cfg1 = _cfg1()
+    want = bandwidth.inl_epoch_bits(cfg1.d_bottleneck, BATCH, 1,
+                                    cfg1.link_bits)
+    for topo in (T.star(1), T.chain(1), T.tree(1, 1)):
+        assert topo.num_views() == 1
+        assert len(topo.topo_edges()) == 1
+        edges = T.round_edge_bits(topo, cfg1, BATCH)
+        assert sum(edges.values()) == T.round_bits(topo, cfg1, BATCH)
+        assert sum(edges.values()) == want
+    # chain(1) has no relay to speak of — it IS the default star
+    assert T.chain(1).is_default_star()
+    assert [e.key for e in T.chain(1).edges] == \
+        [e.key for e in T.star(1).edges]
+
+
+@pytest.mark.parametrize("k", (2, 3))
+def test_tree_branching_one_is_a_chain(k):
+    """tree(1,k) is a k-deep single-branch line: every hop carries the
+    accumulated payload, so edge charges grow linearly toward the fuse
+    and the ledger still sums exactly."""
+    topo = T.tree(1, k)
+    cfgk = dataclasses.replace(
+        CFG, num_clients=k,
+        noise_stds=tuple(CFG.noise_stds[j % len(CFG.noise_stds)]
+                         for j in range(k)))
+    assert topo.num_views() == k
+    edges = T.round_edge_bits(topo, cfgk, BATCH)
+    assert len(edges) == k
+    base = 2 * BATCH * cfgk.d_bottleneck * cfgk.link_bits
+    assert sorted(edges.values()) == [base * i for i in range(1, k + 1)]
+    assert sum(edges.values()) == T.round_bits(topo, cfgk, BATCH)
+
+
+def test_single_view_inl_round_and_ledger_agree():
+    cfg1 = _cfg1()
+    scheme = schemes.get("inl")
+    state = scheme.init(cfg1, jax.random.PRNGKey(0))
+    for topo in (T.star(1), T.tree(1, 1)):
+        assert scheme.bits_per_round(cfg1, state, BATCH, topology=topo) \
+            == T.round_bits(topo, cfg1, BATCH)
+
+
+@pytest.mark.parametrize("make", [lambda: T.star(0), lambda: T.chain(0),
+                                  lambda: T.tree(0, 1),
+                                  lambda: T.tree(2, 0)],
+                         ids=["star(0)", "chain(0)", "tree(0,1)",
+                              "tree(2,0)"])
+def test_zero_size_constructors_reject(make):
+    with pytest.raises(ValueError):
+        make()
